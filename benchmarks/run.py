@@ -1,0 +1,25 @@
+"""Benchmark driver: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import fig5, lm_step, roofline, table_iv, table_v
+    mods = {
+        "table_iv": table_iv,
+        "table_v": table_v,
+        "fig5": fig5,
+        "lm_step": lm_step,
+        "roofline": roofline,
+    }
+    only = sys.argv[1:] or list(mods)
+    print("name,us_per_call,derived")
+    for name in only:
+        for row in mods[name].run():
+            print(",".join(str(x) for x in row), flush=True)
+
+
+if __name__ == '__main__':
+    main()

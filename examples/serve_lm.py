@@ -1,0 +1,9 @@
+"""Batched serving demo: continuous-batching decode over a slot pool."""
+import sys
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+done = main(["--arch", "qwen3-8b", "--smoke", "--slots", "3",
+             "--requests", "5", "--max-new", "6"])
+assert len(done) == 5

@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb driver: named config variants per cell, measured with the
+FD cost model + full-compile memory check. Appends to reports/hillclimb.json.
+
+Usage: PYTHONPATH=src python reports/hillclimb.py <experiment> [...]
+"""
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+
+from repro.configs.registry import get_config
+from repro.launch import cells as C
+from repro.launch import costing
+from repro.launch.mesh import make_production_mesh
+
+EXPERIMENTS = {
+    # moonshot train: collective-bound (baseline l=226.6s)
+    "moonshot_shardmap": ("moonshot-v1-16b-a3b", "train_4k",
+                          dict(moe_impl="shardmap")),
+    "moonshot_shardmap_cap1": ("moonshot-v1-16b-a3b", "train_4k",
+                               dict(moe_impl="shardmap",
+                                    capacity_factor=1.0)),
+    "moonshot_noremat_sm": ("moonshot-v1-16b-a3b", "train_4k",
+                            dict(moe_impl="shardmap", remat=False)),
+    # gemma3 train: worst useful ratio 0.131, memory-bound (m=21.4s)
+    "gemma3_chunked": ("gemma3-4b", "train_4k",
+                       dict(local_attn_chunked=True)),
+    "gemma3_chunked_noremat": ("gemma3-4b", "train_4k",
+                               dict(local_attn_chunked=True, remat=False)),
+    "gemma3_chunked_losschunks": ("gemma3-4b", "train_4k",
+                                  dict(local_attn_chunked=True,
+                                       loss_chunks=32)),
+    # mistral train: representative dense; collective-bound (l=35.0s)
+    "mistral_noremat": ("mistral-nemo-12b", "train_4k", dict(remat=False)),
+    "mistral_nosp": ("mistral-nemo-12b", "train_4k",
+                     dict(seq_parallel_residual=False)),
+    "mistral_noremat_nosp": ("mistral-nemo-12b", "train_4k",
+                             dict(remat=False, seq_parallel_residual=False)),
+    "mistral_mb32": ("mistral-nemo-12b", "train_4k",
+                     dict(microbatch_seqs=32)),
+    "mistral_noremat_mb32": ("mistral-nemo-12b", "train_4k",
+                             dict(remat=False, microbatch_seqs=32)),
+    "mistral_nosp_mb32": ("mistral-nemo-12b", "train_4k",
+                          dict(seq_parallel_residual=False,
+                               microbatch_seqs=32)),
+    "gemma3_chunked_nosp": ("gemma3-4b", "train_4k",
+                            dict(local_attn_chunked=True,
+                                 seq_parallel_residual=False)),
+    # chameleon train (4th cell, beyond the required three): collective 97s
+    "chameleon_nosp": ("chameleon-34b", "train_4k",
+                       dict(seq_parallel_residual=False)),
+    "chameleon_nosp_mb32": ("chameleon-34b", "train_4k",
+                            dict(seq_parallel_residual=False,
+                                 microbatch_seqs=32)),
+    "moonshot_sm_nosp": ("moonshot-v1-16b-a3b", "train_4k",
+                         dict(moe_impl="shardmap",
+                              seq_parallel_residual=False)),
+    "moonshot_sm_nosp_mb32": ("moonshot-v1-16b-a3b", "train_4k",
+                              dict(moe_impl="shardmap",
+                                   seq_parallel_residual=False,
+                                   microbatch_seqs=32)),
+    "gemma3_chunked_mb32": ("gemma3-4b", "train_4k",
+                            dict(local_attn_chunked=True,
+                                 microbatch_seqs=32)),
+    "mistral_nosp_mb32_dots": ("mistral-nemo-12b", "train_4k",
+                               dict(seq_parallel_residual=False,
+                                    microbatch_seqs=32,
+                                    remat_policy="dots")),
+}
+
+
+def run_one(name):
+    arch, shape, over = EXPERIMENTS[name]
+    cfg = dataclasses.replace(get_config(arch), **over)
+    mesh = make_production_mesh()
+    rec = {"experiment": name, "arch": arch, "shape": shape, "config": over}
+    t0 = time.time()
+    try:
+        cell = C.build_cell(arch, shape, mesh, cfg_override=cfg)
+        compiled = C.lower_cell(cell, mesh).compile()
+        mem = compiled.memory_analysis()
+        live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        rec["live_gib"] = round(live / 2**30, 2)
+        rec["fits_16gb"] = bool(live <= 16 * 2**30)
+        del compiled, cell
+        cr = costing.cost_model(arch, shape, mesh, cfg_override=cfg)
+        rec["roofline"] = {
+            "compute_s": cr.compute_s, "memory_s": cr.memory_s,
+            "collective_s": cr.collective_s, "dominant": cr.dominant,
+            "useful_ratio": cr.useful_ratio,
+            "counts": cr.counts,
+        }
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+    rec["wall_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main():
+    names = sys.argv[1:] or list(EXPERIMENTS)
+    path = "reports/hillclimb.json"
+    results = []
+    if os.path.exists(path):
+        results = json.load(open(path))
+    done = {r["experiment"] for r in results}
+    for name in names:
+        if name in done:
+            print(f"skip {name} (done)")
+            continue
+        rec = run_one(name)
+        results.append(rec)
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"{name}: c/m/l={r['compute_s']:.2f}/{r['memory_s']:.2f}/"
+                  f"{r['collective_s']:.2f}s dom={r['dominant']} "
+                  f"useful={r['useful_ratio']:.3f} live={rec['live_gib']}GiB",
+                  flush=True)
+        else:
+            print(f"{name}: ERROR {rec['error'][:150]}", flush=True)
+        json.dump(results, open(path, "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""JGraph-TPU: light-weight staged-translation framework (graph + LM)."""
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+from .base import ArchConfig, ShapeConfig, SHAPES, cell_is_runnable
+from .registry import ARCHS, get_config, input_specs, smoke_config
+
+__all__ = ["ArchConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_config",
+           "input_specs", "smoke_config", "cell_is_runnable"]

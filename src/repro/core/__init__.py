@@ -1,0 +1,10 @@
+# The paper's primary contribution: a graph DSL (dsl.py, operators.py),
+# a light-weight translator (translator.py) with a runtime scheduler
+# (scheduler.py) and communication manager (comm.py), over CSR/ELL graph
+# structures (graph.py) with host-side preprocessing (preprocess.py) and an
+# algorithm library (algorithms.py).
+from . import algorithms, comm, dsl, graph, operators, preprocess, scheduler
+from .translator import translate
+
+__all__ = ["algorithms", "comm", "dsl", "graph", "operators", "preprocess",
+           "scheduler", "translate"]

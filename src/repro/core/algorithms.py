@@ -1,0 +1,132 @@
+"""Algorithm layer (paper's coarse-grained encapsulation):
+``BFS(graph, input, pipelineNum, ...)``-style one-call entry points.
+
+Every algorithm is *built from the DSL* (not hand-coded loops), so the
+translator/scheduler/comm path is exercised end-to-end — this is the paper's
+Algorithm 1 flow: Read → Layout → Transport → schedule → while-loop.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dsl
+from .comm import CommManager
+from .graph import Graph
+from .scheduler import ScheduleConfig
+from .translator import CompiledGraphProgram, translate
+
+INT_MAX = 2**30
+
+
+def _schedule(pipelines: int, pes: int, backend: str) -> ScheduleConfig:
+    return ScheduleConfig(pipelines=pipelines, pes=pes, backend=backend)
+
+
+def bfs(g: Graph, root: int = 0, *, pipelines: int = 8, pes: int = 1,
+        backend: str = "auto", comm: CommManager | None = None):
+    """Paper Algorithm 1. Returns (levels (V,), iterations)."""
+    prog = translate(dsl.bfs_program(INT_MAX), g,
+                     _schedule(pipelines, pes, backend), comm)
+    levels, iters = prog.run(roots=root)
+    return levels, iters, prog.report
+
+
+def sssp(g: Graph, root: int = 0, *, pipelines: int = 8, pes: int = 1,
+         backend: str = "auto", comm: CommManager | None = None):
+    prog = translate(dsl.sssp_program(), g,
+                     _schedule(pipelines, pes, backend), comm)
+    dist, iters = prog.run(roots=root)
+    return dist, iters, prog.report
+
+
+def pagerank(g: Graph, *, iters: int = 20, damping: float = 0.85,
+             pipelines: int = 8, pes: int = 1, backend: str = "auto",
+             comm: CommManager | None = None):
+    prog = translate(dsl.pagerank_program(damping, iters), g,
+                     _schedule(pipelines, pes, backend), comm)
+    ranks, n = prog.run()
+    return ranks, n, prog.report
+
+
+def wcc(g: Graph, *, pipelines: int = 8, pes: int = 1,
+        backend: str = "auto", comm: CommManager | None = None):
+    """Weakly connected components: run label propagation on G ∪ Gᵀ."""
+    from .graph import from_edge_list, to_coo
+    src, dst, _ = to_coo(g)
+    und = from_edge_list(np.concatenate([src, dst]),
+                         np.concatenate([dst, src]),
+                         num_vertices=g.num_vertices)
+    prog = translate(dsl.wcc_program(), und,
+                     _schedule(pipelines, pes, backend), comm)
+    labels, iters = prog.run()
+    return labels, iters, prog.report
+
+
+def spmv(g: Graph, x, *, pipelines: int = 8, pes: int = 1,
+         backend: str = "auto", comm: CommManager | None = None):
+    """y[v] = Σ_{(u→v)} w(u,v)·x[u] — one GAS superstep."""
+    prog = translate(dsl.spmv_program(), g,
+                     _schedule(pipelines, pes, backend), comm)
+    values, active = prog.init_state(values=jnp.asarray(x, jnp.float32))
+    y, _ = prog.superstep(values, active)
+    return y, prog.report
+
+
+def k_core(g: Graph, k: int, *, rounds: int | None = None,
+           backend: str = "auto"):
+    """k-core decomposition by iterative peeling, expressed in the DSL:
+    activity ∈ {0,1} is the vertex value; each superstep counts active
+    undirected neighbors (gather=copy, reduce=add) and the Apply template
+    keeps a vertex alive iff it was alive with ≥ k active neighbors.
+    Returns a boolean membership mask."""
+    from .graph import from_edge_list, to_coo
+    src, dst, _ = to_coo(g)
+    und = from_edge_list(np.concatenate([src, dst]),
+                         np.concatenate([dst, src]),
+                         num_vertices=g.num_vertices)
+    prog = dsl.VertexProgram(
+        name="k_core",
+        gather=lambda v, w, d: v,
+        reduce="add",
+        apply=lambda old, s: jnp.where((old > 0) & (s >= k), 1.0, 0.0),
+        init_value=1.0,
+        frontier="all",
+        value_dtype=jnp.float32,
+        mask_inactive=False,
+        max_iters=rounds if rounds is not None else g.num_vertices,
+    )
+    compiled = translate(prog, und, _schedule(8, 1, backend))
+    values, active = compiled.init_state(
+        values=jnp.ones(g.num_vertices, jnp.float32))
+    # peel until stable (device-side while loop with change detection)
+    def cond(state):
+        vals, prev, it = state
+        return jnp.logical_and(jnp.any(vals != prev), it < compiled.max_iters)
+
+    def body(state):
+        vals, _, it = state
+        new, _ = compiled.superstep(vals, jnp.ones_like(vals, bool))
+        return new, vals, it + 1
+
+    first, _ = compiled.superstep(values, jnp.ones_like(values, bool))
+    vals, _, iters = jax.lax.while_loop(
+        cond, body, (first, values, jnp.asarray(1, jnp.int32)))
+    return np.asarray(vals) > 0, int(iters)
+
+
+def in_degrees(g: Graph, *, backend: str = "auto"):
+    prog = translate(dsl.degree_program(), g, _schedule(8, 1, backend))
+    values, active = prog.init_state(values=jnp.ones(g.num_vertices, jnp.float32))
+    deg, _ = prog.superstep(values, active)
+    return deg
+
+
+def traversed_edges(g: Graph, levels) -> int:
+    """Edges traversed by a BFS (for MTEPS): out-edges of reached vertices."""
+    reached = np.asarray(levels) < INT_MAX
+    deg = np.asarray(g.out_degrees)
+    return int(deg[reached].sum())

@@ -1,0 +1,142 @@
+"""The graph DSL (paper §IV): GAS vertex programs.
+
+A :class:`VertexProgram` is the paper's "think like a vertex" abstraction:
+the user supplies *gather* (paper: Receive+Apply on a message), a *reduce*
+accumulator, and *apply* (vertex update), plus frontier semantics. Everything
+else — traversal order, data layout, parallel schedule, communication — is
+the translator's job, exactly the decoupling the paper argues for.
+
+The three-level library of the paper maps to:
+  * algorithm layer   → :mod:`repro.core.algorithms` (BFS(graph, ...), ...)
+  * function layer    → this module (VertexProgram / supersteps)
+  * atomic operators  → :mod:`repro.core.operators`
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+GatherFn = Callable[[Any, Any, Any], Any]   # (src_value, edge_weight, src_degree) -> msg
+ApplyFn = Callable[[Any, Any], Any]         # (old_value, reduced_msg) -> new_value
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexProgram:
+    """A GAS-model graph program (the DSL's function-layer object)."""
+
+    name: str
+    gather: GatherFn
+    reduce: str                      # 'add' | 'min' | 'max'
+    apply: ApplyFn
+    init_value: Any                  # initial vertex value (scalar or array)
+    frontier: str = "changed"        # 'changed' | 'all'
+    value_dtype: Any = jnp.float32
+    # messages from inactive sources are masked to the reduce identity
+    mask_inactive: bool = True
+    max_iters: int | None = None     # None → |V| bound
+
+    def __post_init__(self):
+        if self.reduce not in ("add", "min", "max"):
+            raise ValueError(f"unsupported reduce: {self.reduce}")
+        if self.frontier not in ("changed", "all"):
+            raise ValueError(f"unsupported frontier mode: {self.frontier}")
+
+
+def reduce_identity(op: str, dtype) -> Any:
+    ident = {"add": 0.0, "min": jnp.inf, "max": -jnp.inf}[op]
+    if jnp.issubdtype(dtype, jnp.integer):
+        info = jnp.iinfo(dtype)
+        ident = {"add": 0, "min": info.max, "max": info.min}[op]
+    return jnp.asarray(ident, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm-layer program templates (paper: "algorithm-aware operators ...
+# templates for these operators, which can be used conveniently")
+# ---------------------------------------------------------------------------
+
+
+def bfs_program(int_max: int = 2**30) -> VertexProgram:
+    """BFS levels: msg = level[u] + 1, reduce min, apply min."""
+    return VertexProgram(
+        name="bfs",
+        gather=lambda v, w, d: v + 1,
+        reduce="min",
+        apply=jnp.minimum,
+        init_value=int_max,
+        frontier="changed",
+        value_dtype=jnp.int32,
+    )
+
+
+def sssp_program() -> VertexProgram:
+    """SSSP (Bellman-Ford style): msg = dist[u] + w, reduce min, apply min."""
+    return VertexProgram(
+        name="sssp",
+        gather=lambda v, w, d: v + w,
+        reduce="min",
+        apply=jnp.minimum,
+        init_value=jnp.inf,
+        frontier="changed",
+        value_dtype=jnp.float32,
+    )
+
+
+def pagerank_program(damping: float = 0.85, iters: int = 20) -> VertexProgram:
+    """PageRank: msg = rank[u]/deg[u], reduce add, apply damped sum."""
+    return VertexProgram(
+        name="pagerank",
+        gather=lambda v, w, d: v / jnp.maximum(d, 1).astype(v.dtype),
+        reduce="add",
+        apply=lambda old, s: (1.0 - damping) + damping * s,
+        init_value=1.0,
+        frontier="all",
+        value_dtype=jnp.float32,
+        mask_inactive=False,
+        max_iters=iters,
+    )
+
+
+def wcc_program() -> VertexProgram:
+    """Connected components by label propagation: reduce min of labels."""
+    return VertexProgram(
+        name="wcc",
+        gather=lambda v, w, d: v,
+        reduce="min",
+        apply=jnp.minimum,
+        init_value=0,                # overwritten with iota by the runner
+        frontier="changed",
+        value_dtype=jnp.int32,
+    )
+
+
+def spmv_program() -> VertexProgram:
+    """One y = A^T x step in GAS form: msg = x[u]*w, reduce add."""
+    return VertexProgram(
+        name="spmv",
+        gather=lambda v, w, d: v * w,
+        reduce="add",
+        apply=lambda old, s: s,
+        init_value=0.0,
+        frontier="all",
+        value_dtype=jnp.float32,
+        mask_inactive=False,
+        max_iters=1,
+    )
+
+
+def degree_program() -> VertexProgram:
+    """In-degree count: msg = 1 per edge, reduce add."""
+    return VertexProgram(
+        name="degree",
+        gather=lambda v, w, d: jnp.ones_like(v),
+        reduce="add",
+        apply=lambda old, s: s,
+        init_value=0.0,
+        frontier="all",
+        value_dtype=jnp.float32,
+        mask_inactive=False,
+        max_iters=1,
+    )

@@ -1,0 +1,238 @@
+"""Graph data structures (the paper's "Graph data" layer, Fig. 3).
+
+The paper stores graphs as three CSR arrays (Vertices, Edge_offset, Edges).
+We keep that representation as the canonical on-host/in-HBM format and add a
+TPU-native *degree-bucketed ELLPACK* (``BucketedGraph``) used by the
+translator's dense edge-processing modules: TPU vector units want dense,
+128-lane-aligned access, so irregular adjacency is re-blocked into fixed
+width buckets (padding with a sentinel vertex), trading a bounded number of
+padding FLOPs for perfectly regular memory streams — the VMEM analogue of the
+paper's BRAM vertex caching + pipeline streaming.
+
+All structures are registered pytrees so they flow through jit/shard_map.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Sentinel for padded edge slots (points at a dummy vertex appended at n).
+PAD = jnp.iinfo(jnp.int32).max
+
+
+def _field(**kw):
+    return dataclasses.field(**kw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """CSR graph. ``edge_offsets[v]:edge_offsets[v+1]`` index ``edges_dst``.
+
+    ``vertex_values`` is the algorithm-owned per-vertex state (paper:
+    "Vertices" array). ``edge_weights`` may be float weights or all-ones.
+    A dummy vertex row is *not* materialized; ``num_vertices`` is static.
+    """
+
+    vertex_values: jax.Array        # (V,) algorithm state
+    edge_offsets: jax.Array         # (V+1,) int32
+    edges_dst: jax.Array            # (E,) int32 destination vertex ids
+    edge_weights: jax.Array         # (E,) weights
+    num_vertices: int = _field(metadata=dict(static=True))
+    num_edges: int = _field(metadata=dict(static=True))
+
+    @property
+    def out_degrees(self) -> jax.Array:
+        return self.edge_offsets[1:] - self.edge_offsets[:-1]
+
+    def with_values(self, values: jax.Array) -> "Graph":
+        return dataclasses.replace(self, vertex_values=values)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BucketedGraph:
+    """Degree-bucketed ELLPACK edge blocks (TPU-native dense layout).
+
+    Vertices are grouped into buckets by out-degree; bucket ``b`` stores its
+    vertices' adjacency as a dense ``(rows_b, width_b)`` matrix (padded with
+    ``PAD``). ``width_b`` is a power of two × 8 so edge blocks tile VMEM
+    cleanly. ``src_ids`` maps bucket rows back to vertex ids.
+    """
+
+    src_ids: tuple        # tuple of (rows_b,) int32 arrays
+    dst: tuple            # tuple of (rows_b, width_b) int32 arrays (PAD-padded)
+    weights: tuple        # tuple of (rows_b, width_b) weight arrays
+    num_vertices: int = _field(metadata=dict(static=True))
+    num_edges: int = _field(metadata=dict(static=True))
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.src_ids)
+
+
+def from_edge_list(
+    src: np.ndarray,
+    dst: np.ndarray,
+    *,
+    num_vertices: int | None = None,
+    weights: np.ndarray | None = None,
+    vertex_values: np.ndarray | None = None,
+    sort: bool = True,
+) -> Graph:
+    """Build a CSR :class:`Graph` from COO edge lists (host-side)."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    if num_vertices is None:
+        num_vertices = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    e = len(src)
+    if weights is None:
+        weights = np.ones(e, np.float32)
+    if sort:
+        order = np.argsort(src, kind="stable")
+        src, dst, weights = src[order], dst[order], weights[order]
+    counts = np.bincount(src, minlength=num_vertices)
+    offsets = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(counts, out=offsets[1:])
+    if vertex_values is None:
+        vertex_values = np.zeros(num_vertices, np.float32)
+    return Graph(
+        vertex_values=jnp.asarray(vertex_values),
+        edge_offsets=jnp.asarray(offsets, jnp.int32),
+        edges_dst=jnp.asarray(dst, jnp.int32),
+        edge_weights=jnp.asarray(weights),
+        num_vertices=num_vertices,
+        num_edges=e,
+    )
+
+
+def to_coo(g: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """CSR → COO (host-side)."""
+    offsets = np.asarray(g.edge_offsets)
+    degrees = offsets[1:] - offsets[:-1]
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int32), degrees)
+    return src, np.asarray(g.edges_dst), np.asarray(g.edge_weights)
+
+
+def reverse(g: Graph) -> Graph:
+    """Transpose the graph (CSR ↔ CSC): out-edges become in-edges."""
+    src, dst, w = to_coo(g)
+    return from_edge_list(
+        dst, src, num_vertices=g.num_vertices, weights=w,
+        vertex_values=np.asarray(g.vertex_values),
+    )
+
+
+def bucketize(
+    g: Graph,
+    *,
+    min_width: int = 8,
+    max_width: int = 1024,
+) -> BucketedGraph:
+    """Re-block CSR into degree buckets of power-of-two ELL width.
+
+    Padding overhead is < 2× edges per bucket by construction (width is the
+    next pow2 ≥ degree), and in practice ~1.3× on power-law graphs.
+    """
+    offsets = np.asarray(g.edge_offsets)
+    dst = np.asarray(g.edges_dst)
+    wts = np.asarray(g.edge_weights)
+    degrees = offsets[1:] - offsets[:-1]
+
+    widths = []
+    w = min_width
+    while w <= max_width:
+        widths.append(w)
+        w *= 2
+    # Assign every vertex with degree>0 to the smallest width ≥ degree
+    # (overflow vertices: split across multiple rows of max_width).
+    rows_per_bucket: dict[int, list[tuple[int, np.ndarray, np.ndarray]]] = {
+        w: [] for w in widths
+    }
+    for v in np.nonzero(degrees)[0]:
+        d = int(degrees[v])
+        lo, hi = offsets[v], offsets[v + 1]
+        vd, vw = dst[lo:hi], wts[lo:hi]
+        if d <= max_width:
+            bw = next(w for w in widths if w >= d)
+            rows_per_bucket[bw].append((int(v), vd, vw))
+        else:  # split high-degree hub across several max-width rows
+            for s in range(0, d, max_width):
+                rows_per_bucket[max_width].append(
+                    (int(v), vd[s:s + max_width], vw[s:s + max_width]))
+
+    src_ids, dsts, weights = [], [], []
+    for w in widths:
+        rows = rows_per_bucket[w]
+        if not rows:
+            continue
+        n = len(rows)
+        sid = np.empty(n, np.int32)
+        dm = np.full((n, w), int(PAD), np.int64)
+        wm = np.zeros((n, w), wts.dtype)
+        for i, (v, vd, vw) in enumerate(rows):
+            sid[i] = v
+            dm[i, : len(vd)] = vd
+            wm[i, : len(vw)] = vw
+        src_ids.append(jnp.asarray(sid))
+        dsts.append(jnp.asarray(dm.astype(np.int32)))
+        weights.append(jnp.asarray(wm))
+    return BucketedGraph(
+        src_ids=tuple(src_ids),
+        dst=tuple(dsts),
+        weights=tuple(weights),
+        num_vertices=g.num_vertices,
+        num_edges=g.num_edges,
+    )
+
+
+def coo_arrays(g: Graph) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Device-side COO (src per edge) derived from CSR without host sync."""
+    # repeat via searchsorted: edge i belongs to vertex v where
+    # offsets[v] <= i < offsets[v+1]
+    idx = jnp.arange(g.num_edges, dtype=jnp.int32)
+    src = jnp.searchsorted(g.edge_offsets[1:], idx, side="right").astype(jnp.int32)
+    return src, g.edges_dst, g.edge_weights
+
+
+def rmat_edges(
+    num_vertices: int,
+    num_edges: int,
+    *,
+    seed: int = 0,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+) -> tuple[np.ndarray, np.ndarray]:
+    """R-MAT power-law edge generator (Graph500-style), host-side numpy.
+
+    Used to synthesize graphs with the exact |V|/|E| of the paper's SNAP
+    datasets (offline environment; see DESIGN.md §6).
+    """
+    rng = np.random.default_rng(seed)
+    scale = int(np.ceil(np.log2(max(num_vertices, 2))))
+    src = np.zeros(num_edges, np.int64)
+    dst = np.zeros(num_edges, np.int64)
+    for level in range(scale):
+        r = rng.random(num_edges)
+        right = r > a + b          # falls in c or d quadrant → dst bit set
+        down = ((r > a) & (r <= a + b)) | (r > a + b + c)  # b or d → src bit
+        src |= down.astype(np.int64) << level
+        dst |= right.astype(np.int64) << level
+    src %= num_vertices
+    dst %= num_vertices
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    # top up dropped self-loops with uniform random edges
+    missing = num_edges - len(src)
+    if missing > 0:
+        s2 = rng.integers(0, num_vertices, missing)
+        d2 = (s2 + 1 + rng.integers(0, num_vertices - 1, missing)) % num_vertices
+        src = np.concatenate([src, s2])
+        dst = np.concatenate([dst, d2])
+    return src.astype(np.int32), dst.astype(np.int32)

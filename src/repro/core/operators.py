@@ -1,0 +1,250 @@
+"""Atomic graph operators — the paper's Fig. 3 / Table IV inventory (25+).
+
+Three groups, mirroring the paper's DSL:
+
+* **Graph data** — accessors/mutators over the CSR arrays.
+* **Graph operation** — GAS-model message functions
+  (Receive / Reduce / Apply / Send) plus frontier management.
+* **Apply operator library** — the paper's "+ - * / % sqrt square" menu plus
+  algorithm-aware templates.
+
+Every operator is a pure jax function (usable inside jit); the translator
+maps them onto fused execution modules, exactly as the paper maps DSL
+operators onto hardware pipeline modules. ``OPERATOR_REGISTRY`` at the bottom
+is what benchmarks/table_iv.py counts.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .graph import PAD, Graph
+
+# ---------------------------------------------------------------------------
+# Graph data: vertices
+# ---------------------------------------------------------------------------
+
+
+def get_vertex(g: Graph, v) -> jax.Array:
+    """Paper: Get_vertex(i) — vertex value by id."""
+    return g.vertex_values[v]
+
+
+def set_vertex_value(g: Graph, v, value) -> Graph:
+    """Paper: Set_Vertex_value — functional update of one/many vertices."""
+    return g.with_values(g.vertex_values.at[v].set(value))
+
+
+def update_vertex(g: Graph, values: jax.Array, mask: jax.Array | None = None) -> Graph:
+    """Paper: Update_vertex — bulk vertex update (optionally masked)."""
+    if mask is None:
+        return g.with_values(values)
+    return g.with_values(jnp.where(mask, values, g.vertex_values))
+
+
+def get_edge_offset(g: Graph, v) -> tuple[jax.Array, jax.Array]:
+    """Paper: Get_edge_offset(v) — CSR [start, end) of v's out edges."""
+    return g.edge_offsets[v], g.edge_offsets[jnp.asarray(v) + 1]
+
+
+def get_out_degree(g: Graph, v) -> jax.Array:
+    return g.edge_offsets[jnp.asarray(v) + 1] - g.edge_offsets[v]
+
+
+def get_out_edges_list(g: Graph, v: int, max_degree: int) -> tuple[jax.Array, jax.Array]:
+    """Paper: Get_out_edges_list — (edge ids, weights), PAD-padded to
+    ``max_degree`` (static bound keeps it jittable)."""
+    start, end = get_edge_offset(g, v)
+    ids = start + jnp.arange(max_degree, dtype=jnp.int32)
+    valid = ids < end
+    ids = jnp.where(valid, ids, PAD)
+    w = jnp.where(valid, g.edge_weights[jnp.clip(ids, 0, g.num_edges - 1)], 0)
+    return ids, w
+
+
+def get_in_edges_list(g_rev: Graph, v: int, max_degree: int):
+    """Paper: Get_in_edges_list — same, on the transposed graph."""
+    return get_out_edges_list(g_rev, v, max_degree)
+
+
+def get_dest_v_list(g: Graph, v: int, max_degree: int) -> jax.Array:
+    """Paper: Get_dest_V_list — out-neighbor ids of v (PAD-padded)."""
+    start, end = get_edge_offset(g, v)
+    ids = start + jnp.arange(max_degree, dtype=jnp.int32)
+    valid = ids < end
+    nbr = g.edges_dst[jnp.clip(ids, 0, g.num_edges - 1)]
+    return jnp.where(valid, nbr, PAD)
+
+
+def get_src_v_list(g_rev: Graph, v: int, max_degree: int) -> jax.Array:
+    """Paper: Get_src_V_list — in-neighbor ids via the transposed graph."""
+    return get_dest_v_list(g_rev, v, max_degree)
+
+
+# ---------------------------------------------------------------------------
+# Graph data: edges
+# ---------------------------------------------------------------------------
+
+
+def get_edge_src_id(g: Graph, e) -> jax.Array:
+    """Paper: Get_src_V_id(e) — source vertex of edge id (CSR search)."""
+    return jnp.searchsorted(g.edge_offsets[1:], jnp.asarray(e), side="right").astype(jnp.int32)
+
+
+def get_edge_dst_id(g: Graph, e) -> jax.Array:
+    """Paper: Get_dest_V_id(e)."""
+    return g.edges_dst[e]
+
+
+def get_edge_weight(g: Graph, e) -> jax.Array:
+    """Paper: Get_edge_V_weight(e)."""
+    return g.edge_weights[e]
+
+
+def set_edge_weight(g: Graph, e, w) -> Graph:
+    import dataclasses
+    return dataclasses.replace(g, edge_weights=g.edge_weights.at[e].set(w))
+
+
+# ---------------------------------------------------------------------------
+# Graph operations (GAS): Receive / Reduce / Apply / Send
+# ---------------------------------------------------------------------------
+
+
+def receive(values: jax.Array, src_ids: jax.Array, pad_value=0) -> jax.Array:
+    """Paper: Receive — gather neighbor data; PAD slots produce pad_value.
+
+    values: (V,) vertex state; src_ids: any-shape int32 ids (may be PAD).
+    """
+    safe = jnp.clip(src_ids, 0, values.shape[0] - 1)
+    out = values[safe]
+    return jnp.where(src_ids == PAD, jnp.asarray(pad_value, out.dtype), out)
+
+
+_REDUCERS: dict[str, tuple[Callable, float]] = {
+    "add": (jnp.add, 0.0),
+    "min": (jnp.minimum, jnp.inf),
+    "max": (jnp.maximum, -jnp.inf),
+    "or": (jnp.logical_or, False),
+}
+
+
+def reduce_messages(messages: jax.Array, op: str = "add", axis: int = -1) -> jax.Array:
+    """Paper: Reduce — combine messages for a vertex with an accumulator."""
+    fn = {"add": jnp.sum, "min": jnp.min, "max": jnp.max,
+          "or": jnp.any}[op]
+    return fn(messages, axis=axis)
+
+
+def reduce_by_segment(messages: jax.Array, segment_ids: jax.Array,
+                      num_segments: int, op: str = "add") -> jax.Array:
+    """Paper: Reduce across irregular destinations (scatter-reduce)."""
+    if op == "add":
+        return jax.ops.segment_sum(messages, segment_ids, num_segments)
+    if op == "min":
+        return jax.ops.segment_min(messages, segment_ids, num_segments)
+    if op == "max":
+        return jax.ops.segment_max(messages, segment_ids, num_segments)
+    raise ValueError(op)
+
+
+def send(values: jax.Array, dst_ids: jax.Array, messages: jax.Array,
+         op: str = "add") -> jax.Array:
+    """Paper: Send — scatter updated messages to neighbors (PAD-safe)."""
+    valid = dst_ids != PAD
+    safe = jnp.where(valid, dst_ids, 0)
+    combine, ident = _REDUCERS[op]
+    msg = jnp.where(valid, messages, jnp.asarray(ident, messages.dtype))
+    if op == "add":
+        return values.at[safe].add(jnp.where(valid, msg, 0))
+    if op == "min":
+        return values.at[safe].min(msg)
+    if op == "max":
+        return values.at[safe].max(msg)
+    raise ValueError(op)
+
+
+# ---------------------------------------------------------------------------
+# Frontier management (paper: frontiers "used like a queue", active vertices)
+# ---------------------------------------------------------------------------
+
+
+def make_frontier(num_vertices: int, roots) -> jax.Array:
+    return jnp.zeros(num_vertices, bool).at[jnp.asarray(roots)].set(True)
+
+
+def get_active_vertex(frontier: jax.Array) -> jax.Array:
+    """Paper: Get_active_vertex — any work left?"""
+    return jnp.any(frontier)
+
+
+def frontier_size(frontier: jax.Array) -> jax.Array:
+    return jnp.sum(frontier)
+
+
+def advance_frontier(old: jax.Array, updated_mask: jax.Array) -> jax.Array:
+    """Next frontier = vertices whose value changed this superstep."""
+    return updated_mask
+
+
+# ---------------------------------------------------------------------------
+# Apply operator library (paper: "+ - * / % sqrt square" + templates)
+# ---------------------------------------------------------------------------
+
+APPLY_OPS: dict[str, Callable] = {
+    "add": lambda x, y: x + y,
+    "sub": lambda x, y: x - y,
+    "mul": lambda x, y: x * y,
+    "div": lambda x, y: x / y,
+    "mod": lambda x, y: x % y,
+    "sqrt": lambda x, _=None: jnp.sqrt(x),
+    "square": lambda x, _=None: x * x,
+    "plus_one": lambda x, _=None: x + 1,          # paper's BFS example
+    "min": jnp.minimum,
+    "max": jnp.maximum,
+    "weighted_add": lambda x, w: x + w,            # SSSP relax template
+    "damped_sum": lambda s, d=0.85: 0.15 + d * s,  # PageRank template
+    "identity": lambda x, _=None: x,
+}
+
+
+def apply_op(name: str, *args):
+    """Paper: Apply — pick an operator from the template menu."""
+    return APPLY_OPS[name](*args)
+
+
+# ---------------------------------------------------------------------------
+# Inventory (benchmarks/table_iv.py counts this — paper Table IV: ours 25+)
+# ---------------------------------------------------------------------------
+
+OPERATOR_REGISTRY: dict[str, Callable] = {
+    # graph data / vertices
+    "Get_vertex": get_vertex,
+    "Set_Vertex_value": set_vertex_value,
+    "Update_vertex": update_vertex,
+    "Get_edge_offset": get_edge_offset,
+    "Get_out_degree": get_out_degree,
+    "Get_out_edges_list": get_out_edges_list,
+    "Get_in_edges_list": get_in_edges_list,
+    "Get_dest_V_list": get_dest_v_list,
+    "Get_src_V_list": get_src_v_list,
+    # graph data / edges
+    "Get_src_V_id": get_edge_src_id,
+    "Get_dest_V_id": get_edge_dst_id,
+    "Get_edge_V_weight": get_edge_weight,
+    "Set_edge_weight": set_edge_weight,
+    # GAS operations
+    "Receive": receive,
+    "Reduce": reduce_messages,
+    "Reduce_segment": reduce_by_segment,
+    "Send": send,
+    # frontier
+    "Make_frontier": make_frontier,
+    "Get_active_vertex": get_active_vertex,
+    "Frontier_size": frontier_size,
+    "Advance_frontier": advance_frontier,
+}
+# apply templates are operators too (paper counts its operator menu)
+OPERATOR_REGISTRY.update({f"Apply_{k}": v for k, v in APPLY_OPS.items()})

@@ -1,0 +1,197 @@
+"""Preprocessing library (paper §IV-C): FIFO, Layout, Partition, Reorder.
+
+All host-side (numpy), mirroring the paper where preprocessing runs on the
+CPU before ``Transport`` ships data to the accelerator.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Literal
+
+import numpy as np
+
+from . import graph as G
+
+# ---------------------------------------------------------------------------
+# 1) FIFO — file I/O (paper: read input files / write outputs / Neo4j hook)
+# ---------------------------------------------------------------------------
+
+
+def read_edge_list(path: str) -> tuple[np.ndarray, np.ndarray]:
+    """Read SNAP-style 'src dst' text or .npz edge files."""
+    if path.endswith(".npz"):
+        z = np.load(path)
+        return z["src"].astype(np.int32), z["dst"].astype(np.int32)
+    src, dst = [], []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith(("#", "%")):
+                continue
+            a, b = line.split()[:2]
+            src.append(int(a)); dst.append(int(b))
+    return np.asarray(src, np.int32), np.asarray(dst, np.int32)
+
+
+def write_edge_list(path: str, src: np.ndarray, dst: np.ndarray) -> None:
+    if path.endswith(".npz"):
+        np.savez_compressed(path, src=src, dst=dst)
+        return
+    with open(path, "w") as f:
+        for a, b in zip(src, dst):
+            f.write(f"{int(a)} {int(b)}\n")
+
+
+def write_values(path: str, values: np.ndarray) -> None:
+    np.save(path, np.asarray(values))
+
+
+# ---------------------------------------------------------------------------
+# 2) Layout — COO / CSR / CSC / ELL conversions
+# ---------------------------------------------------------------------------
+
+Layout = Literal["csr", "csc", "ell"]
+
+
+def layout(src: np.ndarray, dst: np.ndarray, to: Layout = "csr",
+           num_vertices: int | None = None, weights: np.ndarray | None = None):
+    """Paper: ``GraphCSC = Layout(Graph, CSC)``."""
+    if to == "csr":
+        return G.from_edge_list(src, dst, num_vertices=num_vertices, weights=weights)
+    if to == "csc":
+        return G.from_edge_list(dst, src, num_vertices=num_vertices, weights=weights)
+    if to == "ell":
+        g = G.from_edge_list(src, dst, num_vertices=num_vertices, weights=weights)
+        return G.bucketize(g)
+    raise ValueError(to)
+
+
+# ---------------------------------------------------------------------------
+# 3) Partition — edge partitions for PEs (paper cites PowerLyra/PathGraph)
+# ---------------------------------------------------------------------------
+
+
+def partition_edges(src: np.ndarray, dst: np.ndarray, parts: int,
+                    strategy: str = "block") -> list[np.ndarray]:
+    """Return per-part edge index arrays.
+
+    * ``block``  — contiguous equal-size slices (paper's "basic partition")
+    * ``dst_hash`` — by destination (vertex-cut-free pull partitions)
+    * ``hybrid`` — PowerLyra-style: low-degree dst grouped by dst, hub
+      destinations' edges striped round-robin across parts
+    """
+    e = len(src)
+    ids = np.arange(e)
+    if parts <= 1:
+        return [ids]
+    if strategy == "block":
+        return list(np.array_split(ids, parts))
+    if strategy == "dst_hash":
+        return [ids[dst % parts == p] for p in range(parts)]
+    if strategy == "hybrid":
+        deg = np.bincount(dst)
+        hub_cut = max(np.percentile(deg[deg > 0], 99.0), 64) if (deg > 0).any() else 64
+        is_hub_edge = deg[dst] > hub_cut
+        out: list[list] = [[] for _ in range(parts)]
+        normal = ids[~is_hub_edge]
+        for p in range(parts):
+            out[p].extend(normal[dst[normal] % parts == p].tolist())
+        hub = ids[is_hub_edge]
+        for i, eid in enumerate(hub):
+            out[i % parts].append(eid)
+        return [np.asarray(sorted(o), np.int64) for o in out]
+    if strategy == "community":
+        # paper §IV-C3: "separate graph with graph algorithms, such as …
+        # community detection" — components (via the DSL's WCC) are packed
+        # into parts greedily by size; cross-part edges are minimized by
+        # construction (an edge never crosses components).
+        from . import algorithms as alg
+        from . import graph as G
+        nv = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+        g = G.from_edge_list(src, dst, num_vertices=nv)
+        labels, _, _ = alg.wcc(g)
+        labels = np.asarray(labels)
+        comps, sizes = np.unique(labels, return_counts=True)
+        order = np.argsort(-sizes)
+        part_of_comp = {}
+        load = np.zeros(parts, np.int64)
+        for ci in order:
+            p = int(np.argmin(load))
+            part_of_comp[int(comps[ci])] = p
+            load[p] += sizes[ci]
+        edge_part = np.asarray([part_of_comp[int(l)] for l in labels[src]])
+        return [ids[edge_part == p] for p in range(parts)]
+    raise ValueError(strategy)
+
+
+# ---------------------------------------------------------------------------
+# 4) Reorder — degree sort / locality (paper cites Balaji & Lucia)
+# ---------------------------------------------------------------------------
+
+
+def reorder(src: np.ndarray, dst: np.ndarray, num_vertices: int,
+            strategy: str = "degree") -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Relabel vertices; returns (new_src, new_dst, perm) with
+    ``perm[old_id] = new_id``.
+
+    * ``degree``   — descending out-degree (hubs first → BRAM/VMEM-resident)
+    * ``bfs``      — BFS order from the max-degree vertex (locality)
+    * ``identity`` — no-op
+    """
+    if strategy == "identity":
+        return src, dst, np.arange(num_vertices)
+    deg = np.bincount(src, minlength=num_vertices)
+    if strategy == "degree":
+        order = np.argsort(-deg, kind="stable")          # new→old
+    elif strategy == "bfs":
+        adj_off = np.zeros(num_vertices + 1, np.int64)
+        np.cumsum(np.bincount(src, minlength=num_vertices), out=adj_off[1:])
+        by_src = np.argsort(src, kind="stable")
+        sorted_dst = dst[by_src]
+        seen = np.zeros(num_vertices, bool)
+        order_list = []
+        from collections import deque
+        for root in np.argsort(-deg, kind="stable"):
+            if seen[root]:
+                continue
+            q = deque([root]); seen[root] = True
+            while q:
+                v = q.popleft()
+                order_list.append(v)
+                for u in sorted_dst[adj_off[v]:adj_off[v + 1]]:
+                    if not seen[u]:
+                        seen[u] = True
+                        q.append(u)
+        order = np.asarray(order_list)
+    else:
+        raise ValueError(strategy)
+    perm = np.empty(num_vertices, np.int64)
+    perm[order] = np.arange(num_vertices)
+    return perm[src].astype(np.int32), perm[dst].astype(np.int32), perm
+
+
+# ---------------------------------------------------------------------------
+# Dataset synthesis at the paper's SNAP sizes (offline stand-ins)
+# ---------------------------------------------------------------------------
+
+PAPER_GRAPHS = {
+    # name: (|V|, |E|)  — Table V
+    "email-Eu-core": (1_005, 25_571),
+    "soc-Slashdot0922": (82_168, 948_464),
+}
+
+
+def load_paper_graph(name: str, seed: int = 0, cache_dir: str | None = None) -> G.Graph:
+    """R-MAT graph with the exact |V|/|E| of the paper's dataset."""
+    v, e = PAPER_GRAPHS[name]
+    if cache_dir:
+        path = os.path.join(cache_dir, f"{name}.npz")
+        if os.path.exists(path):
+            src, dst = read_edge_list(path)
+            return G.from_edge_list(src, dst, num_vertices=v)
+    src, dst = G.rmat_edges(v, e, seed=seed)
+    if cache_dir:
+        os.makedirs(cache_dir, exist_ok=True)
+        write_edge_list(os.path.join(cache_dir, f"{name}.npz"), src, dst)
+    return G.from_edge_list(src, dst, num_vertices=v)

@@ -1,0 +1,336 @@
+"""Light-weight translator (paper §V): DSL program × schedule → executable.
+
+The paper's argument: for a fixed domain you don't need a general-purpose
+HLS compiler — a *light-weight* translator that (1) pattern-matches DSL
+operators onto a library of pre-optimized hardware modules, (2) applies the
+runtime scheduler's ``pipelines × PEs`` plan, and (3) lets the communication
+manager place data, produces better code in far less time.
+
+The TPU mapping implemented here:
+
+* **Module matching** — the program's ``gather`` callable is classified
+  against the static module menu (``kernels.ref.GATHER_OPS``) by abstract
+  probing (no general syntax analysis — the paper's "eliminate complex
+  grammatical and semantic analysis"). Unmatched gathers fall back to the
+  general sparse jnp path, so nothing is rejected, only de-optimized.
+* **Module library** — dense ELL Pallas kernel / dense XLA / sparse
+  segment-reduce, selected by the scheduler heuristic (graph shape) and the
+  backend hint.
+* **Schedule application** — ``pipelines`` → edge-chunk streaming
+  (``lax.scan``); ``PEs`` → ``shard_map`` edge partitions with
+  psum/pmin/pmax combines (optionally int8-quantized by the comm manager).
+* **AOT staging** — the translator compiles the superstep eagerly and
+  reports translation time (the paper's "TT" column) and cost estimates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import kernels
+from ..kernels import ops as kops
+from ..kernels.ref import GATHER_OPS
+from . import graph as G
+from .comm import CommManager
+from .dsl import VertexProgram, reduce_identity
+from .scheduler import ScheduleConfig, SchedulePlan, plan
+
+P = jax.sharding.PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Module matching (abstract probing instead of syntax analysis)
+# ---------------------------------------------------------------------------
+
+
+def classify_gather(gather: Callable, dtype) -> str | None:
+    """Match a gather callable against the pre-built module menu."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.uniform(1, 8, (16,)), dtype)
+    w = jnp.asarray(rng.uniform(1, 8, (16,)), dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
+    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
+    try:
+        got = np.asarray(gather(v, w.astype(v.dtype), d))
+    except Exception:
+        return None
+    from ..kernels.ref import _gather_msg
+    for name in GATHER_OPS:
+        try:
+            want = np.asarray(_gather_msg(name, v, w.astype(v.dtype), d))
+        except Exception:
+            continue
+        if got.shape == want.shape and np.allclose(got, want, rtol=1e-5, atol=1e-5):
+            return name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Compiled artifact
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TranslationReport:
+    program: str
+    backend: str                  # 'dense_pallas' | 'dense_xla' | 'sparse_xla'
+    gather_module: str | None     # matched menu entry, None → general path
+    reduce_module: str
+    pipelines: int
+    pes: int
+    translate_time_s: float
+    est_flops_per_superstep: float
+    est_bytes_per_superstep: float
+    est_collective_bytes: int
+    dsl_lines: int | None = None  # set by callers for Table V
+
+
+class CompiledGraphProgram:
+    """The translated executable (paper: generated HDL + host C code)."""
+
+    def __init__(self, superstep, init_state, report: TranslationReport,
+                 max_iters: int):
+        self._superstep = superstep
+        self._init_state = init_state
+        self.report = report
+        self.max_iters = max_iters
+
+    def init_state(self, roots=None, values=None):
+        return self._init_state(roots=roots, values=values)
+
+    def superstep(self, values, active):
+        return self._superstep(values, active)
+
+    def run(self, roots=None, values=None):
+        """Paper Algorithm 1's while-loop, as a device-side while_loop."""
+        values, active = self.init_state(roots=roots, values=values)
+
+        def cond(state):
+            _, active, it = state
+            return jnp.logical_and(jnp.any(active), it < self.max_iters)
+
+        def body(state):
+            values, active, it = state
+            values, active = self._superstep(values, active)
+            return values, active, it + 1
+
+        values, active, iters = jax.lax.while_loop(
+            cond, body, (values, active, jnp.asarray(0, jnp.int32)))
+        return values, iters
+
+
+# ---------------------------------------------------------------------------
+# The translator
+# ---------------------------------------------------------------------------
+
+
+def translate(
+    program: VertexProgram,
+    g: G.Graph,
+    schedule: ScheduleConfig | None = None,
+    comm: CommManager | None = None,
+    *,
+    use_pallas: bool | None = None,
+    aot_compile: bool = True,
+) -> CompiledGraphProgram:
+    """Stage a DSL program into a specialized executable for graph ``g``.
+
+    Messages flow along in-edges (pull form): ``g`` holds out-edges (CSR),
+    so the translator builds the transposed adjacency once at translation
+    time (paper: Layout(Graph, CSC) happens before Transport).
+    """
+    t0 = time.perf_counter()
+    schedule = schedule or ScheduleConfig()
+    comm = comm or CommManager()
+    splan: SchedulePlan = plan(schedule, num_vertices=g.num_vertices,
+                               num_edges=g.num_edges)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+
+    dtype = jnp.dtype(program.value_dtype)
+    gather_module = classify_gather(program.gather, dtype)
+    backend = splan.backend
+    if gather_module is None:
+        backend = "sparse"  # general path only exists in the sparse module
+
+    g_rev = G.reverse(g)                     # pull: in-edges of each vertex
+    out_deg = g.out_degrees.astype(jnp.int32)
+    V = g.num_vertices
+    ident = reduce_identity(program.reduce, dtype)
+
+    # ---- build the partial-reduce module -------------------------------
+    if backend == "dense":
+        bucket = G.bucketize(g_rev)
+        kernel_flavor = "dense_pallas" if use_pallas else "dense_xla"
+
+        def partial_reduce(values, active):
+            red_table = jnp.full((V,), ident, dtype)
+            got_table = jnp.zeros((V,), bool)
+            for sid, nbr, wgt in zip(bucket.src_ids, bucket.dst, bucket.weights):
+                if use_pallas:
+                    red, got = kops.edge_block_reduce(
+                        nbr, wgt, values, out_deg, active,
+                        gather=gather_module, reduce=program.reduce,
+                        mask_inactive=program.mask_inactive,
+                        block_rows=schedule.block_rows)
+                else:
+                    from ..kernels.ref import edge_block_reduce_ref
+                    red, got = edge_block_reduce_ref(
+                        nbr, wgt, values, out_deg, active,
+                        gather=gather_module, reduce=program.reduce,
+                        mask_inactive=program.mask_inactive)
+                comb = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}[program.reduce]
+                red_table = red_table.at[sid].set(
+                    comb(red_table[sid], red.astype(dtype)))
+                got_table = got_table.at[sid].max(got)
+            return red_table, got_table
+
+    else:
+        kernel_flavor = "sparse_xla"
+        # COO of the reversed graph: edge (u → v) appears as (dst=v, src=u)
+        seg_dst, src, wts = G.coo_arrays(g_rev)   # seg: receiving vertex
+        nchunk = splan.num_chunks
+        pes_planned = 1 if splan.mesh is None else splan.config.pes
+        if pes_planned > 1:       # each PE owns nchunk/pes edge chunks
+            nchunk = -(-nchunk // pes_planned) * pes_planned
+        E = g.num_edges
+        csize = -(-E // nchunk)
+        pad = nchunk * csize - E
+        PADV = jnp.iinfo(jnp.int32).max
+        seg_p = jnp.pad(seg_dst, (0, pad), constant_values=PADV)
+        src_p = jnp.pad(src, (0, pad))
+        wts_p = jnp.pad(wts, (0, pad))
+        seg_c = seg_p.reshape(nchunk, csize)
+        src_c = src_p.reshape(nchunk, csize)
+        wts_c = wts_p.reshape(nchunk, csize)
+
+        gather_fn = program.gather
+
+        def partial_reduce(values, active, chunks=None):
+            my_seg, my_src, my_wts = chunks if chunks is not None \
+                else (seg_c, src_c, wts_c)
+
+            def chunk(carry, xs):
+                red_table, got_table = carry
+                seg, srcs, ws = xs
+                valid = seg != PADV
+                safe_src = jnp.where(valid, srcs, 0)
+                v = values[safe_src]
+                d = out_deg[safe_src]
+                msg = gather_fn(v, ws.astype(v.dtype), d)
+                live = valid
+                if program.mask_inactive:
+                    live = live & active[safe_src]
+                msg = jnp.where(live, msg.astype(dtype), ident)
+                safe_seg = jnp.where(valid, seg, 0)
+                if program.reduce == "add":
+                    red_table = red_table.at[safe_seg].add(jnp.where(live, msg, 0))
+                elif program.reduce == "min":
+                    red_table = red_table.at[safe_seg].min(msg)
+                else:
+                    red_table = red_table.at[safe_seg].max(msg)
+                got_table = got_table.at[safe_seg].max(live)
+                return (red_table, got_table), None
+
+            init = (jnp.full((V,), ident, dtype), jnp.zeros((V,), bool))
+            if chunks is not None:   # per-PE slices are pe-varying
+                init = jax.tree.map(
+                    lambda a: jax.lax.pvary(a, ("pe",)), init)
+            (red_table, got_table), _ = jax.lax.scan(
+                chunk, init, (my_seg, my_src, my_wts))
+            return red_table, got_table
+
+    # ---- PE combine (multi-shard) ---------------------------------------
+    pes = 1 if splan.mesh is None else splan.config.pes
+    if splan.mesh is not None and backend != "dense":
+        mesh = splan.mesh
+        k_per_pe = nchunk // pes
+
+        # Each PE owns an edge-chunk slice (paper: edge partitions per PE);
+        # vertex tables replicate and combine with the reduce-matched
+        # collective — psum for 'add' is only correct because the edge sets
+        # are disjoint per PE.
+        def sharded_reduce(values, active):
+            def pe_body(values, active):
+                pe = jax.lax.axis_index("pe")
+                chunks = tuple(
+                    jax.lax.dynamic_slice_in_dim(c, pe * k_per_pe,
+                                                 k_per_pe, 0)
+                    for c in (seg_c, src_c, wts_c))
+                red, got = partial_reduce(values, active, chunks)
+                if program.reduce == "add":
+                    red = jax.lax.psum(red, "pe")
+                elif program.reduce == "min":
+                    red = jax.lax.pmin(red, "pe")
+                else:
+                    red = jax.lax.pmax(red, "pe")
+                got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
+                return red, got
+
+            return jax.shard_map(pe_body, mesh=mesh,
+                                 in_specs=(P(), P()), out_specs=(P(), P()))(
+                values, active)
+
+        reduce_module = sharded_reduce
+    else:
+        pes = 1 if backend == "dense" else pes
+        reduce_module = partial_reduce
+
+    # ---- superstep = Receive/Reduce (module) + Apply + frontier ---------
+    apply_fn = program.apply
+
+    @jax.jit
+    def superstep(values, active):
+        red, got = reduce_module(values, active)
+        new = apply_fn(values, red)
+        take = got if program.frontier == "changed" else jnp.ones_like(got)
+        new = jnp.where(take, new, values)
+        changed = new != values
+        next_active = changed if program.frontier == "changed" \
+            else jnp.ones_like(changed)
+        return new, next_active
+
+    def init_state(roots=None, values=None):
+        if values is None:
+            if np.isscalar(program.init_value) or jnp.ndim(program.init_value) == 0:
+                values = jnp.full((V,), program.init_value, dtype)
+            else:
+                values = jnp.asarray(program.init_value, dtype)
+        if program.name == "wcc":
+            values = jnp.arange(V, dtype=dtype)
+        if roots is not None:
+            root_val = jnp.asarray(0, dtype)
+            values = values.at[jnp.asarray(roots)].set(root_val)
+            active = jnp.zeros((V,), bool).at[jnp.asarray(roots)].set(True)
+        else:
+            active = jnp.ones((V,), bool)
+        return values, active
+
+    max_iters = program.max_iters if program.max_iters is not None else V
+
+    # AOT compile so translation time includes staging (paper's TT metric)
+    if aot_compile:
+        v0, a0 = init_state(roots=0 if program.frontier == "changed" else None)
+        superstep_c = superstep.lower(v0, a0).compile()
+    tt = time.perf_counter() - t0
+
+    est_collective = comm.estimate_collective_bytes(
+        V, dtype, pes, quantized=schedule.message_dtype == "int8")
+    report = TranslationReport(
+        program=program.name,
+        backend=kernel_flavor,
+        gather_module=gather_module,
+        reduce_module=program.reduce,
+        pipelines=splan.num_chunks,
+        pes=pes,
+        translate_time_s=tt,
+        est_flops_per_superstep=2.0 * g.num_edges,
+        est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
+        est_collective_bytes=est_collective,
+    )
+    return CompiledGraphProgram(superstep, init_state, report, max_iters)

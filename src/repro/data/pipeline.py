@@ -1,0 +1,70 @@
+"""Deterministic, resumable, sharded synthetic token pipeline.
+
+Stateless-seeded: batch contents are a pure function of (seed, step,
+process_index), so restart-after-failure needs no replay log — the restored
+``step`` from the checkpoint is the only pipeline state (DESIGN.md §7).
+A background prefetch thread double-buffers host→device transfer behind
+compute.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Iterator
+
+import jax
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeConfig
+
+
+def synth_batch(cfg: ArchConfig, shape: ShapeConfig, step: int, *,
+                seed: int = 0, process_index: int = 0,
+                process_count: int = 1) -> dict:
+    """Per-host shard of the global batch for ``step`` (numpy, host-side)."""
+    b_local = shape.global_batch // process_count
+    rng = np.random.default_rng(
+        np.random.SeedSequence([seed, step, process_index]))
+    tokens = rng.integers(0, cfg.vocab_size,
+                          (b_local, shape.seq_len), dtype=np.int32)
+    # next-token LM objective on a Zipf-ish stream: labels = shifted tokens
+    labels = np.concatenate(
+        [tokens[:, 1:], tokens[:, :1]], axis=1).astype(np.int32)
+    batch = {"tokens": tokens, "labels": labels}
+    if cfg.enc_dec:
+        batch["enc_inputs"] = rng.normal(
+            0, 1, (b_local, shape.seq_len, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+class Prefetcher:
+    """Double-buffered host→device prefetch (overlap with compute)."""
+
+    def __init__(self, make_batch, start_step: int, *, depth: int = 2,
+                 put_fn=None):
+        self._make = make_batch
+        self._put = put_fn or jax.device_put
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        while not self._stop.is_set():
+            batch = self._put(self._make(step))
+            self._q.put((step, batch))
+            step += 1
+
+    def __iter__(self) -> Iterator[tuple[int, Any]]:
+        while True:
+            yield self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,3 @@
+from . import decode_gqa, edge_block, ops, ref, segment_sum
+
+__all__ = ["decode_gqa", "edge_block", "ops", "ref", "segment_sum"]

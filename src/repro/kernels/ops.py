@@ -1,0 +1,57 @@
+"""Jit'd dispatch wrappers for the kernel module library.
+
+The translator calls these; each wrapper picks Pallas (interpret on CPU,
+compiled on TPU) or the jnp reference, so the same translated program runs
+everywhere — the paper's "module library" with a software fallback.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_gqa as _decode_gqa
+from . import edge_block as _edge_block
+from . import segment_sum as _segment_sum
+from . import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("gather", "reduce", "mask_inactive",
+                                   "block_rows", "use_kernel"))
+def edge_block_reduce(nbr, wgt, values, degrees, active, *, gather, reduce,
+                      mask_inactive=True, block_rows=128, use_kernel=True):
+    if use_kernel:
+        return _edge_block.edge_block_reduce(
+            nbr, wgt, values, degrees, active,
+            gather=gather, reduce=reduce, mask_inactive=mask_inactive,
+            block_rows=block_rows, interpret=not _on_tpu())
+    return _ref.edge_block_reduce_ref(
+        nbr, wgt, values, degrees, active,
+        gather=gather, reduce=reduce, mask_inactive=mask_inactive)
+
+
+@partial(jax.jit, static_argnames=("num_segments", "reduce", "block_e",
+                                   "use_kernel"))
+def segment_reduce(seg, val, num_segments, *, reduce="add", block_e=4096,
+                   use_kernel=True):
+    if use_kernel:
+        return _segment_sum.segment_reduce(
+            seg, val, num_segments, reduce=reduce, block_e=block_e,
+            interpret=not _on_tpu())
+    return _ref.segment_reduce_ref(seg, val, num_segments, reduce=reduce)
+
+
+@partial(jax.jit, static_argnames=("block_s", "use_kernel"))
+def decode_gqa(q, k_cache, v_cache, pos, length, *, block_s=512,
+               use_kernel=True):
+    """Fused flash-decode GQA attention (see decode_gqa.py)."""
+    if use_kernel:
+        return _decode_gqa.decode_gqa(q, k_cache, v_cache, pos, length,
+                                      block_s=block_s,
+                                      interpret=not _on_tpu())
+    return _ref.decode_gqa_ref(q, k_cache, v_cache, pos, length)

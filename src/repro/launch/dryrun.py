@@ -1,0 +1,163 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init); 512 placeholder host devices back the production
+meshes. Nothing is ever allocated: parameters, optimizer states, caches and
+batches are ShapeDtypeStructs with resolved NamedShardings.
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--cost] [--out f.json]
+"""
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs.base import SHAPES, cell_is_runnable
+from ..configs.registry import ARCHS, get_config
+from . import cells as C
+from . import costing
+from .mesh import make_production_mesh
+
+HBM_PER_CHIP = 16 * 1024**3   # v5e-class
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, cost: bool,
+             rule_overrides: dict | None = None,
+             optimized: bool = False) -> dict:
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+    }
+    if optimized:
+        from ..configs.registry import optimized_config
+        cfg = optimized_config(arch)
+        rec["profile"] = "optimized"
+    else:
+        cfg = get_config(arch)
+    ok, why = cell_is_runnable(cfg, SHAPES[shape_name])
+    if not ok:
+        rec.update(status="skip", skip_reason=why)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = C.build_cell(arch, shape_name, mesh,
+                            rule_overrides=rule_overrides,
+                            cfg_override=cfg if optimized else None)
+        t0 = time.perf_counter()
+        lowered = C.lower_cell(cell, mesh)
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.perf_counter() - t0, 2)
+        mem = compiled.memory_analysis()
+        per_dev = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        }
+        live = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes)
+        rec["memory"] = per_dev
+        rec["live_bytes_per_device"] = int(live)
+        rec["fits_16gb"] = bool(live <= HBM_PER_CHIP)
+        _, counts = costing.collective_bytes(compiled.as_text())
+        rec["collective_ops"] = counts
+        ca = compiled.cost_analysis() or {}
+        rec["raw_cost_analysis"] = {
+            "flops_dev_loops_once": float(ca.get("flops", 0.0)),
+            "bytes_dev_loops_once": float(ca.get("bytes accessed", 0.0)),
+        }
+        rec["params_count"] = cell.params_count
+        rec["active_params"] = cell.active_params
+        del compiled, lowered, cell
+        gc.collect()
+        if cost and not multi_pod:
+            cr = costing.cost_model(arch, shape_name, mesh,
+                                    rule_overrides=rule_overrides,
+                                    cfg_override=cfg if optimized else None)
+            rec["roofline"] = {
+                "flops_dev": cr.flops_dev,
+                "bytes_dev": cr.bytes_dev,
+                "coll_dev": cr.coll_dev,
+                "compute_s": cr.compute_s,
+                "memory_s": cr.memory_s,
+                "collective_s": cr.collective_s,
+                "dominant": cr.dominant,
+                "model_flops": cr.model_flops,
+                "hlo_flops_total": cr.hlo_flops_total,
+                "useful_ratio": cr.useful_ratio,
+                "fd_compile_s": round(cr.fd_compile_s, 1),
+                "fd_collective_counts": cr.counts,
+            }
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--cost", action="store_true")
+    p.add_argument("--optimized", action="store_true",
+                   help="use the post-hillclimb profile (EXPERIMENTS §Perf)")
+    p.add_argument("--out", default=None)
+    args = p.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or
+                               (args.all and not args.multi_pod)) \
+        else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    results = []
+    for i, (a, s, m) in enumerate(cells):
+        rec = run_cell(a, s, multi_pod=m, cost=args.cost,
+                       optimized=args.optimized)
+        results.append(rec)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" compile={rec['compile_s']}s "
+                     f"live={rec['live_bytes_per_device']/2**30:.2f}GiB "
+                     f"fits={rec['fits_16gb']}")
+            if "roofline" in rec:
+                r = rec["roofline"]
+                extra += (f" dom={r['dominant']}"
+                          f" c/m/l={r['compute_s']:.4f}/{r['memory_s']:.4f}"
+                          f"/{r['collective_s']:.4f}s"
+                          f" useful={r['useful_ratio']:.2f}")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        print(f"[{i+1}/{len(cells)}] {a} × {s} × "
+              f"{rec['mesh']}: {status}{extra}", flush=True)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"done: {n_ok} ok, {n_skip} skip, {n_err} error", flush=True)
+
+
+if __name__ == "__main__":
+    main()

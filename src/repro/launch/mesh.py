@@ -1,0 +1,26 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+
+
+def make_host_mesh(pes: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU demos)."""
+    n = min(pes, len(jax.devices()))
+    return jax.make_mesh((n,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+# TPU v5e-class roofline constants (per spec).
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link

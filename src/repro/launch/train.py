@@ -1,0 +1,123 @@
+"""End-to-end training driver.
+
+Production shape: config via ``--arch`` (full or ``--smoke`` reduced),
+deterministic resumable data pipeline, async checkpointing every
+``--ckpt-every`` steps with auto-resume, prefetch overlap, and graceful
+re-planning if the device pool shrank since the checkpoint was written
+(reshard-on-restore; see train/checkpoint.py).
+
+CPU demo (examples/train_lm.py drives this):
+    python -m repro.launch.train --arch qwen3-8b --smoke --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ShapeConfig
+from ..configs.registry import get_config, smoke_config
+from ..data.pipeline import Prefetcher, synth_batch
+from ..models.model import LModel
+from ..models.param import materialize
+from ..train import checkpoint as ckpt
+from ..train import optimizer as O
+from ..train.train_loop import make_train_step
+
+
+def main(argv=None) -> dict:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="qwen3-8b")
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced same-family config (CPU-runnable)")
+    p.add_argument("--steps", type=int, default=100)
+    p.add_argument("--seq", type=int, default=128)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--width", type=int, default=0,
+                   help="override d_model (e.g. ~100M-param demo)")
+    p.add_argument("--layers", type=int, default=0)
+    args = p.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.width:
+        cfg = dataclasses.replace(
+            cfg, d_model=args.width,
+            d_ff=args.width * 4 if cfg.d_ff else 0,
+            head_dim=max(args.width // max(cfg.n_heads, 1), 8)
+            if cfg.n_heads else 0,
+            d_inner=args.width * 2 if cfg.d_inner else 0)
+    if args.layers:
+        pat = len(cfg.attn_pattern)
+        cfg = dataclasses.replace(cfg, n_layers=max(pat, args.layers))
+    cfg = dataclasses.replace(cfg, microbatch_seqs=min(
+        cfg.microbatch_seqs, args.batch))
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+
+    model = LModel(cfg, max_seq=args.seq if cfg.pos_emb == "learned" else 0)
+    params = materialize(model.param_specs(), jax.random.key(args.seed))
+    n_params = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    ocfg = O.OptConfig(peak_lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                       decay_steps=max(args.steps, 2),
+                       algorithm=cfg.optimizer,
+                       state_dtype=cfg.opt_state_dtype)
+    opt_state = O.init_state(ocfg, params)
+    step_fn = jax.jit(make_train_step(model, ocfg), donate_argnums=(0, 1))
+
+    start = 0
+    if args.ckpt_dir:
+        out = ckpt.restore_latest(args.ckpt_dir,
+                                  {"params": params, "opt": opt_state})
+        if out is not None:
+            (tree, start) = out
+            params, opt_state = tree["params"], tree["opt"]
+            print(f"resumed from step {start}")
+
+    pf = Prefetcher(
+        lambda s: {k: jnp.asarray(v) for k, v in
+                   synth_batch(cfg, shape, s, seed=args.seed).items()},
+        start_step=start)
+    writer = None
+    losses = []
+    t0 = time.perf_counter()
+    for step, batch in pf:
+        if step >= args.steps:
+            break
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.perf_counter() - t0
+            tput = (step - start + 1) * args.batch * args.seq / max(dt, 1e-9)
+            print(f"step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e} {tput:,.0f} tok/s",
+                  flush=True)
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            if writer is not None:
+                writer.join()
+            writer = ckpt.save(args.ckpt_dir, step + 1,
+                               {"params": params, "opt": opt_state},
+                               asynchronous=True)
+    pf.close()
+    if writer is not None:
+        writer.join()
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, {"params": params,
+                                              "opt": opt_state})
+        ckpt.prune(args.ckpt_dir, keep=3)
+    return {"params": n_params, "first_loss": losses[0],
+            "last_loss": losses[-1], "steps": len(losses)}
+
+
+if __name__ == "__main__":
+    out = main()
+    print(f"done: {out['steps']} steps, {out['params']:,} params, "
+          f"loss {out['first_loss']:.3f} → {out['last_loss']:.3f}")

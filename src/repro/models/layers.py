@@ -1,0 +1,354 @@
+"""Transformer building blocks shared by all ten assigned architectures.
+
+Sharding-neutral by construction: every op is written so the resolver's
+PartitionSpecs (sharding/partition.py) determine distribution — notably GQA
+uses flat-head projections plus a *static-gather* kv expansion (measured to
+partition cleanly under SPMD, unlike ``jnp.repeat``), and kv projections
+contract over a sharded embed dim (measured 34 % per-device FLOP reduction
+vs. replicated kv compute at mesh 16×16).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .param import param
+
+NEG_INF = -2.0e38  # large-negative fill that survives bf16
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_specs(cfg: ArchConfig, d: int | None = None):
+    d = d or cfg.d_model
+    p = {"scale": param((d,), ("embed",), init="ones", dtype=jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = param((d,), ("embed",), init="zeros", dtype=jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["scale"] + p["bias"]
+    else:
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        y = y * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE (full / partial — chatglm's 2d RoPE ≡ rotary over half the head dim)
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float,
+         pct: float = 1.0) -> jax.Array:
+    """x: (..., S, n, h); positions: broadcastable to (..., S)."""
+    h = x.shape[-1]
+    rot = int(h * pct) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freq  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([out.astype(x.dtype), xp], -1)
+
+
+def learned_pos_specs(cfg: ArchConfig, max_len: int):
+    return param((max_len, cfg.d_model), ("seq", "embed"), scale=0.02)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self + cross), one implementation for train/prefill/decode
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ArchConfig, *, cross: bool = False):
+    D, H, K, h = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": param((D, H, h), ("embed", "heads", "head_dim")),
+        "wk": param((D, K, h), ("embed", "kv_heads", "head_dim")),
+        "wv": param((D, K, h), ("embed", "kv_heads", "head_dim")),
+        "wo": param((H, h, D), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = param((h,), ("head_dim",), init="ones", dtype=jnp.float32)
+        p["k_norm"] = param((h,), ("head_dim",), init="ones", dtype=jnp.float32)
+    return p
+
+
+def _qk_normalize(p, q, k):
+    def rms(x, scale):
+        xf = x.astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+        return (y * scale).astype(x.dtype)
+    return rms(q, p["q_norm"]), rms(k, p["k_norm"])
+
+
+def _kv_expand(cfg: ArchConfig, k: jax.Array) -> jax.Array:
+    """(B,S,K,h) → (B,S,H,h) via static gather (SPMD-clean, no repeat)."""
+    if cfg.n_kv_heads == cfg.n_heads:
+        return k
+    kv_map = jnp.arange(cfg.n_heads, dtype=jnp.int32) // cfg.q_per_kv
+    return jnp.take(k, kv_map, axis=2)
+
+
+def _attn_core(cfg: ArchConfig, q, k, v, q_pos, k_pos, *,
+               causal: bool, window: int) -> jax.Array:
+    """q (B,Sq,H,h); k,v (B,Sk,H,h); *_pos int32 (B,Sq)/(B,Sk); k_pos<0 ⇒ empty."""
+    scale = cfg.head_dim ** -0.5
+    s = jnp.einsum("bqnh,bknh->bnqk", q, k) * scale
+    if cfg.attn_softcap:
+        s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+    mask = (k_pos >= 0)[:, None, None, :]
+    if causal:
+        rel = q_pos[:, None, :, None] - k_pos[:, None, None, :]
+        mask &= rel >= 0
+        if window:
+            mask &= rel < window
+    s = jnp.where(mask, s.astype(jnp.float32), NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    return jnp.einsum("bnqk,bknh->bqnh", p, v)
+
+
+def _attn_local_chunked(cfg: ArchConfig, q, k, v, positions) -> jax.Array:
+    """Block-local sliding-window attention (hillclimb lever).
+
+    Exact for window == chunk: query chunk c attends [chunk c−1 ‖ chunk c]
+    with the (0 ≤ rel < window) mask, so scores shrink from (S,S) to
+    (S, 2W) — an S/2W reduction in score FLOPs and bytes (gemma3 train_4k:
+    4096/2048 = 2× per local layer on top of the 75 % masked waste)."""
+    B, S, H, h = q.shape
+    W = cfg.window
+    nc = S // W
+    qc = q.reshape(B, nc, W, H, h)
+    kc = k.reshape(B, nc, W, H, h)
+    vc = v.reshape(B, nc, W, H, h)
+    pc = positions.reshape(B, nc, W)
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], 1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], 1)
+    p_prev = jnp.concatenate([jnp.full_like(pc[:, :1], -1), pc[:, :-1]], 1)
+    kk = jnp.concatenate([k_prev, kc], 2)          # (B,nc,2W,H,h)
+    vv = jnp.concatenate([v_prev, vc], 2)
+    pp = jnp.concatenate([p_prev, pc], 2)          # (B,nc,2W)
+    s = jnp.einsum("bcqnh,bcknh->bcnqk", qc, kk) * (cfg.head_dim ** -0.5)
+    if cfg.attn_softcap:
+        s = jnp.tanh(s / cfg.attn_softcap) * cfg.attn_softcap
+    rel = pc[:, :, None, :, None] - pp[:, :, None, None, :]
+    mask = (pp >= 0)[:, :, None, None, :] & (rel >= 0) & (rel < W)
+    s = jnp.where(mask, s.astype(jnp.float32), NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bcnqk,bcknh->bcqnh", a, vv)
+    return o.reshape(B, S, H, h)
+
+
+def attention_seq(cfg: ArchConfig, p, x, positions, *, kind: str = "global",
+                  causal: bool = True, kv_x: jax.Array | None = None,
+                  kv_positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention (training / encoder / cross)."""
+    kv_in = x if kv_x is None else kv_x
+    k_pos = positions if kv_positions is None else kv_positions
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", kv_in, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", kv_in, p["wv"])
+    if cfg.qk_norm:
+        q, k = _qk_normalize(p, q, k)
+    if cfg.pos_emb == "rope" and kv_x is None:
+        q = rope(q, positions, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+        k = rope(k, k_pos, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+    k, v = _kv_expand(cfg, k), _kv_expand(cfg, v)
+    window = cfg.window if kind == "local" else 0
+    is_causal = causal and kv_x is None
+    if (kind == "local" and cfg.local_attn_chunked and window
+            and kv_x is None and causal and x.shape[1] % window == 0
+            and x.shape[1] > window):
+        o = _attn_local_chunked(cfg, q, k, v, positions)
+    elif (not is_causal and cfg.attn_q_chunk
+          and x.shape[1] % cfg.attn_q_chunk == 0
+          and x.shape[1] > cfg.attn_q_chunk):
+        # bidirectional/cross attention over long sequences: scan over query
+        # chunks so the (B,H,Sq,Sk) score buffer never materializes whole
+        # (whisper's 32k-frame encoder: peak score memory ÷ Sq/chunk)
+        B, S, H, h = q.shape
+        n = S // cfg.attn_q_chunk
+        qs = q.reshape(B, n, cfg.attn_q_chunk, H, h).swapaxes(0, 1)
+        pcs = positions.reshape(B, n, cfg.attn_q_chunk).swapaxes(0, 1)
+
+        def body(_, qc_pc):
+            qc, pc = qc_pc
+            return None, _attn_core(cfg, qc, k, v, pc, k_pos,
+                                    causal=False, window=0)
+
+        _, oc = jax.lax.scan(body, None, (qs, pcs))
+        o = oc.swapaxes(0, 1).reshape(B, S, H, h)
+    else:
+        o = _attn_core(cfg, q, k, v, positions, k_pos,
+                       causal=is_causal, window=window)
+    return jnp.einsum("bqnh,nhd->bqd", o, p["wo"])
+
+
+# -- cached (serving) path ---------------------------------------------------
+
+
+def attn_cache_specs(cfg: ArchConfig, batch: int, capacity: int,
+                     dtype=jnp.bfloat16):
+    K, h = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": param((batch, capacity, K, h),
+                   ("batch", "cache_seq", "cache_kv", "head_dim"),
+                   dtype=dtype, init="zeros"),
+        "v": param((batch, capacity, K, h),
+                   ("batch", "cache_seq", "cache_kv", "head_dim"),
+                   dtype=dtype, init="zeros"),
+        "pos": param((batch, capacity), ("batch", "cache_seq"),
+                     dtype=jnp.int32, init="zeros", scale=-1.0),
+    }
+
+
+def init_attn_cache(cfg, batch, capacity, dtype=jnp.bfloat16):
+    K, h = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, capacity, K, h), dtype),
+        "v": jnp.zeros((batch, capacity, K, h), dtype),
+        "pos": jnp.full((batch, capacity), -1, jnp.int32),
+    }
+
+
+def attention_append(cfg: ArchConfig, p, x, positions, cache, *,
+                     kind: str = "global", start: jax.Array | int = 0):
+    """Prefill a chunk: attend to [pre-chunk cache ‖ in-chunk k/v], then
+    ring-write the chunk. Concat-before-write keeps local (windowed) layers
+    correct even when the chunk wraps the ring buffer — a ring ``.set`` with
+    in-chunk duplicates would clobber history the early queries still need.
+    Already-written cache slots have ``pos`` entries that the position mask
+    excludes (pos == −1 initially, or stale positions outside the window)."""
+    B, S = x.shape[:2]
+    cap = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+    if cfg.qk_norm:
+        q, k = _qk_normalize(p, q, k)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+        k = rope(k, positions, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+    k_all = jnp.concatenate([cache["k"].astype(q.dtype), k], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(q.dtype), v], axis=1)
+    pos_all = jnp.concatenate([cache["pos"], positions.astype(jnp.int32)], 1)
+    window = cfg.window if kind == "local" else 0
+    o = _attn_core(cfg, q, _kv_expand(cfg, k_all), _kv_expand(cfg, v_all),
+                   positions, pos_all, causal=True, window=window)
+    y = jnp.einsum("bqnh,nhd->bqd", o, p["wo"])
+    # ring-write the chunk; drop all but the last `cap` entries when the
+    # chunk wraps (duplicate-slot .set order is undefined otherwise)
+    if S > cap:
+        k, v = k[:, -cap:], v[:, -cap:]
+        kept_pos = positions[:, -cap:]
+        slots = (jnp.asarray(start) + jnp.arange(S)[-cap:]) % cap
+    else:
+        kept_pos = positions
+        slots = (jnp.asarray(start) + jnp.arange(S)) % cap
+    ck = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    cp = cache["pos"].at[:, slots].set(kept_pos.astype(jnp.int32))
+    return y, {"k": ck, "v": cv, "pos": cp}
+
+
+def attention_decode(cfg: ArchConfig, p, x_t, pos_t, cache, *,
+                     kind: str = "global",
+                     cross_cache: dict | None = None):
+    """One-token decode. x_t (B,1,D); pos_t (B,1) int32 current position."""
+    if cross_cache is not None:  # cross-attn: cache holds encoder k/v
+        q = jnp.einsum("bsd,dnh->bsnh", x_t, p["wq"])
+        if cfg.qk_norm:
+            scale = p["q_norm"]
+            qf = q.astype(jnp.float32)
+            q = (qf * jax.lax.rsqrt(jnp.mean(qf*qf, -1, keepdims=True) + 1e-6)
+                 * scale).astype(q.dtype)
+        o = _attn_core(cfg, q, _kv_expand(cfg, cross_cache["k"].astype(q.dtype)),
+                       _kv_expand(cfg, cross_cache["v"].astype(q.dtype)),
+                       pos_t, cross_cache["pos"], causal=False, window=0)
+        return jnp.einsum("bqnh,nhd->bqd", o, p["wo"]), cache
+    cap = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x_t, p["wq"])
+    k = jnp.einsum("bsd,dkh->bskh", x_t, p["wk"])
+    v = jnp.einsum("bsd,dkh->bskh", x_t, p["wv"])
+    if cfg.qk_norm:
+        q, k = _qk_normalize(p, q, k)
+    if cfg.pos_emb == "rope":
+        q = rope(q, pos_t, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+        k = rope(k, pos_t, theta=cfg.rope_theta, pct=cfg.rotary_pct)
+    slot = pos_t % cap                              # (B,1) ring slot
+    bidx = jnp.arange(x_t.shape[0])[:, None]
+    ck = cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype))
+    cp = cache["pos"].at[bidx, slot].set(pos_t.astype(jnp.int32))
+    window = cfg.window if kind == "local" else 0
+    o = _attn_core(cfg, q, _kv_expand(cfg, ck.astype(q.dtype)),
+                   _kv_expand(cfg, cv.astype(q.dtype)),
+                   pos_t, cp, causal=True, window=window)
+    y = jnp.einsum("bqnh,nhd->bqd", o, p["wo"])
+    return y, {"k": ck, "v": cv, "pos": cp}
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU/GeGLU or plain 2-matrix)
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ArchConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    p = {
+        "w_up": param((D, F), ("embed", "ffn")),
+        "w_down": param((F, D), ("ffn", "embed")),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = param((D, F), ("embed", "ffn"))
+    return p
+
+
+def apply_mlp(cfg: ArchConfig, p, x):
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if cfg.mlp_gated:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = act(g) * u
+    else:
+        u = act(u)
+    return jnp.einsum("bsf,fd->bsd", u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ArchConfig):
+    p = {"tok": param((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                      init="embed")}
+    if not cfg.tie_embeddings:
+        p["unembed"] = param((cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"))
+    return p
+
+
+def embed(cfg: ArchConfig, p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(cfg: ArchConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return jnp.einsum("bsd,dv->bsv", x, w)

@@ -1,0 +1,91 @@
+"""Annotated parameter specs: shape + dtype + logical axes + init.
+
+One tree of ``Annotated`` leaves drives all three materializations:
+  * real init (seeded, for training/tests),
+  * abstract init (ShapeDtypeStruct + NamedSharding, for the dry-run — no
+    allocation ever happens for the full-size configs),
+  * sharding specs (via sharding.partition.resolve).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..sharding import partition as ps
+
+
+@dataclasses.dataclass(frozen=True)
+class Annotated:
+    shape: tuple[int, ...]
+    logical_axes: tuple[str | None, ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"         # 'normal' | 'zeros' | 'ones' | 'embed'
+    scale: float | None = None   # stddev; None → 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical_axes), (
+            self.shape, self.logical_axes)
+
+
+def param(shape, axes, *, dtype=jnp.bfloat16, init="normal", scale=None):
+    return Annotated(tuple(int(s) for s in shape), tuple(axes),
+                     dtype=dtype, init=init, scale=scale)
+
+
+def _is_leaf(x):
+    return isinstance(x, Annotated)
+
+
+def materialize(tree: Any, rng: jax.Array, *, dtype=None) -> Any:
+    """Real parameter init (small/smoke configs)."""
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=_is_leaf)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for ann, key in zip(leaves, keys):
+        dt = dtype or ann.dtype
+        if ann.init == "zeros":
+            out.append(jnp.zeros(ann.shape, dt))
+        elif ann.init == "ones":
+            out.append(jnp.ones(ann.shape, dt))
+        else:
+            fan_in = ann.shape[0] if ann.init == "embed" else int(
+                np.prod(ann.shape[:-1]) or 1)
+            std = ann.scale if ann.scale is not None else fan_in ** -0.5
+            out.append((jax.random.normal(key, ann.shape, jnp.float32)
+                        * std).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract(tree: Any, mesh, rules, *, fsdp: bool = True) -> Any:
+    """ShapeDtypeStruct tree with resolved NamedShardings (dry-run path)."""
+    info = ps.MeshInfo.from_mesh(mesh)
+
+    def one(ann: Annotated):
+        spec = ps.resolve(ann.shape, ann.logical_axes, info, rules, fsdp=fsdp)
+        return jax.ShapeDtypeStruct(
+            ann.shape, ann.dtype,
+            sharding=jax.sharding.NamedSharding(mesh, spec))
+
+    return jax.tree.map(one, tree, is_leaf=_is_leaf)
+
+
+def specs(tree: Any, mesh, rules, *, fsdp: bool = True) -> Any:
+    info = ps.MeshInfo.from_mesh(mesh)
+    return jax.tree.map(
+        lambda ann: ps.resolve(ann.shape, ann.logical_axes, info, rules,
+                               fsdp=fsdp),
+        tree, is_leaf=_is_leaf)
+
+
+def nbytes(tree: Any) -> int:
+    return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+               for a in jax.tree.leaves(tree, is_leaf=_is_leaf))
+
+
+def count(tree: Any) -> int:
+    return sum(int(np.prod(a.shape))
+               for a in jax.tree.leaves(tree, is_leaf=_is_leaf))

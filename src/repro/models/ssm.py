@@ -1,0 +1,187 @@
+"""State-space / linear-recurrent mixers: Mamba-1 (falcon-mamba) and RG-LRU
+(recurrentgemma).
+
+Both use a diagonal linear recurrence h_t = a_t ⊙ h_{t−1} + b_t, evaluated
+with ``jax.lax.associative_scan`` over the sequence in training/prefill
+(work-efficient parallel scan — the TPU-friendly formulation) and a single
+fused step in decode. Causal depthwise conv keeps a (d_conv−1)-tap state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .param import param
+
+# ---------------------------------------------------------------------------
+# shared: diagonal linear recurrence + causal depthwise conv
+# ---------------------------------------------------------------------------
+
+
+def linear_recurrence(a, b, h0=None):
+    """h_t = a_t ⊙ h_{t−1} + b_t along axis 1 (seq). a,b: (B,S,...)."""
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def causal_conv_specs(width: int, channels: int):
+    return {
+        "w": param((width, channels), ("state", "ffn")),
+        "b": param((channels,), ("ffn",), init="zeros"),
+    }
+
+
+def causal_conv_seq(p, x, state=None):
+    """x (B,S,C); state (B,W−1,C) carried taps. Returns (y, new_state)."""
+    W = p["w"].shape[0]
+    pad = state if state is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W−1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * p["w"][i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return y + p["b"], new_state
+
+
+def causal_conv_step(p, x_t, state):
+    """x_t (B,1,C); state (B,W−1,C)."""
+    W = p["w"].shape[0]
+    taps = jnp.concatenate([state, x_t], axis=1)    # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", taps, p["w"]) + p["b"]
+    return y[:, None], taps[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b): d_inner = 2·d_model, state N, dt_rank = D/16
+# ---------------------------------------------------------------------------
+
+
+def mamba_specs(cfg: ArchConfig):
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    return {
+        "in_proj": param((D, 2 * Di), ("embed", "ffn")),
+        "conv": causal_conv_specs(cfg.d_conv, Di),
+        "x_proj": param((Di, R + 2 * N), ("ffn", "state")),
+        "dt_proj": param((R, Di), ("state", "ffn")),
+        "dt_bias": param((Di,), ("ffn",), init="zeros"),
+        "A_log": param((Di, N), ("ffn", "state"), init="ones",
+                       dtype=jnp.float32),
+        "D": param((Di,), ("ffn",), init="ones", dtype=jnp.float32),
+        "out_proj": param((Di, D), ("ffn", "embed")),
+    }
+
+
+def _mamba_core(cfg, p, xc):
+    """Shared projections: xc (B,S,Di) post-conv. Returns (dt, A, Bm, Cm)."""
+    N, R = cfg.ssm_state, cfg.dt_rank
+    xdb = jnp.einsum("bsc,cr->bsr", xc, p["x_proj"])
+    dt, Bm, Cm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rc->bsc", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))          # (B,S,Di)
+    A = -jnp.exp(p["A_log"])                         # (Di,N)
+    return dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def mamba_seq(cfg: ArchConfig, p, x, *, conv_state=None, h0=None):
+    """Returns (y, (conv_state, h_last))."""
+    xz = jnp.einsum("bsd,dc->bsc", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = causal_conv_seq(p["conv"], xin, conv_state)
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _mamba_core(cfg, p, xc)
+    decay = jnp.exp(dt[..., None] * A)               # (B,S,Di,N)
+    drive = (dt * xc.astype(jnp.float32))[..., None] * Bm[:, :, None, :]
+    h = linear_recurrence(decay, drive, h0)          # (B,S,Di,N) f32
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cm) + p["D"] * xc.astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+    return out, (conv_state, h[:, -1])
+
+
+def mamba_decode(cfg: ArchConfig, p, x_t, state):
+    """x_t (B,1,D); state = (conv_state (B,W−1,Di), h (B,Di,N))."""
+    conv_state, h = state
+    xz = jnp.einsum("bsd,dc->bsc", x_t, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = causal_conv_step(p["conv"], xin, conv_state)
+    xc = jax.nn.silu(xc)
+    dt, A, Bm, Cm = _mamba_core(cfg, p, xc)
+    decay = jnp.exp(dt[:, 0, :, None] * A)           # (B,Di,N)
+    drive = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = decay * h + drive
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0]) + p["D"] * xc[:, 0].astype(jnp.float32)
+    y = (y.astype(x_t.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    out = jnp.einsum("bsc,cd->bsd", y, p["out_proj"])
+    return out, (conv_state, h)
+
+
+def mamba_state_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (recurrentgemma): gated diagonal LRU + temporal conv
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def rglru_specs(cfg: ArchConfig):
+    D, Di = cfg.d_model, cfg.d_inner
+    return {
+        "in_proj": param((D, Di), ("embed", "ffn")),
+        "gate_proj": param((D, Di), ("embed", "ffn")),
+        "conv": causal_conv_specs(cfg.d_conv, Di),
+        "w_input_gate": param((Di, Di), ("ffn", "state")),
+        "w_rec_gate": param((Di, Di), ("ffn", "state")),
+        "lambda": param((Di,), ("ffn",), init="ones", dtype=jnp.float32),
+        "out_proj": param((Di, D), ("ffn", "embed")),
+    }
+
+
+def _rglru_gates(p, xc):
+    i_t = jax.nn.sigmoid(jnp.einsum("bsc,cn->bsn", xc, p["w_input_gate"])
+                         .astype(jnp.float32))
+    r_t = jax.nn.sigmoid(jnp.einsum("bsc,cn->bsn", xc, p["w_rec_gate"])
+                         .astype(jnp.float32))
+    log_a = -_RGLRU_C * r_t * jax.nn.softplus(p["lambda"])
+    a = jnp.exp(log_a)
+    gated_x = i_t * xc.astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * gated_x
+    return a, b
+
+
+def rglru_seq(cfg: ArchConfig, p, x, *, conv_state=None, h0=None):
+    u = jnp.einsum("bsd,dc->bsc", x, p["in_proj"])
+    z = jnp.einsum("bsd,dc->bsc", x, p["gate_proj"])
+    xc, conv_state = causal_conv_seq(p["conv"], u, conv_state)
+    a, b = _rglru_gates(p, xc)
+    h = linear_recurrence(a, b, h0)                  # (B,S,Di) f32
+    y = h.astype(x.dtype) * jax.nn.gelu(z)
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"]), (conv_state, h[:, -1])
+
+
+def rglru_decode(cfg: ArchConfig, p, x_t, state):
+    conv_state, h = state
+    u = jnp.einsum("bsd,dc->bsc", x_t, p["in_proj"])
+    z = jnp.einsum("bsd,dc->bsc", x_t, p["gate_proj"])
+    xc, conv_state = causal_conv_step(p["conv"], u, conv_state)
+    a, b = _rglru_gates(p, xc)
+    h = a[:, 0] * h + b[:, 0]
+    y = (h.astype(x_t.dtype) * jax.nn.gelu(z[:, 0]))[:, None]
+    return jnp.einsum("bsc,cd->bsd", y, p["out_proj"]), (conv_state, h)
+
+
+def rglru_state_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16):
+    return (jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+            jnp.zeros((batch, cfg.d_inner), jnp.float32))

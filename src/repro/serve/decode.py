@@ -1,0 +1,126 @@
+"""Serving: prefill + decode steps and a continuous-batching-lite scheduler.
+
+``serve_step`` (one token for every active slot) is what the decode-shape
+dry-run cells lower. The scheduler keeps a fixed slot pool; finished
+requests free their slot and queued requests prefill into it — the same
+slot/stream structure a production engine (vLLM-style) uses, scoped to what
+the paper's runtime-scheduler abstraction needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models.model import LModel
+
+
+def make_serve_fns(model: LModel, *, temperature: float = 0.0):
+    cfg = model.cfg
+
+    def prefill_step(params, tokens, cache):
+        logits, cache = model.prefill(params, tokens, cache,
+                                      chunk=min(cfg.prefill_chunk,
+                                                tokens.shape[1]))
+        return logits, cache
+
+    def serve_step(params, tokens_t, cache):
+        """One decode step for the whole batch of slots."""
+        logits, cache = model.decode_step(params, tokens_t, cache)
+        if temperature == 0.0:
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            nxt = jnp.argmax(logits / temperature, axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, cache
+
+    return prefill_step, serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+# Cache leaves under 'blocks' are group-stacked: (n_groups, B, ...) — the
+# batch axis is 1 there and 0 everywhere else ('rem', 'length').
+def _batch_axis(path) -> int:
+    return 1 if any(getattr(k, "key", None) == "blocks" for k in path) else 0
+
+
+def slot_view(cache, slot: int):
+    """Extract a batch-1 view of one slot from the batched cache."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, c: jax.lax.dynamic_slice_in_dim(c, slot, 1,
+                                                  _batch_axis(p)), cache)
+
+
+def slot_write(cache, one, slot: int):
+    """Write a batch-1 cache back into the batched cache at ``slot``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, full, single: jax.lax.dynamic_update_slice_in_dim(
+            full, single.astype(full.dtype), slot, _batch_axis(p)),
+        cache, one)
+
+
+class BatchScheduler:
+    """Continuous-batching-lite over a fixed slot pool (host-side control)."""
+
+    def __init__(self, model: LModel, params, *, slots: int, capacity: int):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.capacity = capacity
+        self.prefill_step, self.serve_step = make_serve_fns(model)
+        self.cache = model.init_cache(slots, capacity)
+        self.active: dict[int, Request | None] = {i: None for i in range(slots)}
+        self.last = jnp.zeros((slots, 1), jnp.int32)
+        self.queue: list[Request] = []
+        self.done: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot, occupant in self.active.items():
+            if occupant is None and self.queue:
+                req = self.queue.pop(0)
+                # per-slot prefill into a fresh batch-1 cache, then write the
+                # slot back (path-aware: 'blocks' leaves batch on axis 1)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                slot_cache = self.model.init_cache(1, self.capacity)
+                logits, slot_cache = self.prefill_step(
+                    self.params, toks, slot_cache)
+                self.cache = slot_write(self.cache, slot_cache, slot)
+                nxt = int(jnp.argmax(logits, -1)[0])
+                req.out.append(nxt)
+                self.last = self.last.at[slot, 0].set(nxt)
+                self.active[slot] = req
+
+    def step(self):
+        """One global decode step; admits/evicts around it."""
+        self._admit()
+        if all(v is None for v in self.active.values()):
+            return False
+        nxt, _, self.cache = self.serve_step(self.params, self.last,
+                                             self.cache)
+        self.last = nxt
+        for slot, req in list(self.active.items()):
+            if req is None:
+                continue
+            req.out.append(int(nxt[slot, 0]))
+            if len(req.out) >= req.max_new:
+                self.done.append(req)
+                self.active[slot] = None
+        return True
+
+    def run(self):
+        while self.step() or self.queue:
+            pass
+        return self.done

@@ -1,0 +1,248 @@
+"""Optimizers: AdamW (dtype-configurable states) and Adafactor.
+
+States inherit the parameter sharding (ZeRO: with params FSDP-sharded over
+'data' and TP-sharded over 'model', states are fully sharded across all 256
+chips). ``state_dtype='bfloat16'`` halves optimizer HBM for the 314 B-param
+MoE (see DESIGN.md §5 memory budget); updates always compute in fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    algorithm: str = "adamw"      # 'adamw' | 'adafactor'
+
+
+def lr_at(cfg: OptConfig, step) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.peak_lr * (cfg.min_lr_ratio
+                         + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _factored_shapes(shape: tuple[int, ...]):
+    """Adafactor row/col factor shapes for ndim≥2 leaves (last two dims)."""
+    return shape[:-1], shape[:-2] + shape[-1:]
+
+
+def init_state(cfg: OptConfig, params: Any) -> dict:
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.algorithm == "adafactor":
+        def vr(p):
+            return (jnp.zeros(_factored_shapes(p.shape)[0], jnp.float32)
+                    if p.ndim >= 2 else jnp.zeros(p.shape, jnp.float32))
+
+        def vc(p):
+            return (jnp.zeros(_factored_shapes(p.shape)[1], jnp.float32)
+                    if p.ndim >= 2 else jnp.zeros((), jnp.float32))
+
+        return {"vr": jax.tree.map(vr, params),
+                "vc": jax.tree.map(vc, params),
+                "step": jnp.zeros((), jnp.int32)}
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(cfg: OptConfig, abstract_params: Any) -> dict:
+    """ShapeDtypeStruct state tree matching the params' shardings (dry-run)."""
+    dt = jnp.dtype(cfg.state_dtype)
+    if cfg.algorithm == "adafactor":
+        # factored states are tiny (≤ ~13 MB) — replicate them
+        def _rep(p, shp):
+            sh = jax.sharding.NamedSharding(p.sharding.mesh,
+                                            jax.sharding.PartitionSpec())
+            return jax.ShapeDtypeStruct(shp, jnp.float32, sharding=sh)
+
+        def vr(p):
+            return _rep(p, _factored_shapes(p.shape)[0]
+                        if len(p.shape) >= 2 else p.shape)
+
+        def vc(p):
+            return _rep(p, _factored_shapes(p.shape)[1]
+                        if len(p.shape) >= 2 else ())
+
+        return {"vr": jax.tree.map(vr, abstract_params),
+                "vc": jax.tree.map(vc, abstract_params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def like(p):
+        return jax.ShapeDtypeStruct(p.shape, dt, sharding=p.sharding)
+
+    return {
+        "m": jax.tree.map(like, abstract_params),
+        "v": jax.tree.map(like, abstract_params),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def _sumsq(x: jax.Array) -> jax.Array:
+    """Σx² in fp32 without a full-leaf fp32 copy: big stacked leaves reduce
+    slice-by-slice (measured ~1.6 GiB/leaf fp32 transients otherwise)."""
+    if x.ndim >= 3 and x.shape[0] > 1 and x.size > (1 << 24):
+        def body(i, acc):
+            xi = jax.lax.dynamic_index_in_dim(x, i, 0, keepdims=False)
+            return acc + jnp.sum(jnp.square(xi.astype(jnp.float32)))
+        return jax.lax.fori_loop(0, x.shape[0], body,
+                                 jnp.zeros((), jnp.float32))
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(_sumsq(x) for x in jax.tree.leaves(tree)))
+
+
+def adafactor_update(cfg: OptConfig, params: Any, grads: Any, state: dict,
+                     grad_scale: float = 1.0) -> tuple[Any, dict, dict]:
+    """Adafactor (β1=0, factored second moment) — the memory-frugal choice
+    for 100 B+ models: state is O(rows+cols) per matrix instead of 2×params.
+    Slice-chunked over the layer dim like AdamW (same fp32-copy hazard)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads) * grad_scale
+    scale = grad_scale * jnp.minimum(
+        1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8   # Adafactor β2 schedule
+    eps = 1e-30
+
+    def upd(p, g, vr, vc):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            nvr = decay * vr + (1 - decay) * jnp.mean(g2, axis=-1)
+            nvc = decay * vc + (1 - decay) * jnp.mean(g2, axis=-2)
+            mean_r = jnp.mean(nvr, axis=-1, keepdims=True)
+            rhat = (nvr / jnp.maximum(mean_r, eps))[..., None]
+            chat = nvc[..., None, :]
+            u = g * jax.lax.rsqrt(jnp.maximum(rhat * chat, eps))
+        else:
+            nvr = decay * vr + (1 - decay) * g2
+            nvc = vc
+            u = g * jax.lax.rsqrt(jnp.maximum(nvr, eps))
+        # update clipping (RMS ≤ 1) per Adafactor
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32) - lr * (u + cfg.weight_decay
+                                              * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), nvr, nvc
+
+    CHUNK_ELEMS = 1 << 24
+
+    def upd_leaf(p, g, vr, vc):
+        if p.ndim >= 3 and p.shape[0] > 1 and p.size > CHUNK_ELEMS:
+            def body(i, carry):
+                cp, cvr, cvc = carry
+                pi = jax.lax.dynamic_index_in_dim(cp, i, 0, keepdims=False)
+                gi = jax.lax.dynamic_index_in_dim(g, i, 0, keepdims=False)
+                ri = jax.lax.dynamic_index_in_dim(cvr, i, 0, keepdims=False)
+                ci = jax.lax.dynamic_index_in_dim(cvc, i, 0, keepdims=False)
+                np_, nr, nc = upd(pi, gi, ri, ci)
+                return (jax.lax.dynamic_update_index_in_dim(cp, np_, i, 0),
+                        jax.lax.dynamic_update_index_in_dim(cvr, nr, i, 0),
+                        jax.lax.dynamic_update_index_in_dim(cvc, nc, i, 0))
+            return jax.lax.fori_loop(0, p.shape[0], body, (p, vr, vc))
+        return upd(p, g, vr, vc)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_r = jax.tree.leaves(state["vr"])
+    flat_c = jax.tree.leaves(state["vc"])
+    out = [upd_leaf(p, g, r, c) for p, g, r, c in
+           zip(flat_p, flat_g, flat_r, flat_c)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "vr": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "vc": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def update(cfg: OptConfig, params: Any, grads: Any, state: dict,
+           grad_scale: float = 1.0):
+    if cfg.algorithm == "adafactor":
+        return adafactor_update(cfg, params, grads, state, grad_scale)
+    return adamw_update(cfg, params, grads, state, grad_scale)
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any, state: dict,
+                 grad_scale: float = 1.0) -> tuple[Any, dict, dict]:
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads) * grad_scale
+    scale = grad_scale * jnp.minimum(
+        1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    # Giant stacked leaves (layers-stacked expert weights: 10⁸+ elements)
+    # update in place via fori_loop + dynamic_update_slice over the layer
+    # dim: the donated param/state buffers are read-sliced and written back
+    # at the same index, so XLA needs no full-leaf fp32 copies (measured
+    # 26 GiB/device of such copies on the 314 B MoE with map/plain forms).
+    CHUNK_ELEMS = 1 << 24
+
+    def upd_leaf(p, g, m, v):
+        if p.ndim >= 3 and p.shape[0] > 1 and p.size > CHUNK_ELEMS:
+            def body(i, carry):
+                cp, cm, cv = carry
+                pi = jax.lax.dynamic_index_in_dim(cp, i, 0, keepdims=False)
+                gi = jax.lax.dynamic_index_in_dim(g, i, 0, keepdims=False)
+                mi = jax.lax.dynamic_index_in_dim(cm, i, 0, keepdims=False)
+                vi = jax.lax.dynamic_index_in_dim(cv, i, 0, keepdims=False)
+                np_, nm, nv = upd(pi, gi, mi, vi)
+                return (jax.lax.dynamic_update_index_in_dim(cp, np_, i, 0),
+                        jax.lax.dynamic_update_index_in_dim(cm, nm, i, 0),
+                        jax.lax.dynamic_update_index_in_dim(cv, nv, i, 0))
+            return jax.lax.fori_loop(0, p.shape[0], body, (p, m, v))
+        return upd(p, g, m, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd_leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_state = {
+        "m": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "v": jax.tree.unflatten(treedef, [o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,76 @@
+"""Training step: microbatch gradient accumulation + AdamW.
+
+The microbatch scan is the LM-side incarnation of the paper's *pipelines*
+knob: ``n_micro = global_batch / microbatch_seqs`` chunks stream through the
+same compiled layer pipeline, bounding live activation memory exactly like
+the paper's edge-block streaming bounds BRAM. The scan also hides grad
+all-reduce latency behind the next microbatch's compute (XLA overlaps the
+accumulated-gradient dataflow).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.model import LModel
+from . import optimizer as O
+
+
+def microbatches(cfg: ArchConfig, batch: dict) -> tuple[dict, int]:
+    """Reshape (B, ...) leaves to (M, mb, ...)."""
+    B = batch["tokens"].shape[0]
+    mb = min(cfg.microbatch_seqs, B)
+    while B % mb:
+        mb -= 1
+    M = B // mb
+    return jax.tree.map(
+        lambda x: x.reshape(M, mb, *x.shape[1:]), batch), M
+
+
+def make_train_step(model: LModel, opt_cfg: O.OptConfig,
+                    grad_specs=None):
+    """``grad_specs`` (a PartitionSpec tree matching params) pins the
+    gradient accumulator to the parameter sharding — without it XLA may
+    carry data-axis-replicated gradients through the microbatch scan
+    (measured +36 GiB/device on the 314 B MoE)."""
+    cfg = model.cfg
+    accum_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+    def _pin(tree):
+        if grad_specs is None:
+            return tree
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            grad_specs)
+
+    def train_step(params, opt_state, batch):
+        mbs, M = microbatches(cfg, batch)
+
+        def mb_body(carry, mb):
+            loss_sum, gacc = carry
+            loss, grads = jax.value_and_grad(model.loss_fn)(params, mb)
+            gacc = _pin(jax.tree.map(
+                lambda a, g: a + g.astype(accum_dt), gacc, grads))
+            return (loss_sum + loss, gacc), None
+
+        gacc0 = _pin(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, accum_dt), params))
+        (loss_sum, gacc), _ = jax.lax.scan(
+            mb_body, (jnp.zeros((), jnp.float32), gacc0), mbs)
+        # 1/M folds into the optimizer's scalar gradient scale — a tree-wide
+        # divide materializes full-leaf fp32 temporaries on big stacks
+        new_params, new_state, metrics = O.update(
+            opt_cfg, params, gacc, opt_state, grad_scale=1.0 / M)
+        metrics = dict(metrics, loss=loss_sum / M)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: LModel):
+    def eval_step(params, batch):
+        return model.loss_fn(params, batch)
+    return eval_step

@@ -1,0 +1,33 @@
+import subprocess
+import sys
+
+import pytest
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Multi-device behaviour is tested via subprocesses (run_in_subprocess).
+
+
+def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 300):
+    """Run a snippet under --xla_force_host_platform_device_count."""
+    prelude = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = "
+        f"'--xla_force_host_platform_device_count={devices}'\n"
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", prelude + code],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"},
+        cwd="/root/repo",
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{proc.stdout}\n"
+            f"STDERR:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_in_subprocess

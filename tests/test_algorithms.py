@@ -1,0 +1,194 @@
+"""Algorithm layer vs. plain-python oracles; dense ≡ sparse backends."""
+import collections
+
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import graph as G
+
+
+def _bfs_oracle(src, dst, n, root):
+    adj = collections.defaultdict(list)
+    for s, d in zip(src, dst):
+        adj[int(s)].append(int(d))
+    dist = {root: 0}
+    q = collections.deque([root])
+    while q:
+        v = q.popleft()
+        for u in adj[v]:
+            if u not in dist:
+                dist[u] = dist[v] + 1
+                q.append(u)
+    return dist
+
+
+def _sssp_oracle(src, dst, w, n, root):
+    import heapq
+    adj = collections.defaultdict(list)
+    for s, d, ww in zip(src, dst, w):
+        adj[int(s)].append((int(d), float(ww)))
+    dist = {root: 0.0}
+    h = [(0.0, root)]
+    while h:
+        dv, v = heapq.heappop(h)
+        if dv > dist.get(v, np.inf):
+            continue
+        for u, ww in adj[v]:
+            nd = dv + ww
+            if nd < dist.get(u, np.inf):
+                dist[u] = nd
+                heapq.heappush(h, (nd, u))
+    return dist
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = G.rmat_edges(300, 3000, seed=7)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, len(src)).astype(np.float32)
+    return G.from_edge_list(src, dst, num_vertices=300, weights=w), src, dst, w
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_bfs_matches_oracle(graph, backend):
+    g, src, dst, _ = graph
+    levels, iters, rep = alg.bfs(g, root=0, backend=backend)
+    lv = np.asarray(levels)
+    oracle = _bfs_oracle(src, dst, 300, 0)
+    assert int((lv < alg.INT_MAX).sum()) == len(oracle)
+    for k, v in oracle.items():
+        assert lv[k] == v, (k, lv[k], v)
+    assert rep.gather_module == "plus_one"
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_sssp_matches_oracle(graph, backend):
+    g, src, dst, w = graph
+    dist, _, _ = alg.sssp(g, root=0, backend=backend)
+    dv = np.asarray(dist)
+    oracle = _sssp_oracle(src, dst, w, 300, 0)
+    assert int(np.isfinite(dv).sum()) == len(oracle)
+    for k, v in oracle.items():
+        np.testing.assert_allclose(dv[k], v, rtol=1e-5)
+
+
+def test_pagerank_properties(graph):
+    g, *_ = graph
+    r, n, rep = alg.pagerank(g, iters=30)
+    rv = np.asarray(r)
+    assert (rv > 0).all()
+    # damped PR fixed point: r = 0.15 + 0.85 * A_norm^T r (allowing dangling
+    # mass loss, sum is bounded by |V|)
+    assert 0 < rv.sum() <= g.num_vertices + 1e-3
+    assert rep.gather_module == "div_deg"
+    # power-law graph: hubs concentrate rank
+    assert rv.max() > 5 * rv.mean()
+
+
+def test_wcc_is_valid_partition(graph):
+    g, src, dst, _ = graph
+    labels, _, _ = alg.wcc(g)
+    lab = np.asarray(labels)
+    # endpoints of every edge share a component
+    assert (lab[src] == lab[dst]).all()
+    # union-find oracle count
+    parent = list(range(300))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for s, d in zip(src, dst):
+        parent[find(int(s))] = find(int(d))
+    n_oracle = len({find(i) for i in range(300)})
+    assert len(np.unique(lab)) == n_oracle
+
+
+@pytest.mark.parametrize("backend", ["dense", "sparse"])
+def test_spmv_matches_matmul(graph, backend):
+    g, src, dst, w = graph
+    x = np.random.default_rng(1).normal(size=300).astype(np.float32)
+    y, _ = alg.spmv(g, x, backend=backend)
+    A = np.zeros((300, 300), np.float32)
+    for s, d, ww in zip(src, dst, w):
+        A[s, d] += ww
+    np.testing.assert_allclose(np.asarray(y), A.T @ x, rtol=2e-4, atol=2e-4)
+
+
+def test_dense_sparse_backends_agree(graph):
+    g, *_ = graph
+    l1, _, _ = alg.bfs(g, root=3, backend="dense")
+    l2, _, _ = alg.bfs(g, root=3, backend="sparse")
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_in_degrees(graph):
+    g, src, dst, _ = graph
+    deg = np.asarray(alg.in_degrees(g))
+    np.testing.assert_allclose(deg, np.bincount(dst, minlength=300))
+
+
+def test_traversed_edges(graph):
+    g, src, dst, _ = graph
+    levels, _, _ = alg.bfs(g, root=0)
+    te = alg.traversed_edges(g, levels)
+    oracle = _bfs_oracle(src, dst, 300, 0)
+    deg = np.bincount(src, minlength=300)
+    assert te == sum(int(deg[v]) for v in oracle)
+
+
+def test_k_core_matches_peeling_oracle():
+    src, dst = G.rmat_edges(200, 1600, seed=3)
+    g = G.from_edge_list(src, dst, num_vertices=200)
+    mask, iters = alg.k_core(g, k=4)
+    adj = [[] for _ in range(200)]
+    for s, d in zip(src, dst):
+        adj[s].append(d)
+        adj[d].append(s)
+    alive = np.ones(200, bool)
+    changed = True
+    while changed:
+        changed = False
+        cnt = [sum(alive[u] for u in adj[v]) if alive[v] else 0
+               for v in range(200)]
+        for v in range(200):
+            if alive[v] and cnt[v] < 4:
+                alive[v] = False
+                changed = True
+    assert (mask == alive).all()
+    assert iters >= 1
+
+
+def test_community_partition_no_cross_edges():
+    from repro.core import preprocess as pre
+    # 4 disjoint cliques → components must not be split across parts
+    src, dst = [], []
+    for c in range(4):
+        base = c * 10
+        for i in range(10):
+            for j in range(10):
+                if i != j:
+                    src.append(base + i)
+                    dst.append(base + j)
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    parts = pre.partition_edges(src, dst, 2, strategy="community")
+    allidx = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(allidx, np.arange(len(src)))
+    g = G.from_edge_list(src, dst, num_vertices=40)
+    labels, _, _ = alg.wcc(g)
+    labels = np.asarray(labels)
+    for eids in parts:
+        if len(eids) == 0:
+            continue
+        # every part's edges' endpoints agree on the component, and no
+        # component is split across two parts
+        comp_set = set(labels[src[eids]].tolist())
+        for other in parts:
+            if other is eids or len(other) == 0:
+                continue
+            assert comp_set.isdisjoint(set(labels[src[other]].tolist()))
+    # balanced: two cliques per part
+    assert sorted(len(p) for p in parts) == [180, 180]

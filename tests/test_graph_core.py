@@ -1,0 +1,155 @@
+"""Graph data structures, operators, and preprocessing."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import graph as G
+from repro.core import operators as ops
+from repro.core import preprocess as pre
+
+
+def small_graph():
+    src = np.array([0, 0, 1, 2, 2, 3], np.int32)
+    dst = np.array([1, 2, 2, 0, 3, 1], np.int32)
+    w = np.array([1., 2., 3., 4., 5., 6.], np.float32)
+    return G.from_edge_list(src, dst, num_vertices=4, weights=w)
+
+
+def test_csr_roundtrip():
+    g = small_graph()
+    src, dst, w = G.to_coo(g)
+    g2 = G.from_edge_list(src, dst, num_vertices=4, weights=w)
+    np.testing.assert_array_equal(np.asarray(g.edge_offsets),
+                                  np.asarray(g2.edge_offsets))
+    np.testing.assert_array_equal(np.asarray(g.edges_dst),
+                                  np.asarray(g2.edges_dst))
+
+
+def test_degrees_and_accessors():
+    g = small_graph()
+    np.testing.assert_array_equal(np.asarray(g.out_degrees), [2, 1, 2, 1])
+    assert int(ops.get_out_degree(g, 0)) == 2
+    start, end = ops.get_edge_offset(g, 2)
+    assert int(end) - int(start) == 2
+    assert int(ops.get_edge_dst_id(g, 0)) == 1
+    assert float(ops.get_edge_weight(g, 1)) == 2.0
+
+
+def test_edge_src_search():
+    g = small_graph()
+    src, _, _ = G.to_coo(g)
+    for e in range(g.num_edges):
+        assert int(ops.get_edge_src_id(g, e)) == src[e]
+
+
+def test_neighbor_lists_padded():
+    g = small_graph()
+    nbr = ops.get_dest_v_list(g, 0, max_degree=4)
+    got = set(int(x) for x in np.asarray(nbr) if x != G.PAD)
+    assert got == {1, 2}
+    assert int(np.asarray(nbr[2])) == int(G.PAD)
+
+
+def test_reverse():
+    g = small_graph()
+    grev = G.reverse(g)
+    src, dst, _ = G.to_coo(g)
+    rsrc, rdst, _ = G.to_coo(grev)
+    assert sorted(zip(src, dst)) == sorted(zip(rdst, rsrc))
+
+
+def test_receive_send_reduce():
+    g = small_graph()
+    vals = jnp.arange(4.0)
+    nbr = ops.get_dest_v_list(g, 0, 4)
+    r = ops.receive(vals, nbr, pad_value=0)
+    assert float(r.sum()) == 3.0  # neighbors 1, 2
+    y = ops.send(jnp.zeros(4), jnp.asarray([1, 1, G.PAD]),
+                 jnp.asarray([2.0, 3.0, 9.0]))
+    assert float(y[1]) == 5.0 and float(y.sum()) == 5.0
+    assert float(ops.reduce_messages(jnp.asarray([3., 1., 2.]), "min")) == 1.
+
+
+def test_bucketize_covers_all_edges():
+    rng = np.random.default_rng(0)
+    src, dst = G.rmat_edges(500, 4000, seed=3)
+    g = G.from_edge_list(src, dst, num_vertices=500)
+    b = G.bucketize(g)
+    total = 0
+    pairs = set()
+    for sid, dm in zip(b.src_ids, b.dst):
+        sid = np.asarray(sid)
+        dm = np.asarray(dm)
+        for i in range(len(sid)):
+            for j in dm[i][dm[i] != int(G.PAD)]:
+                pairs.add((int(sid[i]), int(j)))
+                total += 1
+    assert total == g.num_edges
+    assert pairs == set(zip(src.tolist(), dst.tolist()))
+
+
+def test_rmat_shape_and_powerlaw():
+    src, dst = G.rmat_edges(1_005, 25_571, seed=0)
+    assert len(src) == 25_571
+    assert src.max() < 1_005 and dst.max() < 1_005
+    deg = np.bincount(src, minlength=1005)
+    # power-law-ish: max degree far above mean
+    assert deg.max() > 10 * deg.mean()
+
+
+def test_layouts():
+    src = np.array([0, 1, 2], np.int32)
+    dst = np.array([1, 2, 0], np.int32)
+    csr = pre.layout(src, dst, "csr", num_vertices=3)
+    csc = pre.layout(src, dst, "csc", num_vertices=3)
+    s1, d1, _ = G.to_coo(csr)
+    s2, d2, _ = G.to_coo(csc)
+    assert sorted(zip(s1, d1)) == sorted(zip(d2, s2))
+    ell = pre.layout(src, dst, "ell", num_vertices=3)
+    assert ell.num_edges == 3
+
+
+def test_partition_strategies():
+    src, dst = G.rmat_edges(200, 2000, seed=1)
+    for strat in ("block", "dst_hash", "hybrid"):
+        parts = pre.partition_edges(src, dst, 4, strategy=strat)
+        allidx = np.sort(np.concatenate(parts))
+        np.testing.assert_array_equal(allidx, np.arange(2000))
+
+
+def test_reorder_preserves_structure():
+    src, dst = G.rmat_edges(100, 600, seed=2)
+    for strat in ("degree", "bfs", "identity"):
+        ns, nd, perm = pre.reorder(src, dst, 100, strategy=strat)
+        assert sorted(np.bincount(ns, minlength=100)) == \
+            sorted(np.bincount(src, minlength=100))
+        # relabeling is consistent
+        np.testing.assert_array_equal(perm[src], ns)
+        np.testing.assert_array_equal(perm[dst], nd)
+
+
+def test_fifo_roundtrip(tmp_path):
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 0], np.int32)
+    p = str(tmp_path / "g.npz")
+    pre.write_edge_list(p, src, dst)
+    s2, d2 = pre.read_edge_list(p)
+    np.testing.assert_array_equal(src, s2)
+    p2 = str(tmp_path / "g.txt")
+    pre.write_edge_list(p2, src, dst)
+    s3, d3 = pre.read_edge_list(p2)
+    np.testing.assert_array_equal(dst, d3)
+
+
+def test_paper_graph_sizes(tmp_path):
+    g = pre.load_paper_graph("email-Eu-core", cache_dir=str(tmp_path))
+    assert g.num_vertices == 1_005 and g.num_edges == 25_571
+    # cached reload identical
+    g2 = pre.load_paper_graph("email-Eu-core", cache_dir=str(tmp_path))
+    np.testing.assert_array_equal(np.asarray(g.edges_dst),
+                                  np.asarray(g2.edges_dst))
+
+
+def test_operator_registry_count():
+    # paper Table IV: FAgraph provides 25+ operators
+    assert len(ops.OPERATOR_REGISTRY) >= 25

@@ -1,0 +1,111 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import algorithms as alg
+from repro.core import graph as G
+from repro.core import preprocess as pre
+from repro.kernels import ops as kops
+from repro.kernels.ref import segment_reduce_ref
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def edge_lists(draw, max_v=40, max_e=120):
+    n = draw(st.integers(2, max_v))
+    e = draw(st.integers(1, max_e))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=e, max_size=e))
+    return n, np.asarray(src, np.int32), np.asarray(dst, np.int32)
+
+
+@given(edge_lists())
+@settings(**SETTINGS)
+def test_bfs_triangle_inequality(el):
+    """For every edge (u,v): level[v] ≤ level[u] + 1 (reached ⇒ tight)."""
+    n, src, dst = el
+    g = G.from_edge_list(src, dst, num_vertices=n)
+    levels, _, _ = alg.bfs(g, root=0, backend="sparse")
+    lv = np.asarray(levels).astype(np.int64)
+    for s, d in zip(src, dst):
+        if lv[s] < alg.INT_MAX:
+            assert lv[d] <= lv[s] + 1
+    assert lv[0] == 0
+
+
+@given(edge_lists(), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_spmv_linearity(el, seed):
+    """SpMV is linear: A(ax + by) == a·Ax + b·Ay."""
+    n, src, dst = el
+    g = G.from_edge_list(src, dst, num_vertices=n)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=n).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    ax, _ = alg.spmv(g, 2.0 * x + 3.0 * y, backend="sparse")
+    a1, _ = alg.spmv(g, x, backend="sparse")
+    a2, _ = alg.spmv(g, y, backend="sparse")
+    np.testing.assert_allclose(np.asarray(ax),
+                               2 * np.asarray(a1) + 3 * np.asarray(a2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@given(edge_lists())
+@settings(**SETTINGS)
+def test_layout_roundtrip_preserves_edges(el):
+    n, src, dst = el
+    g = pre.layout(src, dst, "csr", num_vertices=n)
+    s2, d2, _ = G.to_coo(g)
+    assert sorted(zip(src.tolist(), dst.tolist())) == \
+        sorted(zip(s2.tolist(), d2.tolist()))
+
+
+@given(edge_lists(), st.sampled_from(["degree", "bfs"]))
+@settings(**SETTINGS)
+def test_reorder_is_permutation(el, strat):
+    n, src, dst = el
+    ns, nd, perm = pre.reorder(src, dst, n, strategy=strat)
+    assert sorted(perm.tolist()) == list(range(n))
+
+
+@given(st.integers(1, 500), st.integers(1, 50),
+       st.integers(0, 2**31 - 1), st.sampled_from(["add", "min", "max"]))
+@settings(**SETTINGS)
+def test_segment_reduce_property(e, ns, seed, red):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, ns, e)).astype(np.int32)
+    val = rng.normal(size=e).astype(np.float32)
+    a = kops.segment_reduce(jnp.asarray(seg), jnp.asarray(val), ns,
+                            reduce=red, block_e=64)
+    b = segment_reduce_ref(jnp.asarray(seg), jnp.asarray(val), ns, reduce=red)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                               atol=1e-4)
+
+
+@given(edge_lists(max_v=30, max_e=80))
+@settings(**SETTINGS)
+def test_wcc_edge_consistency(el):
+    n, src, dst = el
+    g = G.from_edge_list(src, dst, num_vertices=n)
+    labels, _, _ = alg.wcc(g)
+    lab = np.asarray(labels)
+    assert (lab[src] == lab[dst]).all()
+
+
+@given(st.integers(2, 60), st.integers(1, 200), st.integers(0, 10**6))
+@settings(**SETTINGS)
+def test_bucketize_preserves_edge_multiset(n, e, seed):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    g = G.from_edge_list(src, dst, num_vertices=n)
+    b = G.bucketize(g)
+    edges = []
+    for sid, dm in zip(b.src_ids, b.dst):
+        sid, dm = np.asarray(sid), np.asarray(dm)
+        for i in range(len(sid)):
+            for j in dm[i][dm[i] != int(G.PAD)]:
+                edges.append((int(sid[i]), int(j)))
+    assert sorted(edges) == sorted(zip(src.tolist(), dst.tolist()))

@@ -1,0 +1,215 @@
+"""Optimizer, microbatching, checkpointing, data pipeline."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import Prefetcher, synth_batch
+from repro.models.model import LModel
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as O
+from repro.train.train_loop import make_train_step, microbatches
+
+
+def test_adamw_matches_manual_reference():
+    cfg = O.OptConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10**9,
+                      min_lr_ratio=1.0, weight_decay=0.0, clip_norm=1e9)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    st = O.init_state(cfg, p)
+    newp, newst, _ = O.adamw_update(cfg, p, g, st)
+    gw = np.asarray([0.1, 0.2, -0.3])
+    m = 0.1 * gw
+    v = 0.05 * gw * gw
+    mh = m / (1 - 0.9)
+    vh = v / (1 - 0.95)
+    ref = np.asarray([1.0, -2.0, 3.0]) - 1e-2 * mh / (np.sqrt(vh) + cfg.eps)
+    np.testing.assert_allclose(np.asarray(newp["w"]), ref, rtol=1e-5)
+
+
+def test_grad_clipping():
+    cfg = O.OptConfig(clip_norm=1.0, peak_lr=1.0, warmup_steps=0,
+                      decay_steps=10**9, min_lr_ratio=1.0, weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    st = O.init_state(cfg, p)
+    _, _, m1 = O.adamw_update(cfg, p, g, st)
+    assert float(m1["grad_norm"]) == pytest.approx(200.0)
+
+
+def test_grad_scale_equivalence():
+    """update(g, grad_scale=1/M) == update(g/M)."""
+    cfg = O.OptConfig()
+    p = {"w": jnp.asarray([1.0, 2.0])}
+    g = {"w": jnp.asarray([4.0, -8.0])}
+    st = O.init_state(cfg, p)
+    a, _, _ = O.adamw_update(cfg, p, jax.tree.map(lambda x: x / 4, g), st)
+    b, _, _ = O.adamw_update(cfg, p, g, st, grad_scale=0.25)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-6)
+
+
+def test_adafactor_state_is_factored():
+    cfg = O.OptConfig(algorithm="adafactor")
+    p = {"w": jnp.zeros((8, 16)), "b": jnp.zeros((16,))}
+    st = O.init_state(cfg, p)
+    assert st["vr"]["w"].shape == (8,)
+    assert st["vc"]["w"].shape == (16,)
+    g = {"w": jnp.ones((8, 16)), "b": jnp.ones((16,))}
+    newp, newst, _ = O.adafactor_update(cfg, p, g, st)
+    assert newp["w"].shape == (8, 16)
+    assert np.isfinite(np.asarray(newp["w"])).all()
+
+
+def test_lr_schedule():
+    cfg = O.OptConfig(peak_lr=1.0, warmup_steps=10, decay_steps=110,
+                      min_lr_ratio=0.1)
+    assert float(O.lr_at(cfg, jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(O.lr_at(cfg, jnp.asarray(10))) == pytest.approx(1.0, rel=1e-3)
+    assert float(O.lr_at(cfg, jnp.asarray(10**6))) == pytest.approx(0.1)
+
+
+def test_microbatch_equivalence():
+    """M microbatches of b == one batch of M·b (same grads ⇒ same params)."""
+    cfg = dataclasses.replace(smoke_config("qwen3-8b"), dtype="float32",
+                              microbatch_seqs=2)
+    model = LModel(cfg)
+    from repro.models.param import materialize
+    params = materialize(model.param_specs(), jax.random.key(0),
+                         dtype=jnp.float32)
+    batch = {
+        "tokens": jax.random.randint(jax.random.key(1), (4, 16), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(2), (4, 16), 0,
+                                     cfg.vocab_size),
+    }
+    ocfg = O.OptConfig(warmup_steps=0, decay_steps=10**9)
+    st = O.init_state(ocfg, params)
+    p_mb, _, m_mb = jax.jit(make_train_step(model, ocfg))(params, st, batch)
+
+    cfg1 = dataclasses.replace(cfg, microbatch_seqs=4)   # single microbatch
+    model1 = LModel(cfg1)
+    p_1, _, m_1 = jax.jit(make_train_step(model1, ocfg))(params, st, batch)
+    np.testing.assert_allclose(float(m_mb["loss"]), float(m_1["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p_mb), jax.tree.leaves(p_1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-4, atol=5e-5)
+
+
+def test_microbatch_reshape():
+    cfg = dataclasses.replace(smoke_config("qwen3-8b"), microbatch_seqs=2)
+    batch = {"tokens": jnp.zeros((6, 8), jnp.int32)}
+    mbs, M = microbatches(cfg, batch)
+    assert M == 3 and mbs["tokens"].shape == (3, 2, 8)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"a": jnp.arange(6.0).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    ckpt.save(d, 10, t)
+    restored = ckpt.restore(d, 10, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_latest_and_prune(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    for s in (1, 5, 3):
+        ckpt.save(d, s, t)
+    assert ckpt.latest_step(d) == 5
+    ckpt.prune(d, keep=1)
+    assert ckpt.latest_step(d) == 5
+    assert not os.path.exists(os.path.join(d, "step_1"))
+
+
+def test_checkpoint_async(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    th = ckpt.save(d, 2, t, asynchronous=True)
+    th.join(timeout=30)
+    assert ckpt.latest_step(d) == 2
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    ckpt.save(d, 1, t)
+    # corrupt one leaf
+    import glob
+    f = sorted(glob.glob(os.path.join(d, "step_1", "*.npy")))[0]
+    arr = np.load(f)
+    arr = arr + 1
+    np.save(f, arr)
+    with pytest.raises(IOError):
+        ckpt.restore(d, 1, t)
+
+
+def test_checkpoint_torn_write_invisible(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "step_9.tmp"))
+    assert ckpt.latest_step(d) is None
+
+
+def test_restore_latest_resume(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    ckpt.save(d, 42, t)
+    out = ckpt.restore_latest(d, t)
+    assert out is not None
+    _, step = out
+    assert step == 42
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_determinism_and_restart():
+    cfg = smoke_config("qwen3-8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    b1 = synth_batch(cfg, shape, step=5, seed=1)
+    b2 = synth_batch(cfg, shape, step=5, seed=1)   # restart: same step
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = synth_batch(cfg, shape, step=6, seed=1)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_host_sharding_disjoint():
+    cfg = smoke_config("qwen3-8b")
+    shape = ShapeConfig("t", 16, 8, "train")
+    h0 = synth_batch(cfg, shape, 0, seed=1, process_index=0, process_count=2)
+    h1 = synth_batch(cfg, shape, 0, seed=1, process_index=1, process_count=2)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher():
+    cfg = smoke_config("qwen3-8b")
+    shape = ShapeConfig("t", 16, 4, "train")
+    pf = Prefetcher(lambda s: synth_batch(cfg, shape, s, seed=0),
+                    start_step=3, put_fn=lambda x: x)
+    it = iter(pf)
+    s, b = next(it)
+    assert s == 3
+    s, b = next(it)
+    assert s == 4
+    pf.close()
