@@ -6,13 +6,14 @@ import sys
 
 
 def main() -> None:
-    from . import fig5, lm_step, roofline, table_iv, table_v
+    from . import fig5, lm_step, pass_report, roofline, table_iv, table_v
     mods = {
         "table_iv": table_iv,
         "table_v": table_v,
         "fig5": fig5,
         "lm_step": lm_step,
         "roofline": roofline,
+        "pass_report": pass_report,
     }
     only = sys.argv[1:] or list(mods)
     print("name,us_per_call,derived")

@@ -28,5 +28,10 @@ print(f"BFS finished in {int(iters)} supersteps; "
       f"reached {reached}/{g.num_vertices} vertices")
 print(f"translator: backend={report.backend}, "
       f"module={report.gather_module}, TT={report.translate_time_s:.2f}s")
+
+# 4. Look inside the translator: the optimized superstep IR it emitted
+# (translate(..., dump_passes=True) additionally records per-pass dumps;
+# see docs/architecture.md)
+print(report.ir_dump)
 print(f"traversed edges: {alg.traversed_edges(g, lv):,}")
 print(f"comm stats: {comm.report()}")

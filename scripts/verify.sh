@@ -1,0 +1,60 @@
+#!/usr/bin/env bash
+# Tier-1 verification: fast test suite + docs link check.
+#
+#   scripts/verify.sh          # tier-1 suite (slow tests excluded) + doc check
+#   scripts/verify.sh --slow   # additionally run the slow suite
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 test suite =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    echo "== slow suite =="
+    python -m pytest -q -m slow
+fi
+
+echo "== docs link check =="
+# Every src/... or benchmarks/... path named in the docs must exist.
+python - <<'EOF'
+import pathlib, re, sys
+
+missing = []
+for doc in [pathlib.Path("docs/architecture.md"), pathlib.Path("README.md")]:
+    for path in re.findall(r"`((?:src|benchmarks|scripts|docs)/[\w/.-]+\.\w+)`",
+                           doc.read_text()):
+        if not pathlib.Path(path).exists():
+            missing.append(f"{doc}: {path}")
+if missing:
+    print("MISSING paths referenced by docs:")
+    print("\n".join(f"  {m}" for m in missing))
+    sys.exit(1)
+print("all doc-referenced module paths exist")
+EOF
+
+echo "== docstring check (core/ir.py, core/passes.py) =="
+python - <<'EOF'
+import inspect, sys
+from repro.core import ir, passes
+
+missing = []
+for mod in (ir, passes):
+    for name in mod.__all__:
+        obj = getattr(mod, name)
+        if not inspect.getdoc(obj):
+            missing.append(f"{mod.__name__}.{name}")
+        if inspect.isclass(obj):
+            for m, fn in vars(obj).items():
+                if callable(fn) and not m.startswith("_") \
+                        and not inspect.getdoc(fn):
+                    missing.append(f"{mod.__name__}.{name}.{m}")
+if missing:
+    print("public symbols missing docstrings:")
+    print("\n".join(f"  {m}" for m in missing))
+    sys.exit(1)
+print("every public IR/pass symbol has a docstring")
+EOF
+
+echo "verify OK"

@@ -1,0 +1,73 @@
+"""Version shims for the small jax API surface the translator uses.
+
+The translated multi-PE path uses three APIs whose spelling moved between
+jax releases; resolving them here keeps :mod:`~repro.core.scheduler` and
+:mod:`~repro.core.translator` version-agnostic:
+
+* ``make_mesh``  — ``axis_types=`` only exists on newer jax; older
+  releases get the plain call (the translator never relies on explicit
+  axis types, it only silences auto-sharding warnings where available);
+* ``shard_map``  — top-level ``jax.shard_map`` vs.
+  ``jax.experimental.shard_map.shard_map``;
+* ``pvary``      — newer jax requires marking per-PE-varying carries;
+  older versions have no such check, so the fallback is the identity.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_mesh", "shard_map", "pvary", "get_abstract_mesh",
+           "set_mesh"]
+
+
+def make_mesh(axis_shapes, axis_names, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``axis_types`` where the release supports it."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=tuple(jax.sharding.AxisType.Auto
+                             for _ in axis_names),
+            devices=devices)
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def pvary(x, axis_names):
+    """``jax.lax.pvary`` where it exists; identity on older releases."""
+    if hasattr(jax.lax, "pvary"):
+        return jax.lax.pvary(x, axis_names)
+    return x
+
+
+def get_abstract_mesh():
+    """The ambient (context) mesh, abstractly; ``None`` when no mesh is set.
+
+    Newer jax spells this ``jax.sharding.get_abstract_mesh`` (installed by
+    ``jax.set_mesh``); on older releases the ambient mesh is the
+    ``with mesh:`` context's *physical* mesh, returned as-is — 0.4.x
+    ``shard_map`` cannot compile with an ``AbstractMesh``, and callers
+    only read ``.shape``/``.axis_names`` or pass it back to ``shard_map``.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib
+    physical = mesh_lib.thread_resources.env.physical_mesh
+    if physical.empty:
+        return None
+    return physical
+
+
+def set_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh.
+
+    ``jax.set_mesh`` on newer releases; on older ones a ``Mesh`` is itself
+    the context manager.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh

@@ -140,3 +140,16 @@ def degree_program() -> VertexProgram:
         mask_inactive=False,
         max_iters=1,
     )
+
+
+# Name → zero-arg factory for every algorithm-layer template above.  The IR
+# tests round-trip each of these through the front-end lowering, and
+# docs/architecture.md enumerates them; new templates should register here.
+PROGRAM_TEMPLATES: dict[str, Callable[[], VertexProgram]] = {
+    "bfs": bfs_program,
+    "sssp": sssp_program,
+    "pagerank": pagerank_program,
+    "wcc": wcc_program,
+    "spmv": spmv_program,
+    "degree": degree_program,
+}

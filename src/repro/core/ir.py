@@ -1,0 +1,256 @@
+"""Typed superstep IR (paper §V): the translator's intermediate language.
+
+The paper's light-weight translator avoids general HLS by staging a DSL
+program through a *small number of well-chosen representations* before
+emitting optimized modules.  This module defines the middle representation:
+a :class:`SuperstepIR` — a short, typed op list describing one GAS
+superstep — produced from a :class:`~repro.core.dsl.VertexProgram` by
+:func:`lower_program` (the front-end lowering), rewritten by the passes in
+:mod:`repro.core.passes`, and finally walked by
+:func:`repro.core.translator.translate` (the translation stage) to emit the
+jitted superstep.
+
+Ops mirror the paper's hardware modules:
+
+* :class:`GatherOp`        — per-edge message construction (Receive),
+* :class:`ReduceOp`        — per-vertex accumulation,
+* :class:`FusedGatherReduceOp` — a matched gather+reduce pair bound to one
+  pre-built kernel (Pallas ELL edge-block or sparse segment-scan),
+* :class:`ApplyOp`         — vertex update,
+* :class:`FrontierUpdateOp`— next-frontier computation,
+* :class:`ExchangeOp`      — cross-PE combine (the comm manager's plane).
+
+Everything is an immutable dataclass; passes rewrite with
+``dataclasses.replace`` so each pipeline stage has a well-defined
+before/after that :meth:`SuperstepIR.dump` can render (the observable
+"TT"-style report documented in ``docs/architecture.md``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from .dsl import VertexProgram
+
+__all__ = [
+    "GatherOp",
+    "ReduceOp",
+    "FusedGatherReduceOp",
+    "ApplyOp",
+    "FrontierUpdateOp",
+    "ExchangeOp",
+    "SuperstepIR",
+    "lower_program",
+]
+
+
+def _fn_name(fn: Callable) -> str:
+    """Best-effort printable name for a user callable (for dumps only)."""
+    name = getattr(fn, "__name__", None) or type(fn).__name__
+    return "<lambda>" if name == "<lambda>" else name
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherOp:
+    """Per-edge message construction: ``msg = fn(src_value, weight, degree)``.
+
+    ``module`` is ``None`` until the gather-classification pass matches
+    ``fn`` against the pre-built module menu (``kernels.ref.GATHER_OPS``);
+    an unmatched gather keeps ``module=None`` and forces the general sparse
+    path (nothing is rejected, only de-optimized).
+    """
+
+    fn: Callable
+    module: str | None = None
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        mod = self.module if self.module is not None else "?"
+        return f"Gather(fn={_fn_name(self.fn)}, module={mod})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ReduceOp:
+    """Per-vertex accumulation of gathered messages (``add``/``min``/``max``).
+
+    ``identity`` is ``None`` until the reduce-identity folding pass
+    constant-folds the op's neutral element for the program dtype.
+    """
+
+    op: str
+    identity: Any = None
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        ident = "?" if self.identity is None else repr(self.identity)
+        return f"Reduce(op={self.op}, identity={ident})"
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedGatherReduceOp:
+    """A gather+reduce pair fused onto one pre-built edge-processing kernel.
+
+    Produced by the fusion pass once the backend is known: ``kernel`` is
+    ``'edge_block'`` (the Pallas/XLA dense ELL module) or ``'segment_scan'``
+    (the chunk-streamed sparse segment-reduce module).
+    """
+
+    gather: GatherOp
+    reduce: ReduceOp
+    kernel: str
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        return (f"FusedGatherReduce(kernel={self.kernel}, "
+                f"gather={self.gather.render()}, "
+                f"reduce={self.reduce.render()})")
+
+
+@dataclasses.dataclass(frozen=True)
+class ApplyOp:
+    """Vertex update: ``new_value = fn(old_value, reduced_msg)``."""
+
+    fn: Callable
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        return f"Apply(fn={_fn_name(self.fn)})"
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontierUpdateOp:
+    """Next-frontier computation.
+
+    ``mode`` mirrors the DSL's frontier semantics (``'changed'`` computes a
+    change mask; ``'all'`` keeps every vertex active).  The dead-frontier
+    elimination pass sets ``dead=True`` for ``'all'`` programs so the
+    translation stage skips the change-mask computation entirely.
+    """
+
+    mode: str
+    dead: bool = False
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        tag = ", dead" if self.dead else ""
+        return f"FrontierUpdate(mode={self.mode}{tag})"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExchangeOp:
+    """Cross-PE combine of the partial per-vertex reductions.
+
+    ``pes``/``collective`` are unresolved (``None``) until the
+    backend-selection pass consumes the scheduler plan; with one PE the
+    pass deletes this op from the pipeline instead.
+    """
+
+    reduce: str
+    pes: int | None = None
+    collective: str | None = None
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        pes = "?" if self.pes is None else self.pes
+        coll = self.collective if self.collective is not None else "?"
+        return f"Exchange(reduce={self.reduce}, pes={pes}, collective={coll})"
+
+
+IROp = Any  # union of the op dataclasses above (kept informal: plain tags)
+
+
+@dataclasses.dataclass(frozen=True)
+class SuperstepIR:
+    """One GAS superstep as a typed op list plus program metadata.
+
+    ``backend`` starts as ``None`` and is resolved to a concrete kernel
+    flavor (``'dense_pallas'`` | ``'dense_xla'`` | ``'sparse_xla'``) by the
+    backend-selection pass.  ``notes`` accumulates analysis facts recorded
+    by passes (visible in dumps, never consumed by the emitter).
+    """
+
+    program: VertexProgram
+    ops: tuple
+    backend: str | None = None
+    notes: tuple = ()
+
+    @property
+    def value_dtype(self):
+        """The program's vertex-value dtype as a ``jnp.dtype``."""
+        return jnp.dtype(self.program.value_dtype)
+
+    def replace(self, **kw) -> "SuperstepIR":
+        """Functional update (``dataclasses.replace`` sugar for passes)."""
+        return dataclasses.replace(self, **kw)
+
+    def with_note(self, note: str) -> "SuperstepIR":
+        """Append an analysis note (recorded facts, shown in dumps)."""
+        return self.replace(notes=self.notes + (note,))
+
+    def find(self, kind) -> IROp | None:
+        """Return the first op of dataclass ``kind``, or ``None``."""
+        for op in self.ops:
+            if isinstance(op, kind):
+                return op
+        return None
+
+    def replace_op(self, old: IROp, new: IROp | None) -> "SuperstepIR":
+        """Rewrite ``old`` → ``new`` in the op list (``None`` deletes)."""
+        ops = []
+        for op in self.ops:
+            if op is old:
+                if new is not None:
+                    ops.append(new)
+            else:
+                ops.append(op)
+        return self.replace(ops=tuple(ops))
+
+    def fuse(self, gather: GatherOp, reduce: ReduceOp,
+             fused: FusedGatherReduceOp) -> "SuperstepIR":
+        """Replace an adjacent gather+reduce pair with ``fused``."""
+        ops = []
+        for op in self.ops:
+            if op is gather:
+                ops.append(fused)
+            elif op is reduce:
+                continue
+            else:
+                ops.append(op)
+        return self.replace(ops=tuple(ops))
+
+    def dump(self) -> str:
+        """Readable multi-line IR listing (the pipeline's observable form)."""
+        p = self.program
+        head = (f"superstep {p.name}: dtype={self.value_dtype.name} "
+                f"frontier={p.frontier} mask_inactive={p.mask_inactive} "
+                f"max_iters={p.max_iters} "
+                f"backend={self.backend or '?'}")
+        lines = [head]
+        for i, op in enumerate(self.ops):
+            lines.append(f"  %{i} = {op.render()}")
+        for note in self.notes:
+            lines.append(f"  ; {note}")
+        return "\n".join(lines)
+
+
+def lower_program(program: VertexProgram) -> SuperstepIR:
+    """Front-end lowering: ``VertexProgram`` → unoptimized :class:`SuperstepIR`.
+
+    The op list is the canonical pull-mode GAS superstep — gather per
+    in-edge, reduce per vertex, a (possibly elided) cross-PE exchange,
+    vertex apply, frontier update.  No analysis happens here; every
+    annotation slot (gather module, reduce identity, backend, exchange
+    collective) is left unresolved for the pass pipeline.
+    """
+    return SuperstepIR(
+        program=program,
+        ops=(
+            GatherOp(fn=program.gather),
+            ReduceOp(op=program.reduce),
+            ExchangeOp(reduce=program.reduce),
+            ApplyOp(fn=program.apply),
+            FrontierUpdateOp(mode=program.frontier),
+        ),
+    )

@@ -1,0 +1,342 @@
+"""Analysis/transform passes over the superstep IR (paper §V).
+
+The translator stages a program through a pipeline of small passes, in the
+taxonomy hwtHls (and LLVM) use:
+
+* **analysis** passes are read-only over the computation — they record
+  facts (as op annotations or IR notes) but never change what is computed;
+* **transformation** passes rewrite the op list or fold constants while
+  preserving numerics exactly;
+* the final **translation** stage — :func:`repro.core.translator.translate`
+  walking the optimized IR and emitting the jitted superstep — lives in
+  :mod:`repro.core.translator`, not here.
+
+Concrete passes (in :func:`default_pipeline` order):
+
+1. :class:`GatherClassificationPass` — the paper's module matching, by
+   abstract probing against the pre-built menu (moved out of
+   ``translator.py``);
+2. :class:`ReduceIdentityFoldPass` — constant-fold the reduce identity for
+   the program dtype;
+3. :class:`BackendSelectionPass` — consume the :mod:`~repro.core.scheduler`
+   plan, resolve a concrete kernel flavor, and resolve or delete the
+   cross-PE :class:`~repro.core.ir.ExchangeOp`;
+4. :class:`GatherReduceFusionPass` — fuse the gather+reduce pair onto the
+   Pallas ELL edge-block or sparse segment-scan kernel;
+5. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
+   ``frontier='all'`` programs so no change mask is emitted.
+
+Every :meth:`PassPipeline.run` records a per-pass before/after textual dump
+(the "TT"-style report) so the whole pipeline is observable end-to-end;
+``docs/architecture.md`` reproduces one such report for ``bfs_program()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ref import GATHER_OPS, gather_msg
+from .dsl import reduce_identity
+from .ir import (ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
+                 GatherOp, ReduceOp, SuperstepIR)
+from .scheduler import ScheduleConfig, SchedulePlan
+
+__all__ = [
+    "classify_gather",
+    "PassContext",
+    "Pass",
+    "PassRecord",
+    "PipelineReport",
+    "PassPipeline",
+    "GatherClassificationPass",
+    "ReduceIdentityFoldPass",
+    "BackendSelectionPass",
+    "GatherReduceFusionPass",
+    "DeadFrontierEliminationPass",
+    "default_pipeline",
+]
+
+
+# ---------------------------------------------------------------------------
+# Module matching (abstract probing instead of syntax analysis)
+# ---------------------------------------------------------------------------
+
+
+def classify_gather(gather: Callable, dtype) -> str | None:
+    """Match a gather callable against the pre-built module menu.
+
+    The paper's "eliminate complex grammatical and semantic analysis":
+    instead of parsing the user's gather, probe it on a fixed random batch
+    and compare against every menu entry (``kernels.ref.GATHER_OPS``).
+    Returns the matched module name, or ``None`` for the general path.
+    """
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.uniform(1, 8, (16,)), dtype)
+    w = jnp.asarray(rng.uniform(1, 8, (16,)),
+                    dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
+    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
+    try:
+        got = np.asarray(gather(v, w.astype(v.dtype), d))
+    except Exception:
+        return None
+    for name in GATHER_OPS:
+        try:
+            want = np.asarray(gather_msg(name, v, w.astype(v.dtype), d))
+        except Exception:
+            continue
+        if got.shape == want.shape and np.allclose(got, want, rtol=1e-5, atol=1e-5):
+            return name
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Pipeline machinery
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PassContext:
+    """Read-only facts every pass may consult.
+
+    Carries the graph shape, the scheduler's resolved
+    :class:`~repro.core.scheduler.SchedulePlan`, and the Pallas toggle —
+    the pass pipeline itself never touches graph *data*, only metadata.
+    """
+
+    schedule: ScheduleConfig
+    plan: SchedulePlan
+    use_pallas: bool
+    num_vertices: int
+    num_edges: int
+
+
+class Pass:
+    """Base class for IR passes.
+
+    Subclasses set ``name`` and ``kind`` (``'analysis'`` records facts
+    without changing computation; ``'transform'`` rewrites the IR) and
+    implement :meth:`run` returning a new :class:`SuperstepIR` — passes are
+    functional, the input IR is never mutated.
+    """
+
+    name: str = "pass"
+    kind: str = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Rewrite (or merely annotate) ``ir``; must preserve numerics."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PassRecord:
+    """One pipeline step's observable outcome: dumps before and after."""
+
+    name: str
+    kind: str
+    changed: bool
+    before: str | None = None
+    after: str | None = None
+    time_s: float = 0.0
+
+    def render(self) -> str:
+        """Readable report section for this pass."""
+        head = f"== {self.name} [{self.kind}] " \
+               f"{'(changed)' if self.changed else '(no change)'}"
+        if self.before is None:
+            return head
+        body = [head, "-- before --", self.before, "-- after --",
+                self.after or ""]
+        return "\n".join(body)
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineReport:
+    """All :class:`PassRecord`\\ s of one :meth:`PassPipeline.run`."""
+
+    records: tuple
+
+    def render(self) -> str:
+        """The full per-pass before/after report (the "TT"-style dump)."""
+        return "\n\n".join(r.render() for r in self.records)
+
+
+class PassPipeline:
+    """Ordered pass runner with per-pass before/after dump recording."""
+
+    def __init__(self, passes: list[Pass]):
+        self.passes = list(passes)
+
+    def run(self, ir: SuperstepIR, ctx: PassContext,
+            dump: bool = False) -> tuple[SuperstepIR, PipelineReport]:
+        """Run every pass in order; returns (optimized IR, report).
+
+        With ``dump=True`` each record carries the full textual IR before
+        and after the pass; without it only names and changed-flags are
+        recorded (cheap enough to keep on every translation).
+        """
+        records = []
+        for p in self.passes:
+            before = ir.dump() if dump else None
+            t0 = time.perf_counter()
+            out = p.run(ir, ctx)
+            dt = time.perf_counter() - t0
+            records.append(PassRecord(
+                name=p.name, kind=p.kind, changed=out is not ir,
+                before=before, after=out.dump() if dump else None,
+                time_s=dt))
+            ir = out
+        return ir, PipelineReport(records=tuple(records))
+
+
+# ---------------------------------------------------------------------------
+# Concrete passes
+# ---------------------------------------------------------------------------
+
+
+class GatherClassificationPass(Pass):
+    """Annotate the gather op with its matched pre-built module (analysis).
+
+    Records the paper's module-matching result on
+    :attr:`~repro.core.ir.GatherOp.module`; an unmatched gather stays
+    ``None`` and later forces the general sparse path.
+    """
+
+    name = "gather-classification"
+    kind = "analysis"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Probe the gather against the menu and annotate the op."""
+        gop = ir.find(GatherOp)
+        if gop is None or gop.module is not None:
+            return ir
+        module = classify_gather(gop.fn, ir.value_dtype)
+        ir = ir.replace_op(gop, dataclasses.replace(gop, module=module))
+        note = (f"gather matched module {module!r}" if module is not None
+                else "gather unmatched -> general sparse path")
+        return ir.with_note(note)
+
+
+class ReduceIdentityFoldPass(Pass):
+    """Constant-fold the reduce identity for the program dtype (transform).
+
+    The folded constant is what the emitted kernels use to initialize
+    accumulator tables and mask dead edge slots, so folding it once here
+    keeps every backend consistent.
+    """
+
+    name = "reduce-identity-fold"
+    kind = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Fold ``reduce_identity(op, dtype)`` into the reduce op."""
+        rop = ir.find(ReduceOp)
+        if rop is None or rop.identity is not None:
+            return ir
+        ident = reduce_identity(rop.op, ir.value_dtype)
+        return ir.replace_op(rop, dataclasses.replace(rop, identity=ident))
+
+
+class BackendSelectionPass(Pass):
+    """Resolve the concrete kernel flavor from the scheduler plan (transform).
+
+    Consumes the :class:`~repro.core.scheduler.SchedulePlan`: ``dense``
+    becomes the Pallas or XLA ELL edge-block module, ``sparse`` the
+    segment-scan module.  An unmatched gather downgrades dense → sparse
+    (only the sparse module has a general gather path).  The cross-PE
+    :class:`~repro.core.ir.ExchangeOp` is resolved to its reduce-matched
+    collective, or deleted when a single PE (or the dense backend, which
+    runs un-sharded) makes it dead.
+    """
+
+    name = "backend-selection"
+    kind = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Set ``ir.backend`` and resolve/delete the exchange op."""
+        backend = ctx.plan.backend
+        gop = ir.find(GatherOp)
+        fused = ir.find(FusedGatherReduceOp)
+        module = gop.module if gop is not None else \
+            (fused.gather.module if fused is not None else None)
+        if module is None:
+            if backend != "sparse":
+                ir = ir.with_note("backend downgraded dense -> sparse "
+                                  "(unmatched gather)")
+            backend = "sparse"
+        if backend == "dense":
+            flavor = "dense_pallas" if ctx.use_pallas else "dense_xla"
+        else:
+            flavor = "sparse_xla"
+        ir = ir.replace(backend=flavor)
+
+        xop = ir.find(ExchangeOp)
+        if xop is not None:
+            # actual mesh size, not config.pes: the plan may have degraded
+            # to fewer devices (elastic re-planning)
+            pes = 1 if ctx.plan.mesh is None else int(ctx.plan.mesh.devices.size)
+            if backend == "dense" or pes <= 1:
+                ir = ir.replace_op(xop, None)  # dead exchange: elide
+            else:
+                coll = {"add": "psum", "min": "pmin", "max": "pmax"}[xop.reduce]
+                ir = ir.replace_op(xop, dataclasses.replace(
+                    xop, pes=pes, collective=coll))
+        return ir.with_note(f"schedule: {ctx.plan.describe()}")
+
+
+class GatherReduceFusionPass(Pass):
+    """Fuse the gather+reduce pair onto one edge-processing kernel (transform).
+
+    Requires a resolved backend: dense flavors take the ELL
+    ``'edge_block'`` kernel (Pallas on TPU, jnp reference elsewhere),
+    sparse takes the chunk-streamed ``'segment_scan'`` kernel.  The fused
+    op keeps both the matched module name and the original callable, so
+    the general path still has the user's gather to trace.
+    """
+
+    name = "gather-reduce-fusion"
+    kind = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Replace Gather+Reduce with a :class:`FusedGatherReduceOp`."""
+        gop, rop = ir.find(GatherOp), ir.find(ReduceOp)
+        if gop is None or rop is None or ir.backend is None:
+            return ir
+        kernel = "edge_block" if ir.backend.startswith("dense") \
+            else "segment_scan"
+        return ir.fuse(gop, rop, FusedGatherReduceOp(
+            gather=gop, reduce=rop, kernel=kernel))
+
+
+class DeadFrontierEliminationPass(Pass):
+    """Mark the frontier update dead for ``frontier='all'`` programs.
+
+    Such programs activate every vertex each superstep, so the change mask
+    (``new != values``) and the reduce's touched mask are never consumed —
+    marking the op dead lets the translation stage skip emitting them
+    instead of relying on XLA dead-code elimination.
+    """
+
+    name = "dead-frontier-elimination"
+    kind = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Set ``dead=True`` on the frontier op when the mode is ``'all'``."""
+        fop = ir.find(FrontierUpdateOp)
+        if fop is None or fop.dead or fop.mode != "all":
+            return ir
+        return ir.replace_op(fop, dataclasses.replace(fop, dead=True))
+
+
+def default_pipeline() -> PassPipeline:
+    """The translator's standard pass order (see module docstring)."""
+    return PassPipeline([
+        GatherClassificationPass(),
+        ReduceIdentityFoldPass(),
+        BackendSelectionPass(),
+        GatherReduceFusionPass(),
+        DeadFrontierEliminationPass(),
+    ])

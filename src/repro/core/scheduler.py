@@ -22,6 +22,8 @@ import math
 
 import jax
 
+from ._jax_compat import make_mesh
+
 
 @dataclasses.dataclass(frozen=True)
 class ScheduleConfig:
@@ -49,6 +51,12 @@ class SchedulePlan:
     num_chunks: int              # edge-stream chunks (>=1)
     chunk_size: int              # edges per chunk (padded)
     mesh: jax.sharding.Mesh | None   # None → single device
+
+    def describe(self) -> str:
+        """One-line summary for IR/pass dumps (backend-selection pass)."""
+        pes = 1 if self.mesh is None else int(self.mesh.devices.size)
+        return (f"backend={self.backend} pipelines={self.num_chunks} "
+                f"chunk_size={self.chunk_size} pes={pes}")
 
 
 def choose_backend(cfg: ScheduleConfig, *, num_vertices: int,
@@ -80,11 +88,7 @@ def plan(cfg: ScheduleConfig, *, num_vertices: int, num_edges: int,
         else:
             pes = cfg.pes
         if pes > 1:
-            mesh = jax.make_mesh(
-                (pes,), ("pe",),
-                axis_types=(jax.sharding.AxisType.Auto,),
-                devices=devices[:pes],
-            )
+            mesh = make_mesh((pes,), ("pe",), devices=devices[:pes])
     return SchedulePlan(config=cfg, backend=backend, num_chunks=num_chunks,
                         chunk_size=chunk_size, mesh=mesh)
 

@@ -6,6 +6,19 @@ operators onto a library of pre-optimized hardware modules, (2) applies the
 runtime scheduler's ``pipelines × PEs`` plan, and (3) lets the communication
 manager place data, produces better code in far less time.
 
+Since the IR refactor the translator is the *last* of three stages:
+
+1. **front-end lowering** — :func:`repro.core.ir.lower_program` turns the
+   :class:`~repro.core.dsl.VertexProgram` into a typed
+   :class:`~repro.core.ir.SuperstepIR` op list;
+2. **pass pipeline** — :func:`repro.core.passes.default_pipeline` runs the
+   analysis/transform passes (module matching, identity folding, backend
+   selection, gather+reduce fusion, dead-frontier elimination), each
+   recording a before/after dump;
+3. **translation** — :func:`translate` (this module) walks the optimized IR
+   and emits the jitted superstep plus the
+   :class:`TranslationReport`.
+
 The TPU mapping implemented here:
 
 * **Module matching** — the program's ``gather`` callable is classified
@@ -26,48 +39,24 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .. import kernels
 from ..kernels import ops as kops
-from ..kernels.ref import GATHER_OPS
 from . import graph as G
+from ._jax_compat import pvary, shard_map
 from .comm import CommManager
-from .dsl import VertexProgram, reduce_identity
+from .dsl import VertexProgram
+from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
+                 SuperstepIR, lower_program)
+from .passes import PassContext, classify_gather, default_pipeline
 from .scheduler import ScheduleConfig, SchedulePlan, plan
 
+__all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
+           "translate"]
+
 P = jax.sharding.PartitionSpec
-
-
-# ---------------------------------------------------------------------------
-# Module matching (abstract probing instead of syntax analysis)
-# ---------------------------------------------------------------------------
-
-
-def classify_gather(gather: Callable, dtype) -> str | None:
-    """Match a gather callable against the pre-built module menu."""
-    rng = np.random.default_rng(0)
-    v = jnp.asarray(rng.uniform(1, 8, (16,)), dtype)
-    w = jnp.asarray(rng.uniform(1, 8, (16,)), dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
-    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
-    try:
-        got = np.asarray(gather(v, w.astype(v.dtype), d))
-    except Exception:
-        return None
-    from ..kernels.ref import _gather_msg
-    for name in GATHER_OPS:
-        try:
-            want = np.asarray(_gather_msg(name, v, w.astype(v.dtype), d))
-        except Exception:
-            continue
-        if got.shape == want.shape and np.allclose(got, want, rtol=1e-5, atol=1e-5):
-            return name
-    return None
 
 
 # ---------------------------------------------------------------------------
@@ -88,6 +77,8 @@ class TranslationReport:
     est_bytes_per_superstep: float
     est_collective_bytes: int
     dsl_lines: int | None = None  # set by callers for Table V
+    pass_report: str | None = None  # per-pass dump (translate(dump_passes=True))
+    ir_dump: str | None = None      # final optimized IR listing
 
 
 class CompiledGraphProgram:
@@ -125,6 +116,144 @@ class CompiledGraphProgram:
 
 
 # ---------------------------------------------------------------------------
+# Translation stage: emit the reduce module from the fused IR op
+# ---------------------------------------------------------------------------
+
+
+def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
+                            g_rev: G.Graph, out_deg, schedule: ScheduleConfig,
+                            use_pallas: bool):
+    """Emit the dense ELL partial-reduce module (Pallas or jnp reference)."""
+    program = ir.program
+    dtype = ir.value_dtype
+    V = g_rev.num_vertices
+    ident = fused.reduce.identity
+    gather_module = fused.gather.module
+    bucket = G.bucketize(g_rev)
+
+    def partial_reduce(values, active):
+        red_table = jnp.full((V,), ident, dtype)
+        got_table = jnp.zeros((V,), bool)
+        for sid, nbr, wgt in zip(bucket.src_ids, bucket.dst, bucket.weights):
+            if use_pallas:
+                red, got = kops.edge_block_reduce(
+                    nbr, wgt, values, out_deg, active,
+                    gather=gather_module, reduce=fused.reduce.op,
+                    mask_inactive=program.mask_inactive,
+                    block_rows=schedule.block_rows)
+            else:
+                from ..kernels.ref import edge_block_reduce_ref
+                red, got = edge_block_reduce_ref(
+                    nbr, wgt, values, out_deg, active,
+                    gather=gather_module, reduce=fused.reduce.op,
+                    mask_inactive=program.mask_inactive)
+            comb = {"add": jnp.add, "min": jnp.minimum,
+                    "max": jnp.maximum}[fused.reduce.op]
+            red_table = red_table.at[sid].set(
+                comb(red_table[sid], red.astype(dtype)))
+            got_table = got_table.at[sid].max(got)
+        return red_table, got_table
+
+    return partial_reduce
+
+
+def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
+                              g_rev: G.Graph, out_deg,
+                              splan: SchedulePlan, pes_planned: int):
+    """Emit the sparse chunk-streamed partial-reduce module.
+
+    ``pipelines`` → ``lax.scan`` over edge chunks (bounds the live working
+    set); the chunk count is rounded up to a multiple of the planned PEs so
+    shard slices stay equal-sized.
+    """
+    program = ir.program
+    dtype = ir.value_dtype
+    V = g_rev.num_vertices
+    E = g_rev.num_edges
+    ident = fused.reduce.identity
+    reduce_op = fused.reduce.op
+    gather_fn = fused.gather.fn
+
+    # COO of the reversed graph: edge (u → v) appears as (dst=v, src=u)
+    seg_dst, src, wts = G.coo_arrays(g_rev)   # seg: receiving vertex
+    nchunk = splan.num_chunks
+    if pes_planned > 1:       # each PE owns nchunk/pes edge chunks
+        nchunk = -(-nchunk // pes_planned) * pes_planned
+    csize = -(-E // nchunk)
+    pad = nchunk * csize - E
+    PADV = jnp.iinfo(jnp.int32).max
+    seg_c = jnp.pad(seg_dst, (0, pad), constant_values=PADV).reshape(nchunk, csize)
+    src_c = jnp.pad(src, (0, pad)).reshape(nchunk, csize)
+    wts_c = jnp.pad(wts, (0, pad)).reshape(nchunk, csize)
+
+    def partial_reduce(values, active, chunks=None):
+        my_seg, my_src, my_wts = chunks if chunks is not None \
+            else (seg_c, src_c, wts_c)
+
+        def chunk(carry, xs):
+            red_table, got_table = carry
+            seg, srcs, ws = xs
+            valid = seg != PADV
+            safe_src = jnp.where(valid, srcs, 0)
+            v = values[safe_src]
+            d = out_deg[safe_src]
+            msg = gather_fn(v, ws.astype(v.dtype), d)
+            live = valid
+            if program.mask_inactive:
+                live = live & active[safe_src]
+            msg = jnp.where(live, msg.astype(dtype), ident)
+            safe_seg = jnp.where(valid, seg, 0)
+            if reduce_op == "add":
+                red_table = red_table.at[safe_seg].add(jnp.where(live, msg, 0))
+            elif reduce_op == "min":
+                red_table = red_table.at[safe_seg].min(msg)
+            else:
+                red_table = red_table.at[safe_seg].max(msg)
+            got_table = got_table.at[safe_seg].max(live)
+            return (red_table, got_table), None
+
+        init = (jnp.full((V,), ident, dtype), jnp.zeros((V,), bool))
+        if chunks is not None:   # per-PE slices are pe-varying
+            init = jax.tree.map(lambda a: pvary(a, ("pe",)), init)
+        (red_table, got_table), _ = jax.lax.scan(
+            chunk, init, (my_seg, my_src, my_wts))
+        return red_table, got_table
+
+    return partial_reduce, (seg_c, src_c, wts_c), nchunk
+
+
+def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
+                   nchunk: int, mesh):
+    """Emit the cross-PE combine around the partial-reduce module.
+
+    Each PE owns an edge-chunk slice (paper: edge partitions per PE);
+    vertex tables replicate and combine with the reduce-matched collective —
+    psum for 'add' is only correct because the edge sets are disjoint per PE.
+    """
+    seg_c, src_c, wts_c = chunk_arrays
+    k_per_pe = nchunk // xop.pes
+    collective = {"psum": jax.lax.psum, "pmin": jax.lax.pmin,
+                  "pmax": jax.lax.pmax}[xop.collective]
+
+    def sharded_reduce(values, active):
+        def pe_body(values, active):
+            pe = jax.lax.axis_index("pe")
+            chunks = tuple(
+                jax.lax.dynamic_slice_in_dim(c, pe * k_per_pe, k_per_pe, 0)
+                for c in (seg_c, src_c, wts_c))
+            red, got = partial_reduce(values, active, chunks)
+            red = collective(red, "pe")
+            got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
+            return red, got
+
+        return shard_map(pe_body, mesh=mesh,
+                         in_specs=(P(), P()), out_specs=(P(), P()))(
+            values, active)
+
+    return sharded_reduce
+
+
+# ---------------------------------------------------------------------------
 # The translator
 # ---------------------------------------------------------------------------
 
@@ -137,8 +266,14 @@ def translate(
     *,
     use_pallas: bool | None = None,
     aot_compile: bool = True,
+    dump_passes: bool = False,
 ) -> CompiledGraphProgram:
     """Stage a DSL program into a specialized executable for graph ``g``.
+
+    Lowers the program to :class:`~repro.core.ir.SuperstepIR`, runs the
+    default pass pipeline, then walks the optimized IR to emit the jitted
+    superstep.  ``dump_passes=True`` additionally records the per-pass
+    before/after IR dumps on ``report.pass_report``.
 
     Messages flow along in-edges (pull form): ``g`` holds out-edges (CSR),
     so the translator builds the transposed adjacency once at translation
@@ -152,146 +287,54 @@ def translate(
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
 
-    dtype = jnp.dtype(program.value_dtype)
-    gather_module = classify_gather(program.gather, dtype)
-    backend = splan.backend
-    if gather_module is None:
-        backend = "sparse"  # general path only exists in the sparse module
+    # ---- stages 1+2: lower to IR, run the pass pipeline -----------------
+    ctx = PassContext(schedule=schedule, plan=splan, use_pallas=use_pallas,
+                      num_vertices=g.num_vertices, num_edges=g.num_edges)
+    ir, pipeline_report = default_pipeline().run(
+        lower_program(program), ctx, dump=dump_passes)
 
+    fused = ir.find(FusedGatherReduceOp)
+    apply_op = ir.find(ApplyOp)
+    frontier_op = ir.find(FrontierUpdateOp)
+    exchange_op = ir.find(ExchangeOp)
+    assert fused is not None and apply_op is not None \
+        and frontier_op is not None, "pass pipeline left the IR incomplete"
+
+    dtype = ir.value_dtype
     g_rev = G.reverse(g)                     # pull: in-edges of each vertex
     out_deg = g.out_degrees.astype(jnp.int32)
     V = g.num_vertices
-    ident = reduce_identity(program.reduce, dtype)
 
-    # ---- build the partial-reduce module -------------------------------
-    if backend == "dense":
-        bucket = G.bucketize(g_rev)
-        kernel_flavor = "dense_pallas" if use_pallas else "dense_xla"
-
-        def partial_reduce(values, active):
-            red_table = jnp.full((V,), ident, dtype)
-            got_table = jnp.zeros((V,), bool)
-            for sid, nbr, wgt in zip(bucket.src_ids, bucket.dst, bucket.weights):
-                if use_pallas:
-                    red, got = kops.edge_block_reduce(
-                        nbr, wgt, values, out_deg, active,
-                        gather=gather_module, reduce=program.reduce,
-                        mask_inactive=program.mask_inactive,
-                        block_rows=schedule.block_rows)
-                else:
-                    from ..kernels.ref import edge_block_reduce_ref
-                    red, got = edge_block_reduce_ref(
-                        nbr, wgt, values, out_deg, active,
-                        gather=gather_module, reduce=program.reduce,
-                        mask_inactive=program.mask_inactive)
-                comb = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}[program.reduce]
-                red_table = red_table.at[sid].set(
-                    comb(red_table[sid], red.astype(dtype)))
-                got_table = got_table.at[sid].max(got)
-            return red_table, got_table
-
+    # ---- stage 3: walk the IR, emit the partial-reduce module -----------
+    if fused.kernel == "edge_block":
+        reduce_module = _emit_edge_block_reduce(
+            ir, fused, g_rev, out_deg, schedule, use_pallas)
+        pes = 1
     else:
-        kernel_flavor = "sparse_xla"
-        # COO of the reversed graph: edge (u → v) appears as (dst=v, src=u)
-        seg_dst, src, wts = G.coo_arrays(g_rev)   # seg: receiving vertex
-        nchunk = splan.num_chunks
-        pes_planned = 1 if splan.mesh is None else splan.config.pes
-        if pes_planned > 1:       # each PE owns nchunk/pes edge chunks
-            nchunk = -(-nchunk // pes_planned) * pes_planned
-        E = g.num_edges
-        csize = -(-E // nchunk)
-        pad = nchunk * csize - E
-        PADV = jnp.iinfo(jnp.int32).max
-        seg_p = jnp.pad(seg_dst, (0, pad), constant_values=PADV)
-        src_p = jnp.pad(src, (0, pad))
-        wts_p = jnp.pad(wts, (0, pad))
-        seg_c = seg_p.reshape(nchunk, csize)
-        src_c = src_p.reshape(nchunk, csize)
-        wts_c = wts_p.reshape(nchunk, csize)
-
-        gather_fn = program.gather
-
-        def partial_reduce(values, active, chunks=None):
-            my_seg, my_src, my_wts = chunks if chunks is not None \
-                else (seg_c, src_c, wts_c)
-
-            def chunk(carry, xs):
-                red_table, got_table = carry
-                seg, srcs, ws = xs
-                valid = seg != PADV
-                safe_src = jnp.where(valid, srcs, 0)
-                v = values[safe_src]
-                d = out_deg[safe_src]
-                msg = gather_fn(v, ws.astype(v.dtype), d)
-                live = valid
-                if program.mask_inactive:
-                    live = live & active[safe_src]
-                msg = jnp.where(live, msg.astype(dtype), ident)
-                safe_seg = jnp.where(valid, seg, 0)
-                if program.reduce == "add":
-                    red_table = red_table.at[safe_seg].add(jnp.where(live, msg, 0))
-                elif program.reduce == "min":
-                    red_table = red_table.at[safe_seg].min(msg)
-                else:
-                    red_table = red_table.at[safe_seg].max(msg)
-                got_table = got_table.at[safe_seg].max(live)
-                return (red_table, got_table), None
-
-            init = (jnp.full((V,), ident, dtype), jnp.zeros((V,), bool))
-            if chunks is not None:   # per-PE slices are pe-varying
-                init = jax.tree.map(
-                    lambda a: jax.lax.pvary(a, ("pe",)), init)
-            (red_table, got_table), _ = jax.lax.scan(
-                chunk, init, (my_seg, my_src, my_wts))
-            return red_table, got_table
-
-    # ---- PE combine (multi-shard) ---------------------------------------
-    pes = 1 if splan.mesh is None else splan.config.pes
-    if splan.mesh is not None and backend != "dense":
-        mesh = splan.mesh
-        k_per_pe = nchunk // pes
-
-        # Each PE owns an edge-chunk slice (paper: edge partitions per PE);
-        # vertex tables replicate and combine with the reduce-matched
-        # collective — psum for 'add' is only correct because the edge sets
-        # are disjoint per PE.
-        def sharded_reduce(values, active):
-            def pe_body(values, active):
-                pe = jax.lax.axis_index("pe")
-                chunks = tuple(
-                    jax.lax.dynamic_slice_in_dim(c, pe * k_per_pe,
-                                                 k_per_pe, 0)
-                    for c in (seg_c, src_c, wts_c))
-                red, got = partial_reduce(values, active, chunks)
-                if program.reduce == "add":
-                    red = jax.lax.psum(red, "pe")
-                elif program.reduce == "min":
-                    red = jax.lax.pmin(red, "pe")
-                else:
-                    red = jax.lax.pmax(red, "pe")
-                got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
-                return red, got
-
-            return jax.shard_map(pe_body, mesh=mesh,
-                                 in_specs=(P(), P()), out_specs=(P(), P()))(
-                values, active)
-
-        reduce_module = sharded_reduce
-    else:
-        pes = 1 if backend == "dense" else pes
-        reduce_module = partial_reduce
+        pes = 1 if exchange_op is None else exchange_op.pes
+        partial_reduce, chunk_arrays, nchunk = _emit_segment_scan_reduce(
+            ir, fused, g_rev, out_deg, splan, pes)
+        if exchange_op is not None:
+            reduce_module = _emit_exchange(
+                exchange_op, partial_reduce, chunk_arrays, nchunk, splan.mesh)
+        else:
+            reduce_module = partial_reduce
 
     # ---- superstep = Receive/Reduce (module) + Apply + frontier ---------
-    apply_fn = program.apply
+    apply_fn = apply_op.fn
+    frontier_dead = frontier_op.dead
 
     @jax.jit
     def superstep(values, active):
         red, got = reduce_module(values, active)
         new = apply_fn(values, red)
-        take = got if program.frontier == "changed" else jnp.ones_like(got)
+        if frontier_dead:
+            # frontier='all': every vertex stays active, no change mask
+            return new, jnp.ones_like(active)
+        take = got if frontier_op.mode == "changed" else jnp.ones_like(got)
         new = jnp.where(take, new, values)
         changed = new != values
-        next_active = changed if program.frontier == "changed" \
+        next_active = changed if frontier_op.mode == "changed" \
             else jnp.ones_like(changed)
         return new, next_active
 
@@ -316,21 +359,23 @@ def translate(
     # AOT compile so translation time includes staging (paper's TT metric)
     if aot_compile:
         v0, a0 = init_state(roots=0 if program.frontier == "changed" else None)
-        superstep_c = superstep.lower(v0, a0).compile()
+        superstep.lower(v0, a0).compile()
     tt = time.perf_counter() - t0
 
     est_collective = comm.estimate_collective_bytes(
         V, dtype, pes, quantized=schedule.message_dtype == "int8")
     report = TranslationReport(
         program=program.name,
-        backend=kernel_flavor,
-        gather_module=gather_module,
-        reduce_module=program.reduce,
+        backend=ir.backend,
+        gather_module=fused.gather.module,
+        reduce_module=fused.reduce.op,
         pipelines=splan.num_chunks,
         pes=pes,
         translate_time_s=tt,
         est_flops_per_superstep=2.0 * g.num_edges,
         est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
         est_collective_bytes=est_collective,
+        pass_report=pipeline_report.render() if dump_passes else None,
+        ir_dump=ir.dump(),
     )
     return CompiledGraphProgram(superstep, init_state, report, max_iters)

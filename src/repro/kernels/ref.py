@@ -19,7 +19,12 @@ def _identity(reduce: str, dtype):
     return {"add": 0.0, "min": jnp.inf, "max": -jnp.inf}[reduce]
 
 
-def _gather_msg(gather: str, v, w, d):
+def gather_msg(gather: str, v, w, d):
+    """Evaluate a menu gather op: (src_value, weight, degree) → message.
+
+    The ground truth each pre-built module implements; the translator's
+    gather-classification pass probes user callables against these.
+    """
     if gather == "copy":
         return v
     if gather == "plus_one":
@@ -31,6 +36,9 @@ def _gather_msg(gather: str, v, w, d):
     if gather == "div_deg":
         return v / jnp.maximum(d, 1).astype(v.dtype)
     raise ValueError(gather)
+
+
+_gather_msg = gather_msg  # backward-compatible alias (pre-IR translator)
 
 
 def edge_block_reduce_ref(

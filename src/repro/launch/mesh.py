@@ -4,20 +4,19 @@ from __future__ import annotations
 
 import jax
 
+from ..core._jax_compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(shape))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(pes: int = 1):
     """Small mesh over whatever devices exist (tests / CPU demos)."""
     n = min(pes, len(jax.devices()))
-    return jax.make_mesh((n,), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh((n,), ("model",))
 
 
 # TPU v5e-class roofline constants (per spec).

@@ -10,6 +10,8 @@ from repro.configs import smoke_config
 from repro.models.model import LModel
 from repro.models.param import materialize
 
+pytestmark = pytest.mark.slow  # model-heavy; run with -m slow
+
 FAMS = ["mistral-nemo-12b", "gemma3-4b", "falcon-mamba-7b",
         "recurrentgemma-9b", "grok-1-314b", "moonshot-v1-16b-a3b",
         "whisper-large-v3", "chatglm3-6b", "qwen3-8b", "chameleon-34b"]

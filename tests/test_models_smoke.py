@@ -47,6 +47,7 @@ def test_full_config_matches_assignment(arch):
     assert got == expected
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_train_step(arch):
     cfg = smoke_config(arch)
@@ -68,6 +69,7 @@ def test_smoke_train_step(arch):
     assert int(new_state["step"]) == 1
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_logits_shape(arch):
     cfg = smoke_config(arch)
@@ -81,6 +83,7 @@ def test_smoke_logits_shape(arch):
     assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_smoke_loss_decreases(arch):
     """A few steps on a repeated batch must reduce the loss."""

@@ -1,6 +1,10 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import algorithms as alg

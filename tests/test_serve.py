@@ -12,6 +12,9 @@ from repro.models.param import materialize
 from repro.serve.decode import BatchScheduler, Request, make_serve_fns
 
 
+pytestmark = pytest.mark.slow  # model-heavy; run with -m slow
+
+
 @pytest.fixture(scope="module")
 def model_and_params():
     cfg = dataclasses.replace(smoke_config("qwen3-8b"), dtype="float32")

@@ -75,6 +75,7 @@ def test_long_context_batch1():
     assert spec[1] is not None
 
 
+@pytest.mark.slow
 def test_multi_device_lowering(subproc):
     """Small arch lowers + compiles on an 8-device (2,4) mesh; memory and
     collective inventory come out sane."""
@@ -83,8 +84,8 @@ import jax, jax.numpy as jnp
 from repro.configs import smoke_config
 from repro.launch import cells as C
 import dataclasses
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core._jax_compat import make_mesh, set_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 import repro.configs.base as B
 cfg = dataclasses.replace(smoke_config("qwen3-8b"),
                           d_model=64, vocab_size=512, microbatch_seqs=4)
@@ -92,7 +93,7 @@ shape = B.ShapeConfig("t", 32, 8, "train")
 import repro.configs.registry as R
 R_SHAPES = dict(B.SHAPES); B.SHAPES["t"] = shape
 cell = C.build_cell("qwen3-8b", "t", mesh, cfg_override=cfg)
-with jax.set_mesh(mesh):
+with set_mesh(mesh):
     comp = jax.jit(cell.fn, donate_argnums=cell.donate).lower(*cell.args).compile()
 m = comp.memory_analysis()
 assert m.temp_size_in_bytes < 1 << 30
@@ -104,6 +105,7 @@ print("MULTIDEV_OK", counts)
     assert "MULTIDEV_OK" in out
 
 
+@pytest.mark.slow
 def test_production_mesh_shapes(subproc):
     out = subproc("""
 from repro.launch.mesh import make_production_mesh
@@ -117,6 +119,7 @@ print("MESH_OK")
     assert "MESH_OK" in out
 
 
+@pytest.mark.slow
 def test_checkpoint_reshard_across_meshes(subproc):
     """Elastic restart: save on a (4,2) mesh, restore onto (2,2) — the
     fault-tolerance path after losing half the nodes."""
@@ -124,15 +127,13 @@ def test_checkpoint_reshard_across_meshes(subproc):
 import jax, jax.numpy as jnp, numpy as np, tempfile
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import checkpoint as ckpt
+from repro.core._jax_compat import make_mesh
 d = tempfile.mkdtemp()
-mesh1 = jax.make_mesh((4, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh1 = make_mesh((4, 2), ("data", "model"))
 tree = {"w": jax.device_put(jnp.arange(64.0).reshape(8, 8),
                             NamedSharding(mesh1, P("data", "model")))}
 ckpt.save(d, 1, tree)
-mesh2 = jax.make_mesh((2, 2), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2,
-                      devices=jax.devices()[:4])
+mesh2 = make_mesh((2, 2), ("data", "model"), devices=jax.devices()[:4])
 shardings = {"w": NamedSharding(mesh2, P("data", "model"))}
 restored = ckpt.restore(d, 1, tree, shardings=shardings)
 np.testing.assert_array_equal(np.asarray(restored["w"]),

@@ -6,6 +6,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import smoke_config
 from repro.configs.base import ShapeConfig
@@ -44,6 +45,7 @@ def test_paper_algorithm1_flow(tmp_path):
     assert comm.stats.host_to_device_bytes > 0
 
 
+@pytest.mark.slow
 def test_lm_train_checkpoint_restart(tmp_path):
     """Train k steps → checkpoint → 'crash' → restore → continue; the
     restarted run must be bitwise-identical to an uninterrupted one."""
@@ -79,6 +81,7 @@ def test_lm_train_checkpoint_restart(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_dryrun_cell_small_scale(subproc):
     """The dry-run machinery itself (lower→compile→memory→collectives→FD
     cost model) on an 8-device mesh with a reduced config."""
@@ -87,8 +90,8 @@ import jax, dataclasses
 from repro.configs import smoke_config
 import repro.configs.base as B
 from repro.launch import cells as C, costing
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.core._jax_compat import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = dataclasses.replace(smoke_config("gemma3-4b"), microbatch_seqs=4)
 B.SHAPES["tiny_train"] = B.ShapeConfig("tiny_train", 32, 8, "train")
 cell = C.build_cell("gemma3-4b", "tiny_train", mesh, cfg_override=cfg)

@@ -74,6 +74,7 @@ def test_lr_schedule():
     assert float(O.lr_at(cfg, jnp.asarray(10**6))) == pytest.approx(0.1)
 
 
+@pytest.mark.slow
 def test_microbatch_equivalence():
     """M microbatches of b == one batch of M·b (same grads ⇒ same params)."""
     cfg = dataclasses.replace(smoke_config("qwen3-8b"), dtype="float32",
