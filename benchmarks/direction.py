@@ -1,0 +1,106 @@
+"""Direction-optimization crossover: BFS push vs pull vs auto.
+
+The tentpole claim behind the dual-mode engine: on a frontier algorithm the
+pull engine streams all E edges every superstep, while the
+direction-optimized engine pays ~Σ out_deg(frontier) on push supersteps —
+so BFS total edge work drops from O(diameter·E) toward O(E).  This entry
+measures, on an R-MAT graph matching the acceptance setup (V≈50k, E≈500k):
+
+* wall-clock per full BFS run and MTEPS (traversed edges / second) for
+  ``direction='pull' | 'push' | 'auto'``;
+* the algorithmic edge-traversal counters from ``report.run_stats``
+  (E per pull superstep, m_f per push superstep) and the direction-switch
+  counts, demonstrating the crossover;
+* translate time (TT) per mode.
+
+``collect()`` returns the full dict (the ``benchmarks/run.py --json``
+payload → ``BENCH_graph.json``); ``run()`` renders the standard CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import algorithms as alg
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core.scheduler import DirectionPolicy, ScheduleConfig
+from repro.core.translator import translate
+
+MODES = ("pull", "push", "auto")
+
+
+def _time_run(prog, root, repeats=3):
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        values, iters = prog.run(roots=root)
+        jax.block_until_ready(values)
+        best = min(best, time.perf_counter() - t0)
+    return best, values, iters
+
+
+def collect(num_vertices: int = 50_000, num_edges: int = 500_000,
+            seed: int = 0, root: int = 0, repeats: int = 3) -> dict:
+    """Run the BFS direction sweep; returns the JSON-serializable payload."""
+    src, dst = G.rmat_edges(num_vertices, num_edges, seed=seed)
+    g = G.from_edge_list(src, dst, num_vertices=num_vertices)
+    out = {
+        "graph": {"num_vertices": g.num_vertices, "num_edges": g.num_edges,
+                  "generator": f"rmat(seed={seed})"},
+        "modes": {},
+    }
+    baseline = None
+    for mode in MODES:
+        prog = translate(
+            dsl.bfs_program(alg.INT_MAX), g,
+            ScheduleConfig(direction=DirectionPolicy(mode=mode)))
+        wall_s, levels, iters = _time_run(prog, root, repeats)
+        lv = np.asarray(levels)
+        if baseline is None:
+            baseline = lv
+        else:                      # all modes must agree bit-exactly
+            assert np.array_equal(baseline, lv), f"{mode} diverged from pull"
+        te = alg.traversed_edges(g, levels)
+        out["modes"][mode] = {
+            "wall_s": wall_s,
+            "iters": int(iters),
+            "mteps": te / wall_s / 1e6,
+            "translate_time_s": prog.report.translate_time_s,
+            "backend": prog.report.backend,
+            **prog.report.run_stats,
+        }
+    pull, auto = out["modes"]["pull"], out["modes"]["auto"]
+    out["crossover"] = {
+        "traversal_reduction_auto_vs_pull":
+            pull["edges_traversed"] / max(auto["edges_traversed"], 1),
+        "speedup_auto_vs_pull": pull["wall_s"] / auto["wall_s"],
+        "reached": int((baseline < alg.INT_MAX).sum()),
+    }
+    return out
+
+
+def run() -> list[tuple[str, float, str]]:
+    """CSV rows for the benchmark driver (smaller default for quick runs)."""
+    data = collect(num_vertices=20_000, num_edges=200_000, repeats=2)
+    rows = []
+    for mode, m in data["modes"].items():
+        rows.append((f"direction/bfs_{mode}_wall", m["wall_s"] * 1e6,
+                     f"{m['mteps']:.1f}MTEPS"))
+        rows.append((f"direction/bfs_{mode}_edges_traversed", 0.0,
+                     str(m["edges_traversed"])))
+        rows.append((f"direction/bfs_{mode}_supersteps", 0.0,
+                     f"push={m['push_supersteps']},pull={m['pull_supersteps']}"))
+    c = data["crossover"]
+    rows.append(("direction/traversal_reduction_auto_vs_pull", 0.0,
+                 f"{c['traversal_reduction_auto_vs_pull']:.2f}x"))
+    rows.append(("direction/speedup_auto_vs_pull", 0.0,
+                 f"{c['speedup_auto_vs_pull']:.2f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,12 +1,21 @@
 """Benchmark driver: one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+
+Default mode prints ``name,us_per_call,derived`` CSV rows for the selected
+modules.  ``--json [path]`` runs the direction-optimization graph benchmark
+at the acceptance scale (V≈50k, E≈500k R-MAT) and writes the machine-
+readable payload — BFS MTEPS for push/pull/auto, per-mode edge-traversal
+and direction-switch counters, and translate time — to ``BENCH_graph.json``
+(CI's perf artifact).
+"""
 from __future__ import annotations
 
+import json
 import sys
 
 
-def main() -> None:
-    from . import fig5, lm_step, pass_report, roofline, table_iv, table_v
+def _run_csv(only: list[str]) -> None:
+    from . import (direction, fig5, lm_step, pass_report, roofline, table_iv,
+                   table_v)
     mods = {
         "table_iv": table_iv,
         "table_v": table_v,
@@ -14,12 +23,37 @@ def main() -> None:
         "lm_step": lm_step,
         "roofline": roofline,
         "pass_report": pass_report,
+        "direction": direction,
     }
-    only = sys.argv[1:] or list(mods)
+    only = only or list(mods)
     print("name,us_per_call,derived")
     for name in only:
         for row in mods[name].run():
             print(",".join(str(x) for x in row), flush=True)
+
+
+def _run_json(path: str) -> None:
+    from . import direction
+    data = direction.collect()
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    c = data["crossover"]
+    print(f"wrote {path}")
+    for mode, m in data["modes"].items():
+        print(f"  bfs[{mode}]: {m['mteps']:.1f} MTEPS, "
+              f"{m['edges_traversed']} edges traversed, "
+              f"TT={m['translate_time_s']:.2f}s")
+    print(f"  auto vs pull: {c['traversal_reduction_auto_vs_pull']:.2f}x "
+          f"fewer edge-traversals, {c['speedup_auto_vs_pull']:.2f}x wall-clock")
+
+
+def main() -> None:
+    argv = sys.argv[1:]
+    if "--json" in argv:
+        argv.remove("--json")
+        _run_json(argv[0] if argv else "BENCH_graph.json")
+        return
+    _run_csv(argv)
 
 
 if __name__ == '__main__':

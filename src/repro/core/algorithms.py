@@ -16,29 +16,40 @@ import numpy as np
 from . import dsl
 from .comm import CommManager
 from .graph import Graph
-from .scheduler import ScheduleConfig
+from .scheduler import DirectionPolicy, ScheduleConfig
 from .translator import CompiledGraphProgram, translate
 
 INT_MAX = 2**30
 
 
-def _schedule(pipelines: int, pes: int, backend: str) -> ScheduleConfig:
-    return ScheduleConfig(pipelines=pipelines, pes=pes, backend=backend)
+def _schedule(pipelines: int, pes: int, backend: str,
+              direction: str | DirectionPolicy = "auto") -> ScheduleConfig:
+    if isinstance(direction, str):
+        direction = DirectionPolicy(mode=direction)
+    return ScheduleConfig(pipelines=pipelines, pes=pes, backend=backend,
+                          direction=direction)
 
 
 def bfs(g: Graph, root: int = 0, *, pipelines: int = 8, pes: int = 1,
-        backend: str = "auto", comm: CommManager | None = None):
-    """Paper Algorithm 1. Returns (levels (V,), iterations)."""
+        backend: str = "auto", direction: str | DirectionPolicy = "auto",
+        comm: CommManager | None = None):
+    """Paper Algorithm 1. Returns (levels (V,), iterations).
+
+    ``direction`` is the runtime direction policy ('pull' | 'push' |
+    'auto'): 'auto' switches push ⇄ pull per superstep on frontier
+    occupancy — results are bit-exact across all three.
+    """
     prog = translate(dsl.bfs_program(INT_MAX), g,
-                     _schedule(pipelines, pes, backend), comm)
+                     _schedule(pipelines, pes, backend, direction), comm)
     levels, iters = prog.run(roots=root)
     return levels, iters, prog.report
 
 
 def sssp(g: Graph, root: int = 0, *, pipelines: int = 8, pes: int = 1,
-         backend: str = "auto", comm: CommManager | None = None):
+         backend: str = "auto", direction: str | DirectionPolicy = "auto",
+         comm: CommManager | None = None):
     prog = translate(dsl.sssp_program(), g,
-                     _schedule(pipelines, pes, backend), comm)
+                     _schedule(pipelines, pes, backend, direction), comm)
     dist, iters = prog.run(roots=root)
     return dist, iters, prog.report
 
@@ -53,7 +64,8 @@ def pagerank(g: Graph, *, iters: int = 20, damping: float = 0.85,
 
 
 def wcc(g: Graph, *, pipelines: int = 8, pes: int = 1,
-        backend: str = "auto", comm: CommManager | None = None):
+        backend: str = "auto", direction: str | DirectionPolicy = "auto",
+        comm: CommManager | None = None):
     """Weakly connected components: run label propagation on G ∪ Gᵀ."""
     from .graph import from_edge_list, to_coo
     src, dst, _ = to_coo(g)
@@ -61,7 +73,7 @@ def wcc(g: Graph, *, pipelines: int = 8, pes: int = 1,
                          np.concatenate([dst, src]),
                          num_vertices=g.num_vertices)
     prog = translate(dsl.wcc_program(), und,
-                     _schedule(pipelines, pes, backend), comm)
+                     _schedule(pipelines, pes, backend, direction), comm)
     labels, iters = prog.run()
     return labels, iters, prog.report
 

@@ -17,20 +17,30 @@ import dataclasses
 from typing import Any, Callable
 
 import jax.numpy as jnp
+import numpy as np
 
 GatherFn = Callable[[Any, Any, Any], Any]   # (src_value, edge_weight, src_degree) -> msg
 ApplyFn = Callable[[Any, Any], Any]         # (old_value, reduced_msg) -> new_value
 
 
+INIT_SPECS = ("iota",)               # named init specs (beyond scalars/arrays)
+
+
 @dataclasses.dataclass(frozen=True)
 class VertexProgram:
-    """A GAS-model graph program (the DSL's function-layer object)."""
+    """A GAS-model graph program (the DSL's function-layer object).
+
+    ``init_value`` is first-class: a scalar or (V,) array, the named spec
+    ``'iota'`` (vertex id, e.g. WCC labels), or a callable
+    ``fn(num_vertices) -> (V,) array`` — the translator materializes it, so
+    no algorithm needs a special-cased runner.
+    """
 
     name: str
     gather: GatherFn
     reduce: str                      # 'add' | 'min' | 'max'
     apply: ApplyFn
-    init_value: Any                  # initial vertex value (scalar or array)
+    init_value: Any                  # scalar | array | 'iota' | fn(V)->array
     frontier: str = "changed"        # 'changed' | 'all'
     value_dtype: Any = jnp.float32
     # messages from inactive sources are masked to the reduce identity
@@ -42,6 +52,20 @@ class VertexProgram:
             raise ValueError(f"unsupported reduce: {self.reduce}")
         if self.frontier not in ("changed", "all"):
             raise ValueError(f"unsupported frontier mode: {self.frontier}")
+        if isinstance(self.init_value, str) and self.init_value not in INIT_SPECS:
+            raise ValueError(f"unsupported init spec: {self.init_value!r}")
+
+    def materialize_init(self, num_vertices: int) -> Any:
+        """Initial (V,) vertex values for this program (paper: Vertices)."""
+        dtype = jnp.dtype(self.value_dtype)
+        if isinstance(self.init_value, str):     # named spec
+            if self.init_value == "iota":
+                return jnp.arange(num_vertices, dtype=dtype)
+        if callable(self.init_value):
+            return jnp.asarray(self.init_value(num_vertices), dtype)
+        if np.isscalar(self.init_value) or jnp.ndim(self.init_value) == 0:
+            return jnp.full((num_vertices,), self.init_value, dtype)
+        return jnp.asarray(self.init_value, dtype)
 
 
 def reduce_identity(op: str, dtype) -> Any:
@@ -106,7 +130,7 @@ def wcc_program() -> VertexProgram:
         gather=lambda v, w, d: v,
         reduce="min",
         apply=jnp.minimum,
-        init_value=0,                # overwritten with iota by the runner
+        init_value="iota",           # label = own vertex id
         frontier="changed",
         value_dtype=jnp.int32,
     )

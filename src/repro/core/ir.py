@@ -16,9 +16,18 @@ Ops mirror the paper's hardware modules:
 * :class:`ReduceOp`        — per-vertex accumulation,
 * :class:`FusedGatherReduceOp` — a matched gather+reduce pair bound to one
   pre-built kernel (Pallas ELL edge-block or sparse segment-scan),
+* :class:`PushScatterOp`   — the push-direction twin of the fused pair: a
+  frontier-compacted scatter over forward (out-)edges, inserted by the
+  fusion pass when the direction-legality analysis proved push legal,
 * :class:`ApplyOp`         — vertex update,
 * :class:`FrontierUpdateOp`— next-frontier computation,
 * :class:`ExchangeOp`      — cross-PE combine (the comm manager's plane).
+
+Edge processing carries a *direction*: ``'pull'`` (the canonical lowering —
+every vertex gathers over its in-edges) or ``'both'`` once the
+direction-legality pass proves the push form equivalent (commutative
+reduce with identity masking, sparse ``'changed'`` frontier).  Programs
+pinned to pull record the reason as an IR note, visible in pass dumps.
 
 Everything is an immutable dataclass; passes rewrite with
 ``dataclasses.replace`` so each pipeline stage has a well-defined
@@ -38,6 +47,7 @@ __all__ = [
     "GatherOp",
     "ReduceOp",
     "FusedGatherReduceOp",
+    "PushScatterOp",
     "ApplyOp",
     "FrontierUpdateOp",
     "ExchangeOp",
@@ -60,15 +70,21 @@ class GatherOp:
     ``fn`` against the pre-built module menu (``kernels.ref.GATHER_OPS``);
     an unmatched gather keeps ``module=None`` and forces the general sparse
     path (nothing is rejected, only de-optimized).
+
+    ``direction`` starts as ``'pull'`` (the canonical lowering) and is
+    widened to ``'both'`` by the direction-legality pass when the push
+    (scatter-over-out-edges) form is provably equivalent.
     """
 
     fn: Callable
     module: str | None = None
+    direction: str = "pull"          # 'pull' | 'both'
 
     def render(self) -> str:
         """One-line textual form used in IR dumps."""
         mod = self.module if self.module is not None else "?"
-        return f"Gather(fn={_fn_name(self.fn)}, module={mod})"
+        return (f"Gather(fn={_fn_name(self.fn)}, module={mod}, "
+                f"direction={self.direction})")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -94,16 +110,47 @@ class FusedGatherReduceOp:
 
     Produced by the fusion pass once the backend is known: ``kernel`` is
     ``'edge_block'`` (the Pallas/XLA dense ELL module) or ``'segment_scan'``
-    (the chunk-streamed sparse segment-reduce module).
+    (the chunk-streamed sparse segment-reduce module).  ``direction`` is
+    copied from the gather op: ``'both'`` means the fusion pass also
+    inserted the push-mode :class:`PushScatterOp` twin.
     """
 
     gather: GatherOp
     reduce: ReduceOp
     kernel: str
+    direction: str = "pull"          # 'pull' | 'both'
 
     def render(self) -> str:
         """One-line textual form used in IR dumps."""
         return (f"FusedGatherReduce(kernel={self.kernel}, "
+                f"direction={self.direction}, "
+                f"gather={self.gather.render()}, "
+                f"reduce={self.reduce.render()})")
+
+
+@dataclasses.dataclass(frozen=True)
+class PushScatterOp:
+    """Push-direction edge processing: frontier-compacted forward scatter.
+
+    The dual of :class:`FusedGatherReduceOp`: instead of every vertex
+    gathering over its in-edges, only *active* vertices scatter messages
+    along their out-edges (``red[dst] ⊕= gather(values[src], w, deg)``).
+    Legal only when the direction-legality pass proved the reduce
+    commutative with identity masking and the frontier sparse
+    (``frontier='changed'``, ``mask_inactive=True``) — exactly then the
+    scatter touches ``Σ out_deg(frontier)`` edges instead of all ``E``.
+
+    Emitted by the fusion pass alongside the pull op; the translator emits
+    *both* supersteps and the runtime direction policy picks per superstep.
+    """
+
+    gather: GatherOp
+    reduce: ReduceOp
+    kernel: str = "push_scatter"
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        return (f"PushScatter(kernel={self.kernel}, "
                 f"gather={self.gather.render()}, "
                 f"reduce={self.reduce.render()})")
 

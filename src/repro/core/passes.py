@@ -16,14 +16,18 @@ Concrete passes (in :func:`default_pipeline` order):
 1. :class:`GatherClassificationPass` — the paper's module matching, by
    abstract probing against the pre-built menu (moved out of
    ``translator.py``);
-2. :class:`ReduceIdentityFoldPass` — constant-fold the reduce identity for
+2. :class:`DirectionLegalityPass` — prove (or refute) that the push
+   (scatter-over-out-edges) direction is equivalent to the canonical pull
+   lowering; programs pinned to pull record why as an IR note;
+3. :class:`ReduceIdentityFoldPass` — constant-fold the reduce identity for
    the program dtype;
-3. :class:`BackendSelectionPass` — consume the :mod:`~repro.core.scheduler`
+4. :class:`BackendSelectionPass` — consume the :mod:`~repro.core.scheduler`
    plan, resolve a concrete kernel flavor, and resolve or delete the
    cross-PE :class:`~repro.core.ir.ExchangeOp`;
-4. :class:`GatherReduceFusionPass` — fuse the gather+reduce pair onto the
-   Pallas ELL edge-block or sparse segment-scan kernel;
-5. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
+5. :class:`GatherReduceFusionPass` — fuse the gather+reduce pair onto the
+   Pallas ELL edge-block or sparse segment-scan kernel, inserting the
+   push-mode :class:`~repro.core.ir.PushScatterOp` twin when legal;
+6. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
    ``frontier='all'`` programs so no change mask is emitted.
 
 Every :meth:`PassPipeline.run` records a per-pass before/after textual dump
@@ -42,7 +46,7 @@ import numpy as np
 from ..kernels.ref import GATHER_OPS, gather_msg
 from .dsl import reduce_identity
 from .ir import (ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
-                 GatherOp, ReduceOp, SuperstepIR)
+                 GatherOp, PushScatterOp, ReduceOp, SuperstepIR)
 from .scheduler import ScheduleConfig, SchedulePlan
 
 __all__ = [
@@ -53,12 +57,17 @@ __all__ = [
     "PipelineReport",
     "PassPipeline",
     "GatherClassificationPass",
+    "DirectionLegalityPass",
     "ReduceIdentityFoldPass",
     "BackendSelectionPass",
     "GatherReduceFusionPass",
     "DeadFrontierEliminationPass",
     "default_pipeline",
 ]
+
+# Reduce ops that commute and have a two-sided identity — the algebraic
+# requirement for reordering per-edge contributions in push mode.
+COMMUTATIVE_REDUCES = ("add", "min", "max")
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +229,63 @@ class GatherClassificationPass(Pass):
         return ir.with_note(note)
 
 
+class DirectionLegalityPass(Pass):
+    """Prove push-direction legality, or record why pull is pinned (analysis).
+
+    Pull processes every in-edge each superstep; push scatters only along
+    the frontier's out-edges.  The two are equivalent iff per-edge
+    contributions may arrive in any order and non-frontier sources
+    contribute nothing, i.e.:
+
+    * the reduce is commutative/associative with an identity, *exactly*:
+      ``min``/``max`` always, ``add`` only on integer dtypes (float add is
+      order-sensitive, and push and pull visit edges in different orders);
+    * ``mask_inactive=True`` — pull already drops messages from inactive
+      sources, so skipping those sources entirely changes nothing;
+    * ``frontier='changed'`` — a sparse frontier exists to push from
+      (``'all'`` re-activates every vertex, push degenerates to pull);
+    * single PE — the cross-PE exchange plane is pull-only for now.
+
+    A legal program gets ``Gather.direction='both'``; a pinned program
+    keeps ``'pull'`` and the reason lands in the IR notes (and thus the
+    pass dump — ``translate(..., dump_passes=True)``).
+    """
+
+    name = "direction-legality"
+    kind = "analysis"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Widen ``Gather.direction`` to ``'both'`` or note the pull pin."""
+        gop, rop = ir.find(GatherOp), ir.find(ReduceOp)
+        if gop is None or rop is None or gop.direction != "pull":
+            return ir
+        program = ir.program
+        pes = 1 if ctx.plan.mesh is None else int(ctx.plan.mesh.devices.size)
+        reasons = []
+        if rop.op not in COMMUTATIVE_REDUCES:
+            reasons.append(f"reduce '{rop.op}' is not commutative-with-identity")
+        elif rop.op == "add" and jnp.issubdtype(ir.value_dtype, jnp.floating):
+            # min/max and integer add are order-insensitive; float add is
+            # not, and the 'changed' frontier (new != values) would amplify
+            # one-ulp push/pull differences into different frontier sets
+            reasons.append("float 'add' reduce is order-sensitive (push and "
+                           "pull sum edge contributions in different orders)")
+        if not program.mask_inactive:
+            reasons.append("mask_inactive=False needs messages from "
+                           "inactive sources")
+        if program.frontier != "changed":
+            reasons.append(f"frontier='{program.frontier}' keeps every "
+                           "vertex active (no sparse frontier to push from)")
+        if pes > 1:
+            reasons.append(f"multi-PE exchange (pes={pes}) is pull-only")
+        if reasons:
+            return ir.with_note("direction: pinned to pull ("
+                                + "; ".join(reasons) + ")")
+        ir = ir.replace_op(gop, dataclasses.replace(gop, direction="both"))
+        return ir.with_note("direction: push legal (commutative reduce, "
+                            "identity masking, sparse frontier)")
+
+
 class ReduceIdentityFoldPass(Pass):
     """Constant-fold the reduce identity for the program dtype (transform).
 
@@ -295,6 +361,11 @@ class GatherReduceFusionPass(Pass):
     sparse takes the chunk-streamed ``'segment_scan'`` kernel.  The fused
     op keeps both the matched module name and the original callable, so
     the general path still has the user's gather to trace.
+
+    When the direction-legality pass widened the gather to ``'both'``,
+    the push-mode :class:`~repro.core.ir.PushScatterOp` twin is inserted
+    right after the fused pull op — the translator emits both supersteps
+    and the runtime direction policy picks per superstep.
     """
 
     name = "gather-reduce-fusion"
@@ -307,8 +378,17 @@ class GatherReduceFusionPass(Pass):
             return ir
         kernel = "edge_block" if ir.backend.startswith("dense") \
             else "segment_scan"
-        return ir.fuse(gop, rop, FusedGatherReduceOp(
-            gather=gop, reduce=rop, kernel=kernel))
+        fused = FusedGatherReduceOp(gather=gop, reduce=rop, kernel=kernel,
+                                    direction=gop.direction)
+        ir = ir.fuse(gop, rop, fused)
+        if gop.direction == "both":
+            ops = []
+            for op in ir.ops:
+                ops.append(op)
+                if op is fused:
+                    ops.append(PushScatterOp(gather=gop, reduce=rop))
+            ir = ir.replace(ops=tuple(ops))
+        return ir
 
 
 class DeadFrontierEliminationPass(Pass):
@@ -335,6 +415,7 @@ def default_pipeline() -> PassPipeline:
     """The translator's standard pass order (see module docstring)."""
     return PassPipeline([
         GatherClassificationPass(),
+        DirectionLegalityPass(),
         ReduceIdentityFoldPass(),
         BackendSelectionPass(),
         GatherReduceFusionPass(),

@@ -32,7 +32,14 @@ The TPU mapping implemented here:
 * **Schedule application** — ``pipelines`` → edge-chunk streaming
   (``lax.scan``); ``PEs`` → ``shard_map`` edge partitions with
   psum/pmin/pmax combines (optionally int8-quantized by the comm manager).
-* **AOT staging** — the translator compiles the superstep eagerly and
+* **Direction optimization** — when the direction-legality pass proved the
+  push (scatter-over-out-edges) form equivalent, the translator emits *both*
+  supersteps and stages a device-side ``lax.cond`` switch inside
+  :meth:`CompiledGraphProgram.run`'s while_loop, keyed on frontier occupancy
+  vs the scheduler's :class:`~repro.core.scheduler.DirectionPolicy`
+  thresholds (Beamer-style alpha/beta).  Pull reads the transposed CSR
+  (``G.reverse``); push streams the forward CSR, so no extra transpose.
+* **AOT staging** — the translator compiles the superstep(s) eagerly and
   reports translation time (the paper's "TT" column) and cost estimates.
 """
 from __future__ import annotations
@@ -41,17 +48,17 @@ import dataclasses
 import time
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..kernels import ops as kops
+from ..kernels import push_scatter as push_kernel
 from . import graph as G
 from ._jax_compat import pvary, shard_map
 from .comm import CommManager
 from .dsl import VertexProgram
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
-                 SuperstepIR, lower_program)
+                 PushScatterOp, SuperstepIR, lower_program)
 from .passes import PassContext, classify_gather, default_pipeline
-from .scheduler import ScheduleConfig, SchedulePlan, plan
+from .scheduler import DirectionPolicy, ScheduleConfig, SchedulePlan, plan
 
 __all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
            "translate"]
@@ -79,40 +86,180 @@ class TranslationReport:
     dsl_lines: int | None = None  # set by callers for Table V
     pass_report: str | None = None  # per-pass dump (translate(dump_passes=True))
     ir_dump: str | None = None      # final optimized IR listing
+    direction_policy: str | None = None  # e.g. "auto(alpha=1.5, beta=8)"
+    directions: tuple = ("pull",)   # supersteps emitted: ('pull',[ 'push'])
+    run_stats: dict | None = None   # last run's direction stats (see run())
 
 
 class CompiledGraphProgram:
-    """The translated executable (paper: generated HDL + host C code)."""
+    """The translated executable (paper: generated HDL + host C code).
+
+    When translation emitted both directions, :meth:`run`'s while_loop
+    carries a direction register and switches push ⇄ pull per superstep
+    with a staged ``lax.cond``, following the scheduler's
+    :class:`~repro.core.scheduler.DirectionPolicy` (alpha/beta hysteresis
+    on frontier occupancy).  Both directions compute the identical
+    superstep function, so results are bit-exact regardless of the policy.
+    """
 
     def __init__(self, superstep, init_state, report: TranslationReport,
-                 max_iters: int):
+                 max_iters: int, *, push_superstep=None,
+                 direction: DirectionPolicy | None = None,
+                 out_degrees=None, num_vertices: int = 0, num_edges: int = 0):
         self._superstep = superstep
+        self._push_superstep = push_superstep
         self._init_state = init_state
+        self._direction = direction or DirectionPolicy(mode="pull")
+        self._mode = self._direction.mode if push_superstep is not None \
+            else "pull"
+        self._loop_cache: dict = {}
+        self._out_degrees = out_degrees
+        self._num_vertices = num_vertices
+        self._num_edges = num_edges
         self.report = report
         self.max_iters = max_iters
+        self.last_run_stats: dict | None = None
 
     def init_state(self, roots=None, values=None):
         return self._init_state(roots=roots, values=values)
 
     def superstep(self, values, active):
+        """One pull-direction superstep (the canonical form)."""
         return self._superstep(values, active)
 
-    def run(self, roots=None, values=None):
-        """Paper Algorithm 1's while-loop, as a device-side while_loop."""
-        values, active = self.init_state(roots=roots, values=values)
+    def superstep_push(self, values, active):
+        """One push-direction superstep; ``None``-guard via report.directions."""
+        if self._push_superstep is None:
+            raise ValueError("program was translated pull-only "
+                             f"({self.report.direction_policy})")
+        return self._push_superstep(values, active)
+
+    @property
+    def _run_loop(self):
+        """The staged while-loop for this program's own direction mode."""
+        return self._staged_loop(self._mode)
+
+    def _staged_loop(self, mode: str):
+        """Algorithm 1's while-loop with the direction register, jitted.
+
+        Staged once per (program, mode) — an eager ``lax.while_loop``
+        would re-trace on every :meth:`run` call — and pure (vmap-safe):
+        per-lane freeze guards let :meth:`run_batch` vmap it without
+        over-counting iterations on converged lanes.  The jitted function
+        maps ``(values, active)`` to
+        ``(values, iters, (push_steps, switches, push_edges))``.
+        """
+        if mode in self._loop_cache:
+            return self._loop_cache[mode]
+        pull, push = self._superstep, self._push_superstep
+        policy = self._direction
+        V, E = self._num_vertices, self._num_edges
+        out_deg = self._out_degrees
+        max_iters = self.max_iters
+
+        def choose(prev_dir, active):
+            # frontier occupancy: n_f vertices, m_f out-edges (≤ E < 2^31)
+            m_f = jnp.sum(jnp.where(active, out_deg, 0))
+            if mode == "pull":
+                return jnp.asarray(0, jnp.int32), m_f
+            if mode == "push":
+                return jnp.asarray(1, jnp.int32), m_f
+            n_f = jnp.sum(active.astype(jnp.int32))
+            stay_push = m_f.astype(jnp.float32) * policy.alpha < E
+            enter_push = n_f.astype(jnp.float32) * policy.beta < V
+            return (jnp.where(prev_dir == 1, stay_push, enter_push)
+                    .astype(jnp.int32), m_f)
+
+        def step(direction, values, active):
+            if mode == "pull":
+                return pull(values, active)
+            if mode == "push":
+                return push(values, active)
+            return jax.lax.cond(direction == 1, push, pull, values, active)
 
         def cond(state):
-            _, active, it = state
-            return jnp.logical_and(jnp.any(active), it < self.max_iters)
+            _, active, it, *_ = state
+            return jnp.logical_and(jnp.any(active), it < max_iters)
 
         def body(state):
-            values, active, it = state
-            values, active = self._superstep(values, active)
-            return values, active, it + 1
+            values, active, it, direction, pushes, switches, push_edges = state
+            alive = jnp.logical_and(jnp.any(active), it < max_iters)
+            new_dir, m_f = choose(direction, active)
+            new_values, new_active = step(new_dir, values, active)
+            inc = alive.astype(jnp.int32)
+            values = jnp.where(alive, new_values, values)
+            active = jnp.where(alive, new_active, active)
+            pushes = pushes + new_dir * inc
+            switches = switches + (new_dir != direction).astype(jnp.int32) * inc
+            # only the push part needs a device counter; the pull part is
+            # pull_supersteps·E, computed exactly host-side in run()
+            push_edges = push_edges + m_f.astype(jnp.int32) * new_dir * inc
+            direction = jnp.where(alive, new_dir, direction)
+            return values, active, it + inc, direction, pushes, switches, \
+                push_edges
 
-        values, active, iters = jax.lax.while_loop(
-            cond, body, (values, active, jnp.asarray(0, jnp.int32)))
+        @jax.jit
+        def loop(values, active):
+            z = jnp.asarray(0, jnp.int32)
+            state = (values, active, z, z, z, z, z)
+            values, active, iters, _, pushes, switches, push_edges = \
+                jax.lax.while_loop(cond, body, state)
+            return values, iters, (pushes, switches, push_edges)
+
+        self._loop_cache[mode] = loop
+        return loop
+
+    def run(self, roots=None, values=None):
+        """Paper Algorithm 1's while-loop, as a device-side while_loop.
+
+        With both directions emitted and an ``'auto'`` policy, every
+        superstep re-decides its direction on frontier occupancy (the
+        runtime scheduler picking the right module per phase).  Per-run
+        direction stats land on ``self.last_run_stats`` and
+        ``report.run_stats``: push/pull superstep counts, direction
+        switches, and the algorithmic edge-traversal count (``m_f`` per
+        push superstep, ``E`` per pull superstep).
+        """
+        values, active = self.init_state(roots=roots, values=values)
+        values, iters, (pushes, switches, push_edges) = \
+            self._run_loop(values, active)
+        pull_steps = int(iters) - int(pushes)
+        stats = {
+            "push_supersteps": int(pushes),
+            "pull_supersteps": pull_steps,
+            "direction_switches": int(switches),
+            # exact: python-int pull part + int32 push part (m_f ≤ E)
+            "edges_traversed": pull_steps * self._num_edges + int(push_edges),
+        }
+        self.last_run_stats = stats
+        self.report.run_stats = stats
         return values, iters
+
+    def run_batch(self, roots):
+        """Batched Algorithm 1: vmap the while-loop over k root vertices.
+
+        Returns ``(values (k, V), iters (k,))`` — each row identical to a
+        sequential ``run(roots=root)``.  Converged lanes freeze (values,
+        frontier, and iteration counter) while slower lanes finish, so the
+        batch matches k sequential runs exactly.  First step toward the
+        many-query serving story in ROADMAP.md.
+
+        An ``'auto'`` policy degenerates to pull here: under vmap a
+        ``lax.cond`` lowers to a select that executes *both* branches per
+        lane, so per-lane dynamic switching would pay pull + push every
+        superstep.  Results are unaffected (directions are bit-exact);
+        a pinned ``'push'`` policy is honored as-is (no cond to batch).
+        """
+        roots = jnp.asarray(roots)
+        loop = self._staged_loop("pull" if self._mode == "auto"
+                                 else self._mode)
+
+        def one(root):
+            values, active = self.init_state(roots=root)
+            values, iters, _ = loop(values, active)
+            return values, iters
+
+        return jax.vmap(one)(roots)
 
 
 # ---------------------------------------------------------------------------
@@ -147,10 +294,15 @@ def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
                     nbr, wgt, values, out_deg, active,
                     gather=gather_module, reduce=fused.reduce.op,
                     mask_inactive=program.mask_inactive)
-            comb = {"add": jnp.add, "min": jnp.minimum,
-                    "max": jnp.maximum}[fused.reduce.op]
-            red_table = red_table.at[sid].set(
-                comb(red_table[sid], red.astype(dtype)))
+            # scatter-combine: sid may repeat (a hub split across several
+            # max-width ELL rows), so use at[].add/min/max — a .set() of
+            # comb(old, new) silently drops all but one duplicate row
+            if fused.reduce.op == "add":
+                red_table = red_table.at[sid].add(red.astype(dtype))
+            elif fused.reduce.op == "min":
+                red_table = red_table.at[sid].min(red.astype(dtype))
+            else:
+                red_table = red_table.at[sid].max(red.astype(dtype))
             got_table = got_table.at[sid].max(got)
         return red_table, got_table
 
@@ -220,6 +372,33 @@ def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
         return red_table, got_table
 
     return partial_reduce, (seg_c, src_c, wts_c), nchunk
+
+
+def _emit_push_scatter(ir: SuperstepIR, push_op: PushScatterOp, g: G.Graph,
+                       out_deg, splan: SchedulePlan):
+    """Emit the push-direction frontier-compacted scatter module.
+
+    Streams the *forward* CSR's COO chunks (no transpose — ``g`` already
+    holds out-edges), scattering messages from active sources with
+    ``at[].add/min/max``; chunks with no active source are skipped via
+    ``lax.cond`` (chunk-granular frontier compaction).
+    """
+    dtype = ir.value_dtype
+    V = g.num_vertices
+    src, dst, wts = G.coo_arrays(g)
+    dst_c, src_c, wgt_c = push_kernel.chunk_coo(
+        dst, src, wts, num_chunks=splan.num_chunks)
+    ident = push_op.reduce.identity
+    gather_fn = push_op.gather.fn
+    reduce_op = push_op.reduce.op
+
+    def partial_reduce(values, active):
+        return push_kernel.push_scatter_reduce(
+            dst_c, src_c, wgt_c, values, out_deg, active,
+            gather_fn=gather_fn, reduce=reduce_op, identity=ident,
+            num_vertices=V, dtype=dtype)
+
+    return partial_reduce
 
 
 def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
@@ -324,28 +503,35 @@ def translate(
     apply_fn = apply_op.fn
     frontier_dead = frontier_op.dead
 
-    @jax.jit
-    def superstep(values, active):
-        red, got = reduce_module(values, active)
-        new = apply_fn(values, red)
-        if frontier_dead:
-            # frontier='all': every vertex stays active, no change mask
-            return new, jnp.ones_like(active)
-        take = got if frontier_op.mode == "changed" else jnp.ones_like(got)
-        new = jnp.where(take, new, values)
-        changed = new != values
-        next_active = changed if frontier_op.mode == "changed" \
-            else jnp.ones_like(changed)
-        return new, next_active
+    def make_superstep(module):
+        @jax.jit
+        def superstep(values, active):
+            red, got = module(values, active)
+            new = apply_fn(values, red)
+            if frontier_dead:
+                # frontier='all': every vertex stays active, no change mask
+                return new, jnp.ones_like(active)
+            take = got if frontier_op.mode == "changed" else jnp.ones_like(got)
+            new = jnp.where(take, new, values)
+            changed = new != values
+            next_active = changed if frontier_op.mode == "changed" \
+                else jnp.ones_like(changed)
+            return new, next_active
+        return superstep
+
+    superstep = make_superstep(reduce_module)
+
+    # ---- push direction: emit the twin superstep when legal + wanted ----
+    push_op = ir.find(PushScatterOp)
+    policy = splan.direction
+    push_superstep = None
+    if push_op is not None and policy.mode != "pull":
+        push_superstep = make_superstep(
+            _emit_push_scatter(ir, push_op, g, out_deg, splan))
 
     def init_state(roots=None, values=None):
         if values is None:
-            if np.isscalar(program.init_value) or jnp.ndim(program.init_value) == 0:
-                values = jnp.full((V,), program.init_value, dtype)
-            else:
-                values = jnp.asarray(program.init_value, dtype)
-        if program.name == "wcc":
-            values = jnp.arange(V, dtype=dtype)
+            values = program.materialize_init(V)
         if roots is not None:
             root_val = jnp.asarray(0, dtype)
             values = values.at[jnp.asarray(roots)].set(root_val)
@@ -360,6 +546,8 @@ def translate(
     if aot_compile:
         v0, a0 = init_state(roots=0 if program.frontier == "changed" else None)
         superstep.lower(v0, a0).compile()
+        if push_superstep is not None:
+            push_superstep.lower(v0, a0).compile()
     tt = time.perf_counter() - t0
 
     est_collective = comm.estimate_collective_bytes(
@@ -377,5 +565,11 @@ def translate(
         est_collective_bytes=est_collective,
         pass_report=pipeline_report.render() if dump_passes else None,
         ir_dump=ir.dump(),
+        direction_policy=policy.describe(),
+        directions=("pull", "push") if push_superstep is not None
+        else ("pull",),
     )
-    return CompiledGraphProgram(superstep, init_state, report, max_iters)
+    return CompiledGraphProgram(
+        superstep, init_state, report, max_iters,
+        push_superstep=push_superstep, direction=policy,
+        out_degrees=out_deg, num_vertices=V, num_edges=g.num_edges)

@@ -1,3 +1,4 @@
-from . import decode_gqa, edge_block, ops, ref, segment_sum
+from . import decode_gqa, edge_block, ops, push_scatter, ref, segment_sum
 
-__all__ = ["decode_gqa", "edge_block", "ops", "ref", "segment_sum"]
+__all__ = ["decode_gqa", "edge_block", "ops", "push_scatter", "ref",
+           "segment_sum"]

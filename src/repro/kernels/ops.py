@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import decode_gqa as _decode_gqa
 from . import edge_block as _edge_block
+from . import push_scatter as _push_scatter
 from . import segment_sum as _segment_sum
 from . import ref as _ref
 
@@ -44,6 +45,34 @@ def segment_reduce(seg, val, num_segments, *, reduce="add", block_e=4096,
             seg, val, num_segments, reduce=reduce, block_e=block_e,
             interpret=not _on_tpu())
     return _ref.segment_reduce_ref(seg, val, num_segments, reduce=reduce)
+
+
+@partial(jax.jit, static_argnames=("gather", "reduce", "mask_inactive",
+                                   "num_chunks", "use_kernel"))
+def push_scatter_reduce(src, dst, wgt, values, degrees, active, *, gather,
+                        reduce, mask_inactive=True, num_chunks=8,
+                        use_kernel=True):
+    """Push-direction frontier scatter over flat forward-COO arrays.
+
+    ``gather`` is a menu-module name (see ``ref.GATHER_OPS``); the
+    translator passes its own traced callable to the kernel module
+    directly, this wrapper is the menu-dispatch convenience for tests
+    and direct callers.
+    """
+    if use_kernel:
+        dst_c, src_c, wgt_c = _push_scatter.chunk_coo(
+            dst, src, wgt, num_chunks=num_chunks)
+        ident = _ref._identity(reduce, values.dtype)
+        if not mask_inactive:
+            active = jnp.ones_like(active)
+        return _push_scatter.push_scatter_reduce(
+            dst_c, src_c, wgt_c, values, degrees, active,
+            gather_fn=partial(_ref.gather_msg, gather), reduce=reduce,
+            identity=ident, num_vertices=values.shape[0],
+            dtype=values.dtype)
+    return _ref.push_scatter_reduce_ref(
+        src, dst, wgt, values, degrees, active,
+        gather=gather, reduce=reduce, mask_inactive=mask_inactive)
 
 
 @partial(jax.jit, static_argnames=("block_s", "use_kernel"))

@@ -67,6 +67,42 @@ def edge_block_reduce_ref(
     return red, jnp.any(live, axis=1)
 
 
+def push_scatter_reduce_ref(
+    src: jax.Array,        # (E,) int32 source vertex ids (forward COO)
+    dst: jax.Array,        # (E,) int32 destination vertex ids
+    wgt: jax.Array,        # (E,) edge weights
+    values: jax.Array,     # (V,) vertex values
+    degrees: jax.Array,    # (V,) out-degrees
+    active: jax.Array,     # (V,) bool frontier
+    *,
+    gather: str,
+    reduce: str,
+    mask_inactive: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Push-direction oracle: scatter frontier messages over out-edges.
+
+    Dense (all E edges, inactive sources masked to the reduce identity) —
+    the allclose target for the chunk-streamed frontier-compacted kernel
+    in ``push_scatter.py``.  Returns ``(reduced (V,), touched (V,))``.
+    """
+    V = values.shape[0]
+    v = values[src]
+    d = degrees[src]
+    msg = gather_msg(gather, v, wgt.astype(v.dtype), d)
+    live = active[src] if mask_inactive else jnp.ones_like(src, bool)
+    ident = jnp.asarray(_identity(reduce, msg.dtype), msg.dtype)
+    msg = jnp.where(live, msg, ident)
+    red = jnp.full((V,), ident, msg.dtype)
+    if reduce == "add":
+        red = red.at[dst].add(jnp.where(live, msg, 0))
+    elif reduce == "min":
+        red = red.at[dst].min(msg)
+    else:
+        red = red.at[dst].max(msg)
+    got = jnp.zeros((V,), bool).at[dst].max(live)
+    return red, got
+
+
 def segment_reduce_ref(
     seg: jax.Array,        # (E,) sorted int32 segment (dst vertex) ids
     val: jax.Array,        # (E,) messages

@@ -17,8 +17,11 @@ def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 300):
     proc = subprocess.run(
         [sys.executable, "-c", prelude + code],
         capture_output=True, text=True, timeout=timeout,
+        # JAX_PLATFORMS=cpu matters: --xla_force_host_platform_device_count
+        # only ever creates host devices, and without the pin jax spends
+        # minutes probing for accelerator plugins in the scrubbed env
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     if proc.returncode != 0:

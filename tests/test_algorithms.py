@@ -124,6 +124,22 @@ def test_dense_sparse_backends_agree(graph):
     np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
 
 
+def test_dense_backend_hub_exceeding_ell_width():
+    """A vertex with in-degree > the max ELL width (1024) is split across
+    several bucket rows with the same src_id; the dense reduce must
+    combine them (regression: duplicate-index .set dropped rows)."""
+    n_src = 2000
+    src = np.arange(n_src, dtype=np.int32)
+    dst = np.full(n_src, n_src, np.int32)          # all edges point at hub
+    g = G.from_edge_list(src, dst, num_vertices=n_src + 1)
+    levels, iters, _ = alg.bfs(g, root=5, backend="dense", direction="pull")
+    lv = np.asarray(levels)
+    assert lv[5] == 0 and lv[n_src] == 1 and int(iters) == 2
+    # and the sum-reduce flavor: every in-edge must be counted once
+    deg = np.asarray(alg.in_degrees(g, backend="dense"))
+    assert deg[n_src] == n_src
+
+
 def test_in_degrees(graph):
     g, src, dst, _ = graph
     deg = np.asarray(alg.in_degrees(g))

@@ -1,0 +1,193 @@
+"""Direction-optimizing engine: push kernel vs oracle, push ≡ pull ≡ auto,
+runtime switching stats, batched runs, and the first-class init spec."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core.scheduler import DirectionPolicy, ScheduleConfig
+from repro.core.translator import translate
+from repro.kernels import ops as kops
+from repro.kernels.ref import GATHER_OPS, REDUCE_OPS, push_scatter_reduce_ref
+
+
+def _coo(V, E, seed=0, active_frac=0.3):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = rng.integers(0, V, E).astype(np.int32)
+    wgt = rng.uniform(0.5, 2, E).astype(np.float32)
+    vals = rng.uniform(0, 5, V).astype(np.float32)
+    deg = rng.integers(1, 9, V).astype(np.int32)
+    act = rng.random(V) < active_frac
+    return tuple(jnp.asarray(a) for a in (src, dst, wgt, vals, deg, act))
+
+
+# ---------------------------------------------------------------------------
+# 1. push-scatter kernel ≡ jnp oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("gather", GATHER_OPS)
+@pytest.mark.parametrize("reduce", REDUCE_OPS)
+def test_push_scatter_matches_ref(gather, reduce):
+    src, dst, wgt, vals, deg, act = _coo(60, 400, seed=3)
+    want_red, want_got = push_scatter_reduce_ref(
+        src, dst, wgt, vals, deg, act, gather=gather, reduce=reduce)
+    got_red, got_got = kops.push_scatter_reduce(
+        src, dst, wgt, vals, deg, act, gather=gather, reduce=reduce,
+        num_chunks=7)
+    np.testing.assert_allclose(np.asarray(got_red), np.asarray(want_red),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got_got), np.asarray(want_got))
+
+
+def test_push_scatter_empty_frontier():
+    src, dst, wgt, vals, deg, act = _coo(40, 200, seed=5, active_frac=0.0)
+    red, got = kops.push_scatter_reduce(
+        src, dst, wgt, vals, deg, act, gather="copy", reduce="min")
+    assert not bool(np.asarray(got).any())
+    assert np.isposinf(np.asarray(red)).all()
+
+
+def test_push_scatter_chunk_skip_equals_dense():
+    """Chunk-granular frontier compaction must not change results."""
+    from repro.kernels import push_scatter as pk
+    src, dst, wgt, vals, deg, act = _coo(50, 300, seed=9, active_frac=0.1)
+    dst_c, src_c, wgt_c = pk.chunk_coo(dst, src, wgt, num_chunks=6)
+    kw = dict(gather_fn=lambda v, w, d: v + w, reduce="min",
+              identity=jnp.inf, num_vertices=50, dtype=jnp.float32)
+    red_a, got_a = pk.push_scatter_reduce(
+        dst_c, src_c, wgt_c, vals, deg, act, skip_empty_chunks=True, **kw)
+    red_b, got_b = pk.push_scatter_reduce(
+        dst_c, src_c, wgt_c, vals, deg, act, skip_empty_chunks=False, **kw)
+    np.testing.assert_array_equal(np.asarray(red_a), np.asarray(red_b))
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(got_b))
+
+
+# ---------------------------------------------------------------------------
+# 2. dual-mode execution: push ≡ pull ≡ auto, bit-exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = G.rmat_edges(300, 3000, seed=7)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, len(src)).astype(np.float32)
+    return G.from_edge_list(src, dst, num_vertices=300, weights=w), src, dst
+
+
+@pytest.mark.parametrize("direction", ["push", "auto"])
+def test_bfs_directions_bit_exact(graph, direction):
+    g, *_ = graph
+    base, it0, _ = alg.bfs(g, root=0, direction="pull")
+    lv, it, rep = alg.bfs(g, root=0, direction=direction)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(lv))
+    assert int(it0) == int(it)
+    assert rep.directions == ("pull", "push")
+
+
+def test_sssp_wcc_directions_bit_exact(graph):
+    g, *_ = graph
+    d_pull, _, _ = alg.sssp(g, root=0, direction="pull")
+    d_push, _, _ = alg.sssp(g, root=0, direction="push")
+    np.testing.assert_array_equal(np.asarray(d_pull), np.asarray(d_push))
+    l_pull, _, _ = alg.wcc(g, direction="pull")
+    l_push, _, _ = alg.wcc(g, direction="push")
+    np.testing.assert_array_equal(np.asarray(l_pull), np.asarray(l_push))
+
+
+def test_auto_traverses_fewer_edges(graph):
+    """The point of direction optimization: auto beats pull on edge work."""
+    g, *_ = graph
+    _, _, rep_pull = alg.bfs(g, root=0, direction="pull")
+    _, _, rep_auto = alg.bfs(g, root=0, direction="auto")
+    sp, sa = rep_pull.run_stats, rep_auto.run_stats
+    assert sp["push_supersteps"] == 0
+    assert sa["push_supersteps"] >= 1
+    assert sa["edges_traversed"] < sp["edges_traversed"]
+    # pull traverses all E edges every superstep
+    assert sp["edges_traversed"] == g.num_edges * sp["pull_supersteps"]
+
+
+def test_pinned_program_ignores_push_policy(graph):
+    """Push-illegal programs translate and run unchanged under any policy."""
+    g, *_ = graph
+    c = translate(dsl.pagerank_program(iters=5), g,
+                  ScheduleConfig(direction=DirectionPolicy(mode="push")),
+                  dump_passes=True)
+    assert c.report.directions == ("pull",)
+    assert "pinned to pull" in c.report.pass_report
+    r, n = c.run()
+    assert np.isfinite(np.asarray(r)).all() and int(n) == 5
+    with pytest.raises(ValueError):
+        c.superstep_push(*c.init_state())
+
+
+def test_direction_policy_validation():
+    with pytest.raises(ValueError):
+        DirectionPolicy(mode="sideways")
+    with pytest.raises(ValueError):
+        DirectionPolicy(alpha=0)
+    assert "auto" in DirectionPolicy().describe()
+
+
+# ---------------------------------------------------------------------------
+# 3. batched runs (run_batch)
+# ---------------------------------------------------------------------------
+
+
+def test_run_batch_matches_sequential(graph):
+    g, *_ = graph
+    prog = translate(dsl.bfs_program(alg.INT_MAX), g, ScheduleConfig())
+    roots = [0, 3, 17, 42]
+    batch_vals, batch_iters = prog.run_batch(roots)
+    assert batch_vals.shape == (len(roots), g.num_vertices)
+    for k, root in enumerate(roots):
+        vals, iters = prog.run(roots=root)
+        np.testing.assert_array_equal(np.asarray(batch_vals[k]),
+                                      np.asarray(vals))
+        assert int(batch_iters[k]) == int(iters), k
+
+
+# ---------------------------------------------------------------------------
+# 4. first-class init spec (no more name-keyed special cases)
+# ---------------------------------------------------------------------------
+
+
+def test_wcc_program_uses_iota_spec():
+    prog = dsl.wcc_program()
+    assert prog.init_value == "iota"
+    vals = prog.materialize_init(7)
+    np.testing.assert_array_equal(np.asarray(vals), np.arange(7))
+    assert vals.dtype == jnp.int32
+
+
+def test_init_spec_not_keyed_on_program_name(graph):
+    """Any program named anything gets the iota init — no 'wcc' hack."""
+    g, *_ = graph
+    prog = dsl.VertexProgram(
+        name="label_prop", gather=lambda v, w, d: v, reduce="min",
+        apply=jnp.minimum, init_value="iota", value_dtype=jnp.int32)
+    c = translate(prog, g, ScheduleConfig())
+    values, _ = c.init_state()
+    np.testing.assert_array_equal(np.asarray(values),
+                                  np.arange(g.num_vertices))
+
+
+def test_init_fn_callable(graph):
+    g, *_ = graph
+    prog = dsl.VertexProgram(
+        name="custom_init", gather=lambda v, w, d: v, reduce="min",
+        apply=jnp.minimum, init_value=lambda n: np.full(n, 9.0))
+    c = translate(prog, g, ScheduleConfig())
+    values, _ = c.init_state()
+    np.testing.assert_array_equal(np.asarray(values),
+                                  np.full(g.num_vertices, 9.0))
+
+
+def test_unknown_init_spec_rejected():
+    with pytest.raises(ValueError):
+        dsl.VertexProgram(name="bad", gather=lambda v, w, d: v, reduce="min",
+                          apply=jnp.minimum, init_value="fibonacci")

@@ -21,12 +21,12 @@ from repro.core import algorithms as alg
 from repro.core import dsl
 from repro.core import graph as G
 from repro.core.ir import (ApplyOp, ExchangeOp, FrontierUpdateOp,
-                           FusedGatherReduceOp, GatherOp, ReduceOp,
-                           SuperstepIR, lower_program)
+                           FusedGatherReduceOp, GatherOp, PushScatterOp,
+                           ReduceOp, SuperstepIR, lower_program)
 from repro.core.passes import (BackendSelectionPass, DeadFrontierEliminationPass,
-                               GatherClassificationPass, PassContext,
-                               PassPipeline, ReduceIdentityFoldPass,
-                               default_pipeline)
+                               DirectionLegalityPass, GatherClassificationPass,
+                               PassContext, PassPipeline,
+                               ReduceIdentityFoldPass, default_pipeline)
 from repro.core.scheduler import ScheduleConfig, plan
 from repro.core.translator import translate
 
@@ -109,6 +109,51 @@ def test_backend_selection_elides_single_pe_exchange():
     assert out.find(ExchangeOp) is None
 
 
+def test_direction_legality_widens_frontier_programs():
+    for name in ("bfs", "sssp", "wcc"):
+        out = DirectionLegalityPass().run(
+            lower_program(dsl.PROGRAM_TEMPLATES[name]()), _ctx())
+        assert out.find(GatherOp).direction == "both", name
+        assert any("push legal" in n for n in out.notes)
+
+
+def test_direction_legality_pins_all_frontier_programs():
+    for name in ("pagerank", "spmv", "degree"):
+        out = DirectionLegalityPass().run(
+            lower_program(dsl.PROGRAM_TEMPLATES[name]()), _ctx())
+        assert out.find(GatherOp).direction == "pull", name
+        reasons = [n for n in out.notes if "pinned to pull" in n]
+        assert reasons and "frontier" in reasons[0]
+
+
+def test_direction_legality_pins_float_add():
+    """Float add is order-sensitive: push must not be proven for it, but
+    the same program with an integer dtype is exactly reorderable."""
+    def prog(dtype):
+        return dsl.VertexProgram(
+            name="acc", gather=lambda v, w, d: v, reduce="add",
+            apply=lambda old, s: old + s, init_value=0,
+            frontier="changed", value_dtype=dtype)
+    out = DirectionLegalityPass().run(lower_program(prog(jnp.float32)),
+                                      _ctx())
+    assert out.find(GatherOp).direction == "pull"
+    assert any("order-sensitive" in n for n in out.notes)
+    out = DirectionLegalityPass().run(lower_program(prog(jnp.int32)),
+                                      _ctx())
+    assert out.find(GatherOp).direction == "both"
+
+
+def test_fusion_inserts_push_twin_only_when_legal():
+    ir, _ = default_pipeline().run(lower_program(dsl.bfs_program()), _ctx())
+    push = ir.find(PushScatterOp)
+    assert push is not None
+    assert ir.find(FusedGatherReduceOp).direction == "both"
+    assert push.reduce.identity is not None    # folded identity propagated
+    ir, _ = default_pipeline().run(lower_program(dsl.spmv_program()), _ctx())
+    assert ir.find(PushScatterOp) is None
+    assert ir.find(FusedGatherReduceOp).direction == "pull"
+
+
 def test_dead_frontier_elimination_only_for_all_mode():
     out = DeadFrontierEliminationPass().run(
         lower_program(dsl.pagerank_program()), _ctx())
@@ -132,34 +177,41 @@ def test_pipeline_dump_golden_bfs():
     headers = [l for l in text.splitlines() if l.startswith("== ")]
     assert headers == [
         "== gather-classification [analysis] (changed)",
+        "== direction-legality [analysis] (changed)",
         "== reduce-identity-fold [transform] (changed)",
         "== backend-selection [transform] (changed)",
         "== gather-reduce-fusion [transform] (changed)",
         "== dead-frontier-elimination [transform] (no change)",
     ]
     # every section carries before/after IR listings
-    assert text.count("-- before --") == 5
-    assert text.count("-- after --") == 5
+    assert text.count("-- before --") == 6
+    assert text.count("-- after --") == 6
     # the facts each pass establishes are visible in the dump
     assert "module=plus_one" in text
     assert "identity=Array(2147483647, dtype=int32)" in text
     assert "backend=dense" in text
     assert "FusedGatherReduce(kernel=edge_block" in text
+    assert "direction=both" in text
+    assert "PushScatter(kernel=push_scatter" in text
     # analysis notes survive into the final IR
     assert "gather matched module 'plus_one'" in ir.dump()
+    assert "direction: push legal" in ir.dump()
 
 
 def test_pipeline_without_dump_records_names_only():
     ir, report = default_pipeline().run(
         lower_program(dsl.spmv_program()), _ctx(), dump=False)
     assert [r.name for r in report.records] == [
-        "gather-classification", "reduce-identity-fold",
-        "backend-selection", "gather-reduce-fusion",
-        "dead-frontier-elimination"]
+        "gather-classification", "direction-legality",
+        "reduce-identity-fold", "backend-selection",
+        "gather-reduce-fusion", "dead-frontier-elimination"]
     assert all(r.before is None and r.after is None for r in report.records)
     # spmv is frontier='all' → the frontier op ends up dead
     assert ir.find(FrontierUpdateOp).dead
     assert ir.find(FusedGatherReduceOp).gather.module == "mul_w"
+    # spmv is pinned to pull (no sparse frontier) → no push twin
+    assert ir.find(PushScatterOp) is None
+    assert any("pinned to pull" in n for n in ir.notes)
 
 
 def test_translate_exposes_reports():

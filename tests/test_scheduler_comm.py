@@ -1,0 +1,122 @@
+"""Direct coverage for scheduler.plan / plan_for_devices edge cases and the
+comm manager's message-quantization round-trip (property-tested when
+hypothesis is available, deterministic bounds otherwise)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.comm import CommManager
+from repro.core.scheduler import (DirectionPolicy, ScheduleConfig,
+                                  choose_backend, plan, plan_for_devices)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# scheduler.plan / plan_for_devices
+# ---------------------------------------------------------------------------
+
+
+def test_plan_more_pipelines_than_edges():
+    """Asking for more chunks than edge blocks collapses, never zero-sizes."""
+    p = plan(ScheduleConfig(pipelines=16), num_vertices=50, num_edges=100)
+    assert p.num_chunks == 1
+    assert p.chunk_size == 100
+    p = plan(ScheduleConfig(pipelines=8), num_vertices=10_000,
+             num_edges=100_000)
+    assert p.num_chunks == 8
+    assert p.num_chunks * p.chunk_size >= 100_000
+
+
+def test_plan_single_edge_graph():
+    p = plan(ScheduleConfig(pipelines=8), num_vertices=2, num_edges=1)
+    assert p.num_chunks == 1 and p.chunk_size == 1
+
+
+def test_plan_explicit_backend_override_beats_heuristic():
+    # avg degree 10 → heuristic says dense; override wins both ways
+    p = plan(ScheduleConfig(backend="sparse"), num_vertices=100,
+             num_edges=1000)
+    assert p.backend == "sparse"
+    p = plan(ScheduleConfig(backend="dense"), num_vertices=1000,
+             num_edges=1500)   # avg degree 1.5 → heuristic says sparse
+    assert p.backend == "dense"
+    assert choose_backend(ScheduleConfig(backend="dense"), num_vertices=1,
+                          num_edges=1, avg_degree=0.1) == "dense"
+
+
+def test_plan_elastic_degrade_to_single_device():
+    """pes > available devices degrades instead of failing (CPU: 1 device)."""
+    p = plan(ScheduleConfig(pes=8), num_vertices=10, num_edges=50)
+    assert p.mesh is None          # degraded: single device → no mesh
+    assert p.describe().endswith(p.direction.describe())
+
+
+def test_plan_for_devices_clamps_pes():
+    cfg = ScheduleConfig(pes=8)
+    for n in (0, 1):
+        p = plan_for_devices(cfg, num_devices=n, num_vertices=10,
+                             num_edges=50)
+        assert p.mesh is None
+        assert p.config.pes == 1
+
+
+def test_plan_carries_direction_policy():
+    pol = DirectionPolicy(mode="push", alpha=7, beta=9)
+    p = plan(ScheduleConfig(direction=pol), num_vertices=10, num_edges=50)
+    assert p.direction is pol
+    assert "push" in p.describe()
+
+
+def test_schedule_config_validation():
+    with pytest.raises(ValueError):
+        ScheduleConfig(pipelines=0)
+    with pytest.raises(ValueError):
+        ScheduleConfig(backend="fpga")
+    with pytest.raises(TypeError):
+        ScheduleConfig(direction="auto")   # must be a DirectionPolicy
+
+
+# ---------------------------------------------------------------------------
+# comm manager: quantize/dequantize round-trip
+# ---------------------------------------------------------------------------
+
+
+def _roundtrip_error_bound(x: np.ndarray) -> float:
+    # symmetric int8: scale = max|x|/127, rounding error ≤ scale/2
+    return max(np.abs(x).max(), 1e-8) / 127.0 * 0.5 + 1e-6
+
+
+def test_quantize_roundtrip_deterministic():
+    for seed in range(5):
+        x = np.random.default_rng(seed).normal(scale=10 ** seed, size=64) \
+            .astype(np.float32)
+        q, s = CommManager.quantize_messages(jnp.asarray(x))
+        assert q.dtype == jnp.int8
+        deq = np.asarray(CommManager.dequantize_messages(q, s))
+        assert np.abs(deq - x).max() <= _roundtrip_error_bound(x)
+
+
+def test_quantize_all_zero_is_exact():
+    q, s = CommManager.quantize_messages(jnp.zeros(16))
+    np.testing.assert_array_equal(
+        np.asarray(CommManager.dequantize_messages(q, s)), np.zeros(16))
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.floats(-1e6, 1e6, width=32), min_size=1, max_size=128))
+    @settings(max_examples=50, deadline=None)
+    def test_quantize_roundtrip_property(xs):
+        """∀x: |dequant(quant(x)) − x| ≤ scale/2 (symmetric int8 bound)."""
+        x = np.asarray(xs, np.float32)
+        q, s = CommManager.quantize_messages(jnp.asarray(x))
+        deq = np.asarray(CommManager.dequantize_messages(q, s))
+        assert np.abs(deq - x).max() <= _roundtrip_error_bound(x)
+else:
+    @pytest.mark.skip(reason="property tests need the hypothesis package")
+    def test_quantize_roundtrip_property():
+        """Placeholder so the skip is visible in the report."""
