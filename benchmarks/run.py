@@ -2,10 +2,12 @@
 
 Default mode prints ``name,us_per_call,derived`` CSV rows for the selected
 modules.  ``--json [path]`` runs the direction-optimization graph benchmark
-at the acceptance scale (V≈50k, E≈500k R-MAT) and writes the machine-
-readable payload — BFS MTEPS for push/pull/auto, per-mode edge-traversal
-and direction-switch counters, and translate time — to ``BENCH_graph.json``
-(CI's perf artifact).
+as a multi-scale sweep (10k/50k/200k-vertex R-MAT, 10x edges each) and
+writes the machine-readable payload — BFS MTEPS and wall time for
+push/pull/auto per scale, edge-traversal / direction-switch / compaction
+counters, translate-time breakdowns (incl. cached repeat), and measured
+per-edge engine costs — to ``BENCH_graph.json`` (CI's perf artifact).
+The 50k/500k acceptance scale keeps its fields at the payload top level.
 """
 from __future__ import annotations
 
@@ -34,17 +36,23 @@ def _run_csv(only: list[str]) -> None:
 
 def _run_json(path: str) -> None:
     from . import direction
-    data = direction.collect()
+    data = direction.collect_sweep()
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     c = data["crossover"]
     print(f"wrote {path}")
     for mode, m in data["modes"].items():
-        print(f"  bfs[{mode}]: {m['mteps']:.1f} MTEPS, "
+        print(f"  bfs[{mode}] @50k: {m['mteps']:.1f} MTEPS, "
               f"{m['edges_traversed']} edges traversed, "
-              f"TT={m['translate_time_s']:.2f}s")
-    print(f"  auto vs pull: {c['traversal_reduction_auto_vs_pull']:.2f}x "
-          f"fewer edge-traversals, {c['speedup_auto_vs_pull']:.2f}x wall-clock")
+              f"TT={m['translate_time_s']:.2f}s "
+              f"(repeat {m['translate_repeat_s'] * 1e3:.0f}ms)")
+    print(f"  auto vs pull @50k: "
+          f"{c['traversal_reduction_auto_vs_pull']:.2f}x fewer "
+          f"edge-traversals, {c['speedup_auto_vs_pull']:.2f}x wall-clock")
+    for v, s in sorted(data["sweep"].items(), key=lambda kv: int(kv[0])):
+        print(f"  sweep V={v}: auto {s['mteps']['auto']:.1f} MTEPS, "
+              f"{s['speedup_auto_vs_pull']:.2f}x vs pull, "
+              f"{s['traversal_reduction_auto_vs_pull']:.2f}x fewer edges")
 
 
 def main() -> None:

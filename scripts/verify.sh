@@ -34,6 +34,51 @@ if missing:
 print("all doc-referenced module paths exist")
 EOF
 
+echo "== perf smoke: auto-direction BFS must not lose to pull =="
+# The regression PR 3 fixed: the chunk-scanned push engine made auto mode
+# 0.16x the speed of pull on the 50k/500k R-MAT.  With the compacted
+# forward-ELL engine auto must at least match pull in wall time while
+# keeping the ~5x edge-traversal reduction.  Best-of-3 each; 5% tolerance
+# absorbs CI timer noise (the regression this guards against was 6x).
+python - <<'EOF'
+import time, sys
+import jax
+from repro.core import algorithms as alg, dsl, graph as G
+from repro.core.scheduler import DirectionPolicy, ScheduleConfig
+from repro.core.translator import translate
+
+src, dst = G.rmat_edges(50_000, 500_000, seed=0)
+g = G.from_edge_list(src, dst, num_vertices=50_000)
+
+def best_of(prog, n=3):
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        values, _ = prog.run(roots=0)
+        jax.block_until_ready(values)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+walls, stats = {}, {}
+for mode in ("pull", "auto"):
+    prog = translate(dsl.bfs_program(alg.INT_MAX), g,
+                     ScheduleConfig(direction=DirectionPolicy(mode=mode)))
+    walls[mode] = best_of(prog)
+    stats[mode] = prog.last_run_stats
+
+speedup = walls["pull"] / walls["auto"]
+reduction = stats["pull"]["edges_traversed"] / stats["auto"]["edges_traversed"]
+print(f"pull {walls['pull']*1e3:.1f} ms, auto {walls['auto']*1e3:.1f} ms "
+      f"-> {speedup:.2f}x; traversal reduction {reduction:.2f}x")
+if walls["auto"] > walls["pull"] * 1.05:
+    print("FAIL: auto-direction BFS is slower than pull (the PR-3 regression)")
+    sys.exit(1)
+if reduction < 3.0:
+    print("FAIL: auto mode lost the edge-traversal reduction")
+    sys.exit(1)
+print("perf smoke OK")
+EOF
+
 echo "== docstring check (core/ir.py, core/passes.py) =="
 python - <<'EOF'
 import inspect, sys

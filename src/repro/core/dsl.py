@@ -14,6 +14,7 @@ The three-level library of the paper maps to:
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable
 
 import jax.numpy as jnp
@@ -79,9 +80,16 @@ def reduce_identity(op: str, dtype) -> Any:
 # ---------------------------------------------------------------------------
 # Algorithm-layer program templates (paper: "algorithm-aware operators ...
 # templates for these operators, which can be used conveniently")
+#
+# Each factory is memoized on its arguments: a VertexProgram is immutable,
+# and returning the *same* object for the same template parameters means
+# translator-level caches keyed on program identity/equality (the staging
+# cache) hit for the natural `translate(dsl.bfs_program(...), g, cfg)`
+# repeat pattern — fresh lambdas per call would defeat them.
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=None)
 def bfs_program(int_max: int = 2**30) -> VertexProgram:
     """BFS levels: msg = level[u] + 1, reduce min, apply min."""
     return VertexProgram(
@@ -95,6 +103,7 @@ def bfs_program(int_max: int = 2**30) -> VertexProgram:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def sssp_program() -> VertexProgram:
     """SSSP (Bellman-Ford style): msg = dist[u] + w, reduce min, apply min."""
     return VertexProgram(
@@ -108,6 +117,7 @@ def sssp_program() -> VertexProgram:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def pagerank_program(damping: float = 0.85, iters: int = 20) -> VertexProgram:
     """PageRank: msg = rank[u]/deg[u], reduce add, apply damped sum."""
     return VertexProgram(
@@ -123,6 +133,7 @@ def pagerank_program(damping: float = 0.85, iters: int = 20) -> VertexProgram:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def wcc_program() -> VertexProgram:
     """Connected components by label propagation: reduce min of labels."""
     return VertexProgram(
@@ -136,6 +147,7 @@ def wcc_program() -> VertexProgram:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def spmv_program() -> VertexProgram:
     """One y = A^T x step in GAS form: msg = x[u]*w, reduce add."""
     return VertexProgram(
@@ -151,6 +163,7 @@ def spmv_program() -> VertexProgram:
     )
 
 
+@functools.lru_cache(maxsize=None)
 def degree_program() -> VertexProgram:
     """In-degree count: msg = 1 per edge, reduce add."""
     return VertexProgram(

@@ -76,6 +76,79 @@ class BucketedGraph:
         return len(self.src_ids)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ForwardELL:
+    """Fixed-width forward (out-edge) ELL rows, the push engine's layout.
+
+    The dual of :class:`BucketedGraph`: rows are grouped by *source* vertex
+    so the frontier-compaction step can select live rows with a single
+    ``active[row_src]`` gather.  A vertex with out-degree ``d`` owns
+    ``ceil(d / width)`` consecutive rows (hubs span several rows), padded
+    with ``PAD`` destinations.  ``width`` is kept small (default 8) because
+    the compacted scatter pays per *slot*: padding overhead on power-law
+    graphs is ~1.1-1.3x at width 8 vs ~1.7x at 16.
+
+    ``rows_per_vertex`` lets the runtime direction policy compute the live
+    row count ``r_f = sum(rows_per_vertex[frontier])`` in O(V) — the guard
+    that picks a compaction capacity tier (or the dense fallback) per
+    superstep.  When the graph has no edges the arrays keep one all-PAD
+    dummy row so every shape stays non-empty; ``num_rows`` is the logical
+    row count (0) and compaction treats the dummy as invalid.
+    """
+
+    row_src: jax.Array           # (max(R,1),) int32 owner vertex per row
+    dst: jax.Array               # (max(R,1), width) int32, PAD-padded
+    weights: jax.Array           # (max(R,1), width) edge weights
+    rows_per_vertex: jax.Array   # (V,) int32 ceil(out_deg / width)
+    num_rows: int = _field(metadata=dict(static=True))       # logical R
+    width: int = _field(metadata=dict(static=True))
+    num_vertices: int = _field(metadata=dict(static=True))
+    num_edges: int = _field(metadata=dict(static=True))
+
+
+def forward_ell(g: Graph, *, width: int = 8) -> ForwardELL:
+    """Build the push engine's forward ELL from CSR (host-side, vectorized).
+
+    Unlike :func:`bucketize` (a python loop over vertices, used for the
+    pull side's degree buckets) this is pure-numpy array arithmetic: the
+    slot→edge map is ``offsets[row_src] + (row - row_offset[row_src]) *
+    width + lane``, so a 500k-edge graph lays out in ~50 ms.
+    """
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    offsets = np.asarray(g.edge_offsets).astype(np.int64)
+    dst = np.asarray(g.edges_dst)
+    wts = np.asarray(g.edge_weights)
+    deg = offsets[1:] - offsets[:-1]
+    rows_per_v = -(-deg // width)                        # ceil
+    r = int(rows_per_v.sum())
+    row_off = np.zeros(g.num_vertices + 1, np.int64)
+    np.cumsum(rows_per_v, out=row_off[1:])
+    row_src = np.repeat(np.arange(g.num_vertices, dtype=np.int32), rows_per_v)
+    if r == 0:                                           # edgeless: dummy row
+        return ForwardELL(
+            row_src=jnp.zeros((1,), jnp.int32),
+            dst=jnp.full((1, width), int(PAD), jnp.int32),
+            weights=jnp.zeros((1, width), wts.dtype),
+            rows_per_vertex=jnp.zeros((g.num_vertices,), jnp.int32),
+            num_rows=0, width=width,
+            num_vertices=g.num_vertices, num_edges=g.num_edges)
+    base = offsets[row_src] + (np.arange(r) - row_off[row_src]) * width
+    idx = base[:, None] + np.arange(width)[None, :]
+    valid = idx < offsets[row_src + 1][:, None]
+    safe = np.where(valid, idx, 0)
+    ell_dst = np.where(valid, dst[safe].astype(np.int64), int(PAD))
+    ell_wgt = np.where(valid, wts[safe], 0)
+    return ForwardELL(
+        row_src=jnp.asarray(row_src),
+        dst=jnp.asarray(ell_dst.astype(np.int32)),
+        weights=jnp.asarray(ell_wgt.astype(wts.dtype)),
+        rows_per_vertex=jnp.asarray(rows_per_v.astype(np.int32)),
+        num_rows=r, width=width,
+        num_vertices=g.num_vertices, num_edges=g.num_edges)
+
+
 def from_edge_list(
     src: np.ndarray,
     dst: np.ndarray,

@@ -140,6 +140,19 @@ class PushScatterOp:
     (``frontier='changed'``, ``mask_inactive=True``) — exactly then the
     scatter touches ``Σ out_deg(frontier)`` edges instead of all ``E``.
 
+    ``layout`` names the push data path the fusion pass bound:
+
+    * ``'fwd_ell'`` — the frontier-compacted forward-ELL engine
+      (``kernels/push_ell.py``): cumsum-compacted active rows, capacity
+      tiers, segment-reduce combine, dense-engine fallback beyond the
+      largest tier.  Requires the dense backend and an identity-fixpoint
+      apply (``apply(x, identity) == x``, probed) since it skips the
+      touched-mask scatter;
+    * ``'coo_chunks'`` — the chunk-streamed forward-COO scatter
+      (``kernels/push_scatter.py``), for the sparse backend (no forward
+      ELL is built) and for non-fixpoint applies (it keeps the touched
+      mask).
+
     Emitted by the fusion pass alongside the pull op; the translator emits
     *both* supersteps and the runtime direction policy picks per superstep.
     """
@@ -147,10 +160,11 @@ class PushScatterOp:
     gather: GatherOp
     reduce: ReduceOp
     kernel: str = "push_scatter"
+    layout: str = "fwd_ell"          # 'fwd_ell' | 'coo_chunks'
 
     def render(self) -> str:
         """One-line textual form used in IR dumps."""
-        return (f"PushScatter(kernel={self.kernel}, "
+        return (f"PushScatter(kernel={self.kernel}, layout={self.layout}, "
                 f"gather={self.gather.render()}, "
                 f"reduce={self.reduce.render()})")
 

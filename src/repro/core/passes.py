@@ -51,6 +51,7 @@ from .scheduler import ScheduleConfig, SchedulePlan
 
 __all__ = [
     "classify_gather",
+    "apply_preserves_identity",
     "PassContext",
     "Pass",
     "PassRecord",
@@ -100,6 +101,48 @@ def classify_gather(gather: Callable, dtype) -> str | None:
         if got.shape == want.shape and np.allclose(got, want, rtol=1e-5, atol=1e-5):
             return name
     return None
+
+
+def apply_preserves_identity(apply: Callable, reduce: str, dtype) -> bool:
+    """Probe whether ``apply(x, identity) == x`` bit-exactly.
+
+    The same abstract-probing idiom as :func:`classify_gather`: evaluate
+    the user's apply on a fixed batch (random values plus the edge cases —
+    zero, the identity itself, extreme magnitudes) against the folded
+    reduce identity, and require *exact* equality.  When it holds, an
+    untouched vertex is a fixpoint of the superstep, so the push engine
+    may apply the reduced table everywhere and skip scattering a separate
+    touched mask — half the scatter traffic, and the compacted kernel's
+    combine stays a single segment reduce.  ``jnp.minimum``/``maximum``
+    applies (BFS/SSSP/WCC) and integer ``old + s`` all pass; overwrite- or
+    offset-style applies fail, and the fusion pass binds the
+    chunk-streamed ``'coo_chunks'`` push layout (which keeps the touched
+    mask) instead of the compacted engine.
+
+    Like all probing in this translator (the paper's "eliminate complex
+    grammatical and semantic analysis"), this is evidence, not proof: an
+    adversarial apply that misbehaves only on values outside the probe
+    batch would pass and then diverge under the compacted engine — the
+    same accepted trade-off as :func:`classify_gather`, which can likewise
+    mis-match a gather that coincides with a menu module on the batch.
+    Probes use fixed seeds, so the decision is at least deterministic.
+    """
+    ident = reduce_identity(reduce, dtype)
+    rng = np.random.default_rng(0)
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        info = np.finfo(np.dtype(dtype))
+        probes = np.concatenate([
+            rng.uniform(-8, 8, 13), [0.0, info.max / 2, -info.max / 2]])
+    else:
+        info = np.iinfo(np.dtype(dtype))
+        probes = np.concatenate([
+            rng.integers(-8, 8, 13), [0, info.max - 1, info.min + 1]])
+    x = jnp.asarray(probes, dtype)
+    try:
+        got = np.asarray(apply(x, jnp.full_like(x, ident)))
+    except Exception:
+        return False
+    return got.shape == x.shape and np.array_equal(got, np.asarray(x))
 
 
 # ---------------------------------------------------------------------------
@@ -248,7 +291,10 @@ class DirectionLegalityPass(Pass):
 
     A legal program gets ``Gather.direction='both'``; a pinned program
     keeps ``'pull'`` and the reason lands in the IR notes (and thus the
-    pass dump — ``translate(..., dump_passes=True)``).
+    pass dump — ``translate(..., dump_passes=True)``).  Which push *data
+    path* a legal program gets (compacted forward ELL vs chunk-streamed
+    scatter) is the fusion pass's job, where the apply-identity-fixpoint
+    probe gates the compacted engine.
     """
 
     name = "direction-legality"
@@ -365,7 +411,18 @@ class GatherReduceFusionPass(Pass):
     When the direction-legality pass widened the gather to ``'both'``,
     the push-mode :class:`~repro.core.ir.PushScatterOp` twin is inserted
     right after the fused pull op — the translator emits both supersteps
-    and the runtime direction policy picks per superstep.
+    and the runtime direction policy picks per superstep.  The twin's
+    ``layout`` is bound here:
+
+    * ``'fwd_ell'`` — the frontier-compacted forward-ELL engine — needs a
+      dense backend *and* an identity-fixpoint apply
+      (``apply(x, identity) == x``, probed like module matching): the
+      compacted kernel applies the reduced table everywhere instead of
+      scattering a touched mask, so untouched vertices must be fixpoints;
+    * ``'coo_chunks'`` — the chunk-streamed forward-COO scatter —
+      otherwise (the sparse backend builds no forward ELL, and a
+      non-fixpoint apply needs the touched-mask form; the downgrade
+      reason is recorded as an IR note).
     """
 
     name = "gather-reduce-fusion"
@@ -382,11 +439,22 @@ class GatherReduceFusionPass(Pass):
                                     direction=gop.direction)
         ir = ir.fuse(gop, rop, fused)
         if gop.direction == "both":
+            layout = "fwd_ell"
+            if not ir.backend.startswith("dense"):
+                layout = "coo_chunks"
+            elif not apply_preserves_identity(ir.program.apply, rop.op,
+                                              ir.value_dtype):
+                layout = "coo_chunks"
+                ir = ir.with_note(
+                    "push layout: coo_chunks (apply is not an identity "
+                    "fixpoint, the compacted engine needs "
+                    "apply(x, identity) == x)")
             ops = []
             for op in ir.ops:
                 ops.append(op)
                 if op is fused:
-                    ops.append(PushScatterOp(gather=gop, reduce=rop))
+                    ops.append(PushScatterOp(gather=gop, reduce=rop,
+                                             layout=layout))
             ir = ir.replace(ops=tuple(ops))
         return ir
 

@@ -5,8 +5,11 @@ CPU before ``Transport`` ships data to the accelerator.
 """
 from __future__ import annotations
 
+import collections
+import dataclasses
 import json
 import os
+import time
 from typing import Literal
 
 import numpy as np
@@ -65,6 +68,128 @@ def layout(src: np.ndarray, dst: np.ndarray, to: Layout = "csr",
         g = G.from_edge_list(src, dst, num_vertices=num_vertices, weights=weights)
         return G.bucketize(g)
     raise ValueError(to)
+
+
+# ---------------------------------------------------------------------------
+# 2b) Graph-keyed layout cache — translation-time preprocessing, memoized
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphLayouts:
+    """Lazily-built derived layouts for one graph, shared across translates.
+
+    Holds every translation-time preprocessing product — the transposed
+    CSR (pull's in-edge view), its degree-bucketed ELL (dense pull), the
+    reverse COO (sparse pull), and the forward ELL (compacted push) — each
+    built once on first request and reused by every subsequent
+    ``translate()`` on the same graph.  ``build_times_s`` records the
+    seconds spent constructing each product (what the
+    ``TranslationReport.translate_breakdown['preprocess']`` entry sums).
+    """
+
+    graph: G.Graph                      # strong ref: keeps the id-key valid
+    build_times_s: dict = dataclasses.field(default_factory=dict)
+    _reverse: G.Graph | None = None
+    _reverse_bucketed: G.BucketedGraph | None = None
+    _reverse_coo: tuple | None = None
+    _forward_ell: dict = dataclasses.field(default_factory=dict)
+
+    def _timed(self, name: str, build):
+        # record *self* time: a nested build (reverse_bucketed → reverse)
+        # books its own entry, so subtract child time or sums double-count
+        t0 = time.perf_counter()
+        children_before = sum(self.build_times_s.values())
+        out = build()
+        child_s = sum(self.build_times_s.values()) - children_before
+        self.build_times_s[name] = time.perf_counter() - t0 - child_s
+        return out
+
+    def reverse(self) -> G.Graph:
+        """Transposed CSR (``Layout(Graph, CSC)``): pull's in-edge view."""
+        if self._reverse is None:
+            self._reverse = self._timed("reverse", lambda: G.reverse(self.graph))
+        return self._reverse
+
+    def reverse_bucketed(self) -> G.BucketedGraph:
+        """Degree-bucketed ELL of the transposed graph (dense pull blocks)."""
+        if self._reverse_bucketed is None:
+            self._reverse_bucketed = self._timed(
+                "reverse_bucketed", lambda: G.bucketize(self.reverse()))
+        return self._reverse_bucketed
+
+    def reverse_coo(self) -> tuple:
+        """``(dst, src, wgt)`` COO of the transposed graph (sparse pull)."""
+        if self._reverse_coo is None:
+            self._reverse_coo = self._timed(
+                "reverse_coo", lambda: G.coo_arrays(self.reverse()))
+        return self._reverse_coo
+
+    def forward_ell(self, width: int = 8) -> G.ForwardELL:
+        """Fixed-width forward ELL (the compacted push engine's layout)."""
+        if width not in self._forward_ell:
+            self._forward_ell[width] = self._timed(
+                f"forward_ell_w{width}",
+                lambda: G.forward_ell(self.graph, width=width))
+        return self._forward_ell[width]
+
+
+_LAYOUT_CACHE: collections.OrderedDict = collections.OrderedDict()
+_LAYOUT_CACHE_MAX = 8
+_layout_cache_hits = 0
+_layout_cache_misses = 0
+
+
+def _layout_key(g: G.Graph) -> tuple:
+    return (id(g.edge_offsets), id(g.edges_dst), id(g.edge_weights),
+            g.num_vertices, g.num_edges)
+
+
+def layouts_for(g: G.Graph) -> GraphLayouts:
+    """Memoized :class:`GraphLayouts` for ``g`` (graph-identity keyed).
+
+    Keyed on the identity of the graph's *structure arrays* (offsets,
+    destinations, weights) rather than the ``Graph`` wrapper, so pytree
+    rebuilds like ``g.with_values(...)`` still hit.  Entries hold strong
+    references to the keyed arrays (via ``GraphLayouts.graph``), so an id
+    can never be recycled while its entry is live; an LRU bound of
+    ``_LAYOUT_CACHE_MAX`` graphs keeps memory in check.
+    """
+    global _layout_cache_hits, _layout_cache_misses
+    key = _layout_key(g)
+    hit = _LAYOUT_CACHE.get(key)
+    if hit is not None and hit.graph.edges_dst is g.edges_dst \
+            and hit.graph.edge_offsets is g.edge_offsets \
+            and hit.graph.edge_weights is g.edge_weights:
+        _LAYOUT_CACHE.move_to_end(key)
+        _layout_cache_hits += 1
+        return hit
+    entry = GraphLayouts(graph=g)
+    _LAYOUT_CACHE[key] = entry
+    _LAYOUT_CACHE.move_to_end(key)
+    while len(_LAYOUT_CACHE) > _LAYOUT_CACHE_MAX:
+        _LAYOUT_CACHE.popitem(last=False)
+    _layout_cache_misses += 1
+    return entry
+
+
+def layout_cache_info() -> dict:
+    """Cache observability for tests/benchmarks: hits, misses, size."""
+    return {"hits": _layout_cache_hits, "misses": _layout_cache_misses,
+            "size": len(_LAYOUT_CACHE)}
+
+
+def layout_cache_clear() -> None:
+    """Drop every cached layout (tests and memory-pressure hook).
+
+    Note the translator's staging cache pins layouts too — to actually
+    release layout memory call
+    ``repro.core.translator.staging_cache_clear()`` first.
+    """
+    global _layout_cache_hits, _layout_cache_misses
+    _LAYOUT_CACHE.clear()
+    _layout_cache_hits = 0
+    _layout_cache_misses = 0
 
 
 # ---------------------------------------------------------------------------

@@ -46,30 +46,38 @@ class DirectionPolicy:
     * while pulling, re-enter push when ``n_f < V / beta`` (``n_f`` =
       frontier vertex count) — a draining frontier flips back.
 
-    The hysteresis structure is Beamer's, but the default thresholds are
-    calibrated to *this* engine's cost model, not classic bottom-up BFS:
-    Beamer's alpha=14 assumes the pull direction scans only unexplored
-    vertices' in-edges, while our pull module streams all E edges every
-    superstep.  Here pull costs ~E, push costs ~alpha·m_f (the scatter's
-    per-edge penalty vs a regular stream), so pull wins only once the
-    frontier covers a comparable fraction of E — alpha=1.5, with beta=8
-    re-entering push once the frontier drains below V/8 (all-active
-    starts, e.g. WCC, begin pull and flip to push as labels converge).
+    The hysteresis structure is Beamer's; the default thresholds are
+    recalibrated to the frontier-compacted push engine
+    (``kernels/push_ell.py``).  The previous chunk-scanned scatter paid a
+    ~5-8× per-edge penalty over the dense pull stream, so wall-clock
+    tuning meant raising alpha well above the traversal model.  The
+    compacted engine removed that asymmetry: a push superstep costs
+    ``O(R + capacity·width)`` when a capacity tier covers the live rows
+    (``r_f``, see :func:`push_capacity_tiers`) and *at most* the dense
+    engine's O(E) otherwise (the kernel falls back to the dense masked
+    sweep rather than scatter a wide frontier).  Push is therefore never
+    meaningfully slower than pull, and the thresholds revert to the pure
+    traversal model — the paper's hardware cost, where an FPGA frontier
+    FIFO streams only live edges and ``report.run_stats['edges_traversed']``
+    counts ``m_f`` per push superstep:
 
-    alpha is the tuning surface for the backend's real scatter penalty:
-    the default 1.5 optimizes the paper's hardware cost model (edge
-    traversals — an FPGA frontier FIFO streams only live edges), which
-    is what ``report.run_stats['edges_traversed']`` counts.  On pure-XLA
-    CPU backends the measured per-edge scatter penalty is larger (~5-8×),
-    so raise alpha accordingly when wall-clock, not traversal work, is
-    the objective.  Push mode additionally requires the program to pass
-    the translator's direction-legality analysis; illegal programs run
-    pull regardless.
+    * ``alpha=1.0`` — push pays (in traversals) exactly while the
+      frontier's out-edges are fewer than E;
+    * ``beta=4.0`` — enter push as soon as the frontier drains below V/4
+      (entry risk is bounded by the dense fallback, so entering early is
+      cheap; all-active starts like WCC begin pull and flip to push as
+      labels converge).
+
+    ``benchmarks/direction.py`` re-derives this calibration from measured
+    per-edge costs (pull stream vs compacted push vs fallback) and records
+    them in ``BENCH_graph.json``'s crossover section.  Push mode
+    additionally requires the program to pass the translator's
+    direction-legality analysis; illegal programs run pull regardless.
     """
 
     mode: str = "auto"           # 'pull' | 'push' | 'auto'
-    alpha: float = 1.5           # push→pull when m_f > E/alpha
-    beta: float = 8.0            # pull→push when n_f < V/beta
+    alpha: float = 1.0           # push→pull when m_f > E/alpha
+    beta: float = 4.0            # pull→push when n_f < V/beta
 
     def __post_init__(self):
         if self.mode not in ("pull", "push", "auto"):
@@ -92,12 +100,15 @@ class ScheduleConfig:
     block_rows: int = 128        # Pallas tile rows (dense backend)
     message_dtype: str | None = None   # e.g. 'int8' → comm quantization
     direction: DirectionPolicy = DirectionPolicy()  # push/pull/auto policy
+    push_ell_width: int = 8      # forward-ELL row width (compacted push)
 
     def __post_init__(self):
         if self.backend not in ("auto", "dense", "sparse"):
             raise ValueError(self.backend)
         if self.pipelines < 1 or self.pes < 1:
             raise ValueError("pipelines and pes must be >= 1")
+        if self.push_ell_width < 1:
+            raise ValueError("push_ell_width must be >= 1")
         if not isinstance(self.direction, DirectionPolicy):
             raise TypeError("direction must be a DirectionPolicy")
 
@@ -119,6 +130,28 @@ class SchedulePlan:
         return (f"backend={self.backend} pipelines={self.num_chunks} "
                 f"chunk_size={self.chunk_size} pes={pes} "
                 f"direction={self.direction.describe()}")
+
+
+def push_capacity_tiers(num_rows: int) -> tuple[int, int]:
+    """Compaction capacity tiers for the forward-ELL push engine.
+
+    The compacted kernel's cost is proportional to its *capacity* (every
+    buffer slot is gathered and scattered, live or not), so one capacity
+    sized for the widest frontier would erase the savings on sparse ones.
+    Two power-of-two tiers — ``~R/64`` and ``~R/16`` rows — let the
+    runtime pick the smallest tier covering the live row count ``r_f``
+    each superstep; beyond the large tier the push superstep falls back to
+    the dense masked sweep (cost ≈ pull), because on XLA backends the
+    per-edge scatter (~90 ns measured on CPU) overtakes the dense stream
+    (~15 ns/slot) long before ``r_f·width`` reaches E.  Derived from the
+    forward-ELL row count so the tiers track graph shape, not raw E.
+    """
+    def p2floor(x: int) -> int:
+        return 1 << max(x.bit_length() - 1, 0)
+
+    small = max(256, p2floor(max(num_rows, 1) // 64))
+    large = max(2 * small, p2floor(max(num_rows, 1) // 16))
+    return small, large
 
 
 def choose_backend(cfg: ScheduleConfig, *, num_vertices: int,

@@ -38,27 +38,42 @@ The TPU mapping implemented here:
   :meth:`CompiledGraphProgram.run`'s while_loop, keyed on frontier occupancy
   vs the scheduler's :class:`~repro.core.scheduler.DirectionPolicy`
   thresholds (Beamer-style alpha/beta).  Pull reads the transposed CSR
-  (``G.reverse``); push streams the forward CSR, so no extra transpose.
+  (``G.reverse``); the push superstep is the frontier-compacted forward-ELL
+  engine (``kernels/push_ell.py``): live rows compact into a capacity tier
+  picked per superstep from the live row count, and frontiers wider than
+  the largest tier fall back to the dense masked sweep, so push never
+  costs meaningfully more than pull.
+* **Preprocessing cache** — every graph-derived layout (transposed CSR,
+  degree buckets, forward ELL, COO) is memoized per graph in
+  :mod:`repro.core.preprocess`, and the emitted/AOT-compiled supersteps
+  are memoized per (program, graph, schedule), so a repeat ``translate``
+  on the same inputs costs milliseconds.  ``TranslationReport.
+  translate_breakdown`` itemizes preprocess vs passes vs AOT time.
 * **AOT staging** — the translator compiles the superstep(s) eagerly and
   reports translation time (the paper's "TT" column) and cost estimates.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops as kops
+from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
 from . import graph as G
+from . import preprocess
 from ._jax_compat import pvary, shard_map
 from .comm import CommManager
 from .dsl import VertexProgram
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
                  PushScatterOp, SuperstepIR, lower_program)
 from .passes import PassContext, classify_gather, default_pipeline
-from .scheduler import DirectionPolicy, ScheduleConfig, SchedulePlan, plan
+from .scheduler import (DirectionPolicy, ScheduleConfig, SchedulePlan, plan,
+                        push_capacity_tiers)
 
 __all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
            "translate"]
@@ -86,9 +101,15 @@ class TranslationReport:
     dsl_lines: int | None = None  # set by callers for Table V
     pass_report: str | None = None  # per-pass dump (translate(dump_passes=True))
     ir_dump: str | None = None      # final optimized IR listing
-    direction_policy: str | None = None  # e.g. "auto(alpha=1.5, beta=8)"
+    direction_policy: str | None = None  # e.g. "auto(alpha=1, beta=4)"
     directions: tuple = ("pull",)   # supersteps emitted: ('pull',[ 'push'])
     run_stats: dict | None = None   # last run's direction stats (see run())
+    # translate-time itemization: preprocess_s (graph layouts built this
+    # call), passes_s, emit_s, aot_s, total_s, staging_cached (True when
+    # the emitted+compiled supersteps came from the staging cache)
+    translate_breakdown: dict | None = None
+    push_layout: str | None = None  # 'fwd_ell' | 'coo_chunks' (push emitted)
+    push_tiers: tuple | None = None  # compaction row capacities (fwd_ell)
 
 
 class CompiledGraphProgram:
@@ -105,15 +126,22 @@ class CompiledGraphProgram:
     def __init__(self, superstep, init_state, report: TranslationReport,
                  max_iters: int, *, push_superstep=None,
                  direction: DirectionPolicy | None = None,
-                 out_degrees=None, num_vertices: int = 0, num_edges: int = 0):
+                 out_degrees=None, num_vertices: int = 0, num_edges: int = 0,
+                 rows_per_vertex=None, push_tiers: tuple | None = None,
+                 loop_cache: dict | None = None):
         self._superstep = superstep
         self._push_superstep = push_superstep
         self._init_state = init_state
         self._direction = direction or DirectionPolicy(mode="pull")
         self._mode = self._direction.mode if push_superstep is not None \
             else "pull"
-        self._loop_cache: dict = {}
+        # shared across staging-cache siblings: the jitted while-loops are
+        # keyed per mode and identical for every translate of the same
+        # (program, graph, schedule), so reuse avoids re-tracing
+        self._loop_cache: dict = loop_cache if loop_cache is not None else {}
         self._out_degrees = out_degrees
+        self._rows_per_vertex = rows_per_vertex   # (V,) fwd-ELL rows, or None
+        self._push_tiers = push_tiers             # (small, large), or None
         self._num_vertices = num_vertices
         self._num_edges = num_edges
         self.report = report
@@ -146,8 +174,10 @@ class CompiledGraphProgram:
         would re-trace on every :meth:`run` call — and pure (vmap-safe):
         per-lane freeze guards let :meth:`run_batch` vmap it without
         over-counting iterations on converged lanes.  The jitted function
-        maps ``(values, active)`` to
-        ``(values, iters, (push_steps, switches, push_edges))``.
+        maps ``(values, active)`` to ``(values, iters, (push_steps,
+        compacted_push_steps, switches, push_edges_hi, push_edges_lo))``
+        — the pushed-edge counter is split into 16-bit words so its sum
+        never overflows int32 (callers recombine with python ints).
         """
         if mode in self._loop_cache:
             return self._loop_cache[mode]
@@ -155,6 +185,8 @@ class CompiledGraphProgram:
         policy = self._direction
         V, E = self._num_vertices, self._num_edges
         out_deg = self._out_degrees
+        rows_per_v = self._rows_per_vertex
+        tiers = self._push_tiers
         max_iters = self.max_iters
 
         def choose(prev_dir, active):
@@ -170,6 +202,18 @@ class CompiledGraphProgram:
             return (jnp.where(prev_dir == 1, stay_push, enter_push)
                     .astype(jnp.int32), m_f)
 
+        def compacted(direction, active):
+            # did this push superstep fit a compaction tier (vs the dense
+            # fallback)?  r_f = live forward-ELL rows, the same quantity
+            # the push superstep switches on (recomputed there: the
+            # superstep's public (values, active) signature stays, and the
+            # O(V) reduce is noise next to the superstep itself)
+            if mode == "pull" or rows_per_v is None or tiers is None:
+                return direction        # pull: always 0; coo_chunks:
+                                        # chunk-skip counts as compaction
+            r_f = jnp.sum(jnp.where(active, rows_per_v, 0))
+            return direction * (r_f <= tiers[-1]).astype(jnp.int32)
+
         def step(direction, values, active):
             if mode == "pull":
                 return pull(values, active)
@@ -182,29 +226,37 @@ class CompiledGraphProgram:
             return jnp.logical_and(jnp.any(active), it < max_iters)
 
         def body(state):
-            values, active, it, direction, pushes, switches, push_edges = state
+            values, active, it, direction, pushes, compact, switches, \
+                pe_hi, pe_lo = state
             alive = jnp.logical_and(jnp.any(active), it < max_iters)
             new_dir, m_f = choose(direction, active)
             new_values, new_active = step(new_dir, values, active)
             inc = alive.astype(jnp.int32)
             values = jnp.where(alive, new_values, values)
-            active = jnp.where(alive, new_active, active)
             pushes = pushes + new_dir * inc
+            compact = compact + compacted(new_dir, active) * inc
+            active = jnp.where(alive, new_active, active)
             switches = switches + (new_dir != direction).astype(jnp.int32) * inc
             # only the push part needs a device counter; the pull part is
-            # pull_supersteps·E, computed exactly host-side in run()
-            push_edges = push_edges + m_f.astype(jnp.int32) * new_dir * inc
+            # pull_supersteps·E, computed exactly host-side in run().  m_f
+            # fits int32 (≤ E) but its *sum* over supersteps may not, so
+            # accumulate split 16-bit words (exact up to ~32k push
+            # supersteps × full frontiers ≈ 2^47 edges); run() recombines
+            # with python ints.
+            m_f = m_f.astype(jnp.int32)
+            pe_hi = pe_hi + (m_f >> 16) * new_dir * inc
+            pe_lo = pe_lo + (m_f & 0xFFFF) * new_dir * inc
             direction = jnp.where(alive, new_dir, direction)
-            return values, active, it + inc, direction, pushes, switches, \
-                push_edges
+            return values, active, it + inc, direction, pushes, compact, \
+                switches, pe_hi, pe_lo
 
         @jax.jit
         def loop(values, active):
             z = jnp.asarray(0, jnp.int32)
-            state = (values, active, z, z, z, z, z)
-            values, active, iters, _, pushes, switches, push_edges = \
-                jax.lax.while_loop(cond, body, state)
-            return values, iters, (pushes, switches, push_edges)
+            state = (values, active, z, z, z, z, z, z, z)
+            values, active, iters, _, pushes, compact, switches, \
+                pe_hi, pe_lo = jax.lax.while_loop(cond, body, state)
+            return values, iters, (pushes, compact, switches, pe_hi, pe_lo)
 
         self._loop_cache[mode] = loop
         return loop
@@ -218,18 +270,26 @@ class CompiledGraphProgram:
         direction stats land on ``self.last_run_stats`` and
         ``report.run_stats``: push/pull superstep counts, direction
         switches, and the algorithmic edge-traversal count (``m_f`` per
-        push superstep, ``E`` per pull superstep).
+        push superstep, ``E`` per pull superstep).  The compacted vs
+        fallback split is meaningful for the ``fwd_ell`` push layout
+        (which capacity tier ran); under ``coo_chunks`` every push
+        superstep counts as compacted — chunk-granular ``lax.cond``
+        skipping is that layout's compaction mechanism, it has no dense
+        fallback (check ``report.push_layout`` when comparing engines).
         """
         values, active = self.init_state(roots=roots, values=values)
-        values, iters, (pushes, switches, push_edges) = \
+        values, iters, (pushes, compact, switches, pe_hi, pe_lo) = \
             self._run_loop(values, active)
         pull_steps = int(iters) - int(pushes)
         stats = {
             "push_supersteps": int(pushes),
+            "push_compacted_supersteps": int(compact),
+            "push_fallback_supersteps": int(pushes) - int(compact),
             "pull_supersteps": pull_steps,
             "direction_switches": int(switches),
-            # exact: python-int pull part + int32 push part (m_f ≤ E)
-            "edges_traversed": pull_steps * self._num_edges + int(push_edges),
+            # exact: python-int pull part + hi/lo-recombined push part
+            "edges_traversed": pull_steps * self._num_edges
+            + (int(pe_hi) << 16) + int(pe_lo),
         }
         self.last_run_stats = stats
         self.report.run_stats = stats
@@ -241,25 +301,49 @@ class CompiledGraphProgram:
         Returns ``(values (k, V), iters (k,))`` — each row identical to a
         sequential ``run(roots=root)``.  Converged lanes freeze (values,
         frontier, and iteration counter) while slower lanes finish, so the
-        batch matches k sequential runs exactly.  First step toward the
-        many-query serving story in ROADMAP.md.
+        batch matches k sequential runs exactly.  Per-lane direction stats
+        land on ``last_run_stats`` (lists, one entry per lane).
 
-        An ``'auto'`` policy degenerates to pull here: under vmap a
-        ``lax.cond`` lowers to a select that executes *both* branches per
-        lane, so per-lane dynamic switching would pay pull + push every
-        superstep.  Results are unaffected (directions are bit-exact);
-        a pinned ``'push'`` policy is honored as-is (no cond to batch).
+        Batched runs honor the direction policy, including per-lane
+        ``'auto'`` switching: the compacted push kernel is data-indexed
+        (cumsum compaction, no chunk ``lax.cond``), so it vmaps cleanly.
+        The cost trade-off is explicit: under vmap both the direction
+        ``cond`` and the tier ``switch`` lower to execute-all-branches
+        selects, so each batched auto superstep pays the pull module,
+        both compacted tiers, *and* the dense fallback (≈2× a pull-pinned
+        batch, vs ~7× with the old O(E) chunk-scan push).  Pin
+        ``DirectionPolicy(mode='pull')`` when batched throughput matters
+        more than per-lane direction stats — results are bit-identical
+        either way.
         """
         roots = jnp.asarray(roots)
-        loop = self._staged_loop("pull" if self._mode == "auto"
-                                 else self._mode)
+        loop = self._staged_loop(self._mode)
 
         def one(root):
             values, active = self.init_state(roots=root)
-            values, iters, _ = loop(values, active)
-            return values, iters
+            return loop(values, active)
 
-        return jax.vmap(one)(roots)
+        values, iters, (pushes, compact, switches, pe_hi, pe_lo) = \
+            jax.vmap(one)(roots)
+        iters_np = np.asarray(iters)
+        pushes_np = np.asarray(pushes)
+        pulls_np = iters_np - pushes_np
+        push_edges = (np.asarray(pe_hi).astype(np.int64) << 16) \
+            + np.asarray(pe_lo)
+        stats = {
+            "batch_size": int(roots.shape[0]),
+            "push_supersteps": pushes_np.tolist(),
+            "push_compacted_supersteps": np.asarray(compact).tolist(),
+            "push_fallback_supersteps": (pushes_np
+                                         - np.asarray(compact)).tolist(),
+            "pull_supersteps": pulls_np.tolist(),
+            "direction_switches": np.asarray(switches).tolist(),
+            "edges_traversed": (pulls_np.astype(np.int64) * self._num_edges
+                                + push_edges).tolist(),
+        }
+        self.last_run_stats = stats
+        self.report.run_stats = stats
+        return values, iters
 
 
 # ---------------------------------------------------------------------------
@@ -268,15 +352,19 @@ class CompiledGraphProgram:
 
 
 def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
-                            g_rev: G.Graph, out_deg, schedule: ScheduleConfig,
-                            use_pallas: bool):
-    """Emit the dense ELL partial-reduce module (Pallas or jnp reference)."""
+                            bucket: G.BucketedGraph, out_deg,
+                            schedule: ScheduleConfig, use_pallas: bool):
+    """Emit the dense ELL partial-reduce module (Pallas or jnp reference).
+
+    ``bucket`` is the graph's cached reverse degree-bucketed ELL
+    (:meth:`repro.core.preprocess.GraphLayouts.reverse_bucketed`) — the
+    translator no longer re-buckets per call.
+    """
     program = ir.program
     dtype = ir.value_dtype
-    V = g_rev.num_vertices
+    V = bucket.num_vertices
     ident = fused.reduce.identity
     gather_module = fused.gather.module
-    bucket = G.bucketize(g_rev)
 
     def partial_reduce(values, active):
         red_table = jnp.full((V,), ident, dtype)
@@ -310,24 +398,27 @@ def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
 
 
 def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
-                              g_rev: G.Graph, out_deg,
+                              reverse_coo: tuple, num_vertices: int,
+                              num_edges: int, out_deg,
                               splan: SchedulePlan, pes_planned: int):
     """Emit the sparse chunk-streamed partial-reduce module.
 
     ``pipelines`` → ``lax.scan`` over edge chunks (bounds the live working
     set); the chunk count is rounded up to a multiple of the planned PEs so
-    shard slices stay equal-sized.
+    shard slices stay equal-sized.  ``reverse_coo`` is the cached COO of
+    the transposed graph (:meth:`~repro.core.preprocess.GraphLayouts.
+    reverse_coo`).
     """
     program = ir.program
     dtype = ir.value_dtype
-    V = g_rev.num_vertices
-    E = g_rev.num_edges
+    V = num_vertices
+    E = num_edges
     ident = fused.reduce.identity
     reduce_op = fused.reduce.op
     gather_fn = fused.gather.fn
 
     # COO of the reversed graph: edge (u → v) appears as (dst=v, src=u)
-    seg_dst, src, wts = G.coo_arrays(g_rev)   # seg: receiving vertex
+    seg_dst, src, wts = reverse_coo            # seg: receiving vertex
     nchunk = splan.num_chunks
     if pes_planned > 1:       # each PE owns nchunk/pes edge chunks
         nchunk = -(-nchunk // pes_planned) * pes_planned
@@ -376,12 +467,13 @@ def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
 
 def _emit_push_scatter(ir: SuperstepIR, push_op: PushScatterOp, g: G.Graph,
                        out_deg, splan: SchedulePlan):
-    """Emit the push-direction frontier-compacted scatter module.
+    """Emit the legacy chunk-streamed push scatter (``layout='coo_chunks'``).
 
     Streams the *forward* CSR's COO chunks (no transpose — ``g`` already
     holds out-edges), scattering messages from active sources with
     ``at[].add/min/max``; chunks with no active source are skipped via
-    ``lax.cond`` (chunk-granular frontier compaction).
+    ``lax.cond``.  Kept for the sparse backend, which builds no forward
+    ELL; the dense backend uses :func:`_emit_push_ell` instead.
     """
     dtype = ir.value_dtype
     V = g.num_vertices
@@ -399,6 +491,67 @@ def _emit_push_scatter(ir: SuperstepIR, push_op: PushScatterOp, g: G.Graph,
             num_vertices=V, dtype=dtype)
 
     return partial_reduce
+
+
+def _emit_push_ell(ir: SuperstepIR, push_op: PushScatterOp,
+                   fe: G.ForwardELL, out_deg, apply_fn, pull_reduce_module,
+                   use_pallas: bool):
+    """Emit the frontier-compacted forward-ELL push superstep.
+
+    Builds the tiered push superstep: the live forward-ELL row count
+    ``r_f`` picks, per superstep, the smallest compaction capacity tier
+    that covers the frontier (``kernels/push_ell.py`` does cumsum
+    compaction → gather → segment-reduce), or the *dense fallback* — the
+    same masked sweep as the pull module — when the frontier is too wide
+    for compaction to beat the dense stream.  All branches compute the
+    identical superstep function, so the tier choice (like the direction
+    choice) is invisible in the results.
+
+    The compacted branches apply the reduced table *everywhere* and skip
+    the touched mask entirely — sound because the fusion pass binds the
+    ``fwd_ell`` layout only after probing ``apply(x, identity) == x``
+    (untouched vertices are fixpoints).  Returns ``(push_superstep,
+    tiers)``.
+    """
+    dtype = ir.value_dtype
+    V = fe.num_vertices
+    ident = push_op.reduce.identity
+    gather_fn = push_op.gather.fn
+    gather_module = push_op.gather.module
+    reduce_op = push_op.reduce.op
+    tiers = push_capacity_tiers(fe.num_rows)
+    rows_per_v = fe.rows_per_vertex
+    interpret = jax.default_backend() != "tpu"
+
+    def compacted_branch(capacity):
+        def branch(values, active):
+            red, _ = push_ell_kernel.push_ell_reduce(
+                fe.row_src, fe.dst, fe.weights, values, out_deg, active,
+                num_rows=fe.num_rows, capacity=capacity,
+                gather_fn=gather_fn, reduce=reduce_op, identity=ident,
+                num_vertices=V, dtype=dtype, gather_module=gather_module,
+                use_pallas=use_pallas, interpret=interpret,
+                emit_touched=False)
+            new = apply_fn(values, red)
+            return new, new != values
+        return branch
+
+    def dense_fallback(values, active):
+        # the pull module's masked sweep (bit-identical reduce); the
+        # touched mask is free here, so keep pull's take-if-touched form
+        red, got = pull_reduce_module(values, active)
+        new = jnp.where(got, apply_fn(values, red), values)
+        return new, new != values
+
+    branches = [compacted_branch(c) for c in tiers] + [dense_fallback]
+
+    @jax.jit
+    def push_superstep(values, active):
+        r_f = jnp.sum(jnp.where(active, rows_per_v, 0))
+        tier = sum((r_f > c).astype(jnp.int32) for c in tiers)
+        return jax.lax.switch(tier, branches, values, active)
+
+    return push_superstep, tiers
 
 
 def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
@@ -436,6 +589,49 @@ def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
 # The translator
 # ---------------------------------------------------------------------------
 
+# Staging cache: (program, graph structure-array ids, schedule, pallas
+# flag) → the emitted supersteps + shared loop cache.  A repeat translate()
+# of the same inputs skips stage 3 *and* AOT (the jitted function objects
+# persist, so their compiled executables do too).  The graph is keyed by
+# the identity of its structure arrays — the same key the layout cache
+# uses — so a staging hit survives layout-cache eviction (the caller's
+# graph still holds the same arrays); hits verify array identity against
+# the entry's pinned layouts, so a recycled id can never alias.
+# Unhashable programs (array init_value) simply skip the cache.
+_STAGING_CACHE: collections.OrderedDict = collections.OrderedDict()
+_STAGING_CACHE_MAX = 16
+
+
+def staging_cache_clear() -> None:
+    """Drop every staged superstep (memory-pressure / test hook).
+
+    Staged entries pin their :class:`~repro.core.preprocess.GraphLayouts`
+    (and thus the graph arrays and compiled executables), so freeing
+    layout memory requires clearing *both* caches:
+    ``translator.staging_cache_clear()`` then
+    ``preprocess.layout_cache_clear()``.
+    """
+    _STAGING_CACHE.clear()
+
+
+def _staging_key(program, g, schedule, use_pallas):
+    try:
+        hash(program)          # arrays in init_value make a program unhashable
+        hash(schedule)
+    except TypeError:
+        return None
+    # the program object itself (not its hash) so lookups equality-check:
+    # a hash collision must never alias two distinct programs
+    return (program, preprocess._layout_key(g), schedule, use_pallas)
+
+
+def _staging_hit(staged, g):
+    """A cached entry is valid iff it pins this graph's exact arrays."""
+    held = staged["layouts"].graph
+    return held.edges_dst is g.edges_dst \
+        and held.edge_offsets is g.edge_offsets \
+        and held.edge_weights is g.edge_weights
+
 
 def translate(
     program: VertexProgram,
@@ -455,8 +651,13 @@ def translate(
     before/after IR dumps on ``report.pass_report``.
 
     Messages flow along in-edges (pull form): ``g`` holds out-edges (CSR),
-    so the translator builds the transposed adjacency once at translation
-    time (paper: Layout(Graph, CSC) happens before Transport).
+    so the translator takes the transposed adjacency — and every other
+    derived layout — from the graph-keyed preprocessing cache
+    (:func:`repro.core.preprocess.layouts_for`); repeated translates of
+    the same graph re-bucket nothing.  The emitted supersteps themselves
+    are memoized per (program, graph, schedule) in the staging cache, so a
+    repeat translate of identical inputs costs milliseconds;
+    ``report.translate_breakdown`` itemizes where the time went.
     """
     t0 = time.perf_counter()
     schedule = schedule or ScheduleConfig()
@@ -467,10 +668,13 @@ def translate(
         use_pallas = jax.default_backend() == "tpu"
 
     # ---- stages 1+2: lower to IR, run the pass pipeline -----------------
+    # (always re-run: the pipeline costs ~ms and keeps reports/dumps fresh)
+    t_passes0 = time.perf_counter()
     ctx = PassContext(schedule=schedule, plan=splan, use_pallas=use_pallas,
                       num_vertices=g.num_vertices, num_edges=g.num_edges)
     ir, pipeline_report = default_pipeline().run(
         lower_program(program), ctx, dump=dump_passes)
+    passes_s = time.perf_counter() - t_passes0
 
     fused = ir.find(FusedGatherReduceOp)
     apply_op = ir.find(ApplyOp)
@@ -480,19 +684,103 @@ def translate(
         and frontier_op is not None, "pass pipeline left the IR incomplete"
 
     dtype = ir.value_dtype
-    g_rev = G.reverse(g)                     # pull: in-edges of each vertex
-    out_deg = g.out_degrees.astype(jnp.int32)
     V = g.num_vertices
+    push_op = ir.find(PushScatterOp)
+    policy = splan.direction
 
-    # ---- stage 3: walk the IR, emit the partial-reduce module -----------
+    key = _staging_key(program, g, schedule, use_pallas)
+    staged = _STAGING_CACHE.get(key) if key is not None else None
+    if staged is not None and _staging_hit(staged, g):
+        _STAGING_CACHE.move_to_end(key)
+        preprocess_s = emit_s = 0.0
+        cached = True
+    else:
+        lay = preprocess.layouts_for(g)
+        staged = _stage(program, ir, g, lay, schedule, splan, use_pallas,
+                        fused, apply_op, frontier_op, exchange_op,
+                        push_op if policy.mode != "pull" else None)
+        preprocess_s = staged.pop("preprocess_s")
+        emit_s = staged.pop("emit_s")
+        cached = False
+        if key is not None:
+            _STAGING_CACHE[key] = staged
+            _STAGING_CACHE.move_to_end(key)
+            while len(_STAGING_CACHE) > _STAGING_CACHE_MAX:
+                _STAGING_CACHE.popitem(last=False)
+
+    superstep = staged["superstep"]
+    push_superstep = staged["push_superstep"]
+    init_state = staged["init_state"]
+    max_iters = program.max_iters if program.max_iters is not None else V
+
+    # AOT compile so translation time includes staging (paper's TT metric).
+    # Executing once (rather than .lower().compile()) populates the normal
+    # jit call cache, which the staging cache then reuses across repeats.
+    t_aot0 = time.perf_counter()
+    if aot_compile and not staged["aot_done"]:
+        v0, a0 = init_state(roots=0 if program.frontier == "changed" else None)
+        jax.block_until_ready(superstep(v0, a0))
+        if push_superstep is not None:
+            jax.block_until_ready(push_superstep(v0, a0))
+        staged["aot_done"] = True
+    aot_s = time.perf_counter() - t_aot0
+
+    tt = time.perf_counter() - t0
+    est_collective = comm.estimate_collective_bytes(
+        V, dtype, staged["pes"], quantized=schedule.message_dtype == "int8")
+    report = TranslationReport(
+        program=program.name,
+        backend=ir.backend,
+        gather_module=fused.gather.module,
+        reduce_module=fused.reduce.op,
+        pipelines=splan.num_chunks,
+        pes=staged["pes"],
+        translate_time_s=tt,
+        est_flops_per_superstep=2.0 * g.num_edges,
+        est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
+        est_collective_bytes=est_collective,
+        pass_report=pipeline_report.render() if dump_passes else None,
+        ir_dump=ir.dump(),
+        direction_policy=policy.describe(),
+        directions=("pull", "push") if push_superstep is not None
+        else ("pull",),
+        translate_breakdown={
+            "preprocess_s": preprocess_s, "passes_s": passes_s,
+            "emit_s": emit_s, "aot_s": aot_s, "total_s": tt,
+            "staging_cached": cached},
+        push_layout=staged["push_layout"],
+        push_tiers=staged["push_tiers"],
+    )
+    return CompiledGraphProgram(
+        superstep, init_state, report, max_iters,
+        push_superstep=push_superstep, direction=policy,
+        out_degrees=staged["out_degrees"], num_vertices=V,
+        num_edges=g.num_edges, rows_per_vertex=staged["rows_per_vertex"],
+        push_tiers=staged["push_tiers"], loop_cache=staged["loop_cache"])
+
+
+def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
+           apply_op, frontier_op, exchange_op, push_op):
+    """Stage 3 proper: walk the optimized IR, emit the jitted supersteps.
+
+    Returns the staging-cache entry; graph-derived layouts come from
+    ``lay`` (built on first use, memoized per graph), and the entry's
+    ``preprocess_s`` records only the layout seconds spent *this* call.
+    """
+    pre_before = sum(lay.build_times_s.values())
+    t_emit0 = time.perf_counter()
+    dtype = ir.value_dtype
+    V = g.num_vertices
+    out_deg = g.out_degrees.astype(jnp.int32)
+
     if fused.kernel == "edge_block":
         reduce_module = _emit_edge_block_reduce(
-            ir, fused, g_rev, out_deg, schedule, use_pallas)
+            ir, fused, lay.reverse_bucketed(), out_deg, schedule, use_pallas)
         pes = 1
     else:
         pes = 1 if exchange_op is None else exchange_op.pes
         partial_reduce, chunk_arrays, nchunk = _emit_segment_scan_reduce(
-            ir, fused, g_rev, out_deg, splan, pes)
+            ir, fused, lay.reverse_coo(), V, g.num_edges, out_deg, splan, pes)
         if exchange_op is not None:
             reduce_module = _emit_exchange(
                 exchange_op, partial_reduce, chunk_arrays, nchunk, splan.mesh)
@@ -522,12 +810,21 @@ def translate(
     superstep = make_superstep(reduce_module)
 
     # ---- push direction: emit the twin superstep when legal + wanted ----
-    push_op = ir.find(PushScatterOp)
-    policy = splan.direction
     push_superstep = None
-    if push_op is not None and policy.mode != "pull":
-        push_superstep = make_superstep(
-            _emit_push_scatter(ir, push_op, g, out_deg, splan))
+    push_layout = None
+    push_tiers = None
+    rows_per_vertex = None
+    if push_op is not None:
+        push_layout = push_op.layout
+        if push_op.layout == "fwd_ell":
+            fe = lay.forward_ell(schedule.push_ell_width)
+            push_superstep, push_tiers = _emit_push_ell(
+                ir, push_op, fe, out_deg, apply_fn, reduce_module,
+                use_pallas)
+            rows_per_vertex = fe.rows_per_vertex
+        else:
+            push_superstep = make_superstep(
+                _emit_push_scatter(ir, push_op, g, out_deg, splan))
 
     def init_state(roots=None, values=None):
         if values is None:
@@ -540,36 +837,20 @@ def translate(
             active = jnp.ones((V,), bool)
         return values, active
 
-    max_iters = program.max_iters if program.max_iters is not None else V
-
-    # AOT compile so translation time includes staging (paper's TT metric)
-    if aot_compile:
-        v0, a0 = init_state(roots=0 if program.frontier == "changed" else None)
-        superstep.lower(v0, a0).compile()
-        if push_superstep is not None:
-            push_superstep.lower(v0, a0).compile()
-    tt = time.perf_counter() - t0
-
-    est_collective = comm.estimate_collective_bytes(
-        V, dtype, pes, quantized=schedule.message_dtype == "int8")
-    report = TranslationReport(
-        program=program.name,
-        backend=ir.backend,
-        gather_module=fused.gather.module,
-        reduce_module=fused.reduce.op,
-        pipelines=splan.num_chunks,
-        pes=pes,
-        translate_time_s=tt,
-        est_flops_per_superstep=2.0 * g.num_edges,
-        est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
-        est_collective_bytes=est_collective,
-        pass_report=pipeline_report.render() if dump_passes else None,
-        ir_dump=ir.dump(),
-        direction_policy=policy.describe(),
-        directions=("pull", "push") if push_superstep is not None
-        else ("pull",),
-    )
-    return CompiledGraphProgram(
-        superstep, init_state, report, max_iters,
-        push_superstep=push_superstep, direction=policy,
-        out_degrees=out_deg, num_vertices=V, num_edges=g.num_edges)
+    emit_s = time.perf_counter() - t_emit0
+    preprocess_s = sum(lay.build_times_s.values()) - pre_before
+    return {
+        "layouts": lay,
+        "superstep": superstep,
+        "push_superstep": push_superstep,
+        "init_state": init_state,
+        "out_degrees": out_deg,
+        "rows_per_vertex": rows_per_vertex,
+        "push_tiers": push_tiers,
+        "push_layout": push_layout,
+        "pes": pes,
+        "loop_cache": {},
+        "aot_done": False,
+        "preprocess_s": preprocess_s,
+        "emit_s": emit_s - preprocess_s,
+    }

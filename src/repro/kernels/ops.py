@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import decode_gqa as _decode_gqa
 from . import edge_block as _edge_block
+from . import push_ell as _push_ell
 from . import push_scatter as _push_scatter
 from . import segment_sum as _segment_sum
 from . import ref as _ref
@@ -73,6 +74,33 @@ def push_scatter_reduce(src, dst, wgt, values, degrees, active, *, gather,
     return _ref.push_scatter_reduce_ref(
         src, dst, wgt, values, degrees, active,
         gather=gather, reduce=reduce, mask_inactive=mask_inactive)
+
+
+@partial(jax.jit, static_argnames=(
+    "num_rows", "capacity", "gather", "reduce", "mask_inactive",
+    "use_pallas", "emit_touched"))
+def push_ell_reduce(row_src, ell_dst, ell_wgt, values, degrees, active, *,
+                    num_rows, capacity, gather, reduce, mask_inactive=True,
+                    use_pallas=False, emit_touched=True):
+    """Frontier-compacted forward-ELL push reduce (menu-gather dispatch).
+
+    The test/direct-caller convenience over
+    ``push_ell.push_ell_reduce``: ``gather`` is a menu-module name, the
+    reduce identity is folded here, and ``emit_touched`` defaults on so the
+    result tuple matches ``ref.push_scatter_reduce_ref``.  The translator
+    instead stages the kernel module directly with its own traced callable
+    and capacity tiers.
+    """
+    if not mask_inactive:
+        active = jnp.ones_like(active)
+    ident = _ref._identity(reduce, values.dtype)
+    return _push_ell.push_ell_reduce(
+        row_src, ell_dst, ell_wgt, values, degrees, active,
+        num_rows=num_rows, capacity=capacity,
+        gather_fn=partial(_ref.gather_msg, gather), reduce=reduce,
+        identity=ident, num_vertices=values.shape[0], dtype=values.dtype,
+        gather_module=gather, use_pallas=use_pallas,
+        interpret=not _on_tpu(), emit_touched=emit_touched)
 
 
 @partial(jax.jit, static_argnames=("block_s", "use_kernel"))

@@ -20,7 +20,11 @@ the work actually executed per superstep approaches
 
 ``kernels.ref.push_scatter_reduce_ref`` is the pure-jnp oracle (dense, no
 chunking, menu-name gathers); :func:`push_scatter_reduce` here is what the
-translator stages into the push superstep.
+translator stages into the push superstep for the *sparse* backend
+(``PushScatterOp.layout == 'coo_chunks'``).  The dense backend uses the
+frontier-compacted forward-ELL engine in :mod:`repro.kernels.push_ell`
+instead — data-indexed compaction (no ``lax.cond``), capacity tiers, and
+a dense fallback, which is both faster per live edge and vmap-friendly.
 """
 from __future__ import annotations
 

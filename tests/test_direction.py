@@ -151,6 +151,26 @@ def test_run_batch_matches_sequential(graph):
         assert int(batch_iters[k]) == int(iters), k
 
 
+def test_run_batch_auto_switches_and_records_stats(graph):
+    """Batched runs honor the auto policy: per-lane push supersteps are
+    recorded and every per-lane counter matches its sequential run."""
+    g, *_ = graph
+    prog = translate(dsl.bfs_program(alg.INT_MAX), g, ScheduleConfig())
+    assert prog._mode == "auto"
+    roots = [0, 5, 9]
+    prog.run_batch(roots)
+    batch = prog.last_run_stats
+    assert batch["batch_size"] == 3
+    assert len(batch["push_supersteps"]) == 3
+    assert sum(batch["push_supersteps"]) >= 3     # push engages per lane
+    for k, root in enumerate(roots):
+        prog.run(roots=root)
+        seq = prog.last_run_stats
+        for key in ("push_supersteps", "push_compacted_supersteps",
+                    "pull_supersteps", "edges_traversed"):
+            assert batch[key][k] == seq[key], (key, k)
+
+
 # ---------------------------------------------------------------------------
 # 4. first-class init spec (no more name-keyed special cases)
 # ---------------------------------------------------------------------------
