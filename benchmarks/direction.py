@@ -181,6 +181,74 @@ def collect_sweep(scales=SWEEP_SCALES, seed: int = 0, root: int = 0,
     return out
 
 
+def collect_pe_sweep(max_pes: int, num_vertices: int = 50_000,
+                     num_edges: int = 500_000, seed: int = 0, root: int = 0,
+                     repeats: int = 3) -> dict:
+    """Per-PE scaling of the sharded push engine (BFS, auto direction).
+
+    For pes ∈ {1, 2, 4, … max_pes} (powers of two, clamped to the device
+    pool): wall time, the direction/exchange counters from
+    ``report.run_stats`` (``exchange_supersteps`` / ``exchange_bytes`` are
+    the *executed* collectives, recorded by the run loop), the static
+    per-PE interval balance (``push_pe_rows`` / ``push_pe_edges``), and
+    the ``CommManager``'s accumulated totals.  The run-stat counters are
+    per-run; the comm totals accumulate over every timed repeat (that is
+    what they measure — the accumulation plane), so the payload records
+    ``repeats`` to keep the two reconcilable:
+    ``comm_collective_bytes_total == repeats · exchange_bytes``.
+    Results are asserted bit-identical to pes=1 before anything is
+    recorded.  Run via ``python -m benchmarks.run --pes N`` (which
+    forces N host devices before jax initializes); payload lands under
+    ``pe_sweep`` in ``BENCH_graph.json``.
+    """
+    import jax as _jax
+
+    from repro.core.comm import CommManager
+
+    src, dst = G.rmat_edges(num_vertices, num_edges, seed=seed)
+    g = G.from_edge_list(src, dst, num_vertices=num_vertices)
+    pes_ladder = [1]
+    while pes_ladder[-1] * 2 <= min(max_pes, len(_jax.devices())):
+        pes_ladder.append(pes_ladder[-1] * 2)
+    out = {"graph": {"num_vertices": g.num_vertices,
+                     "num_edges": g.num_edges,
+                     "generator": f"rmat(seed={seed})"},
+           # comm_* totals below accumulate over this many timed runs;
+           # the run_stats counters in the same record are per-run
+           "repeats": repeats,
+           "per_pes": {}}
+    baseline = None
+    for pes in pes_ladder:
+        comm = CommManager()
+        prog = translate(dsl.bfs_program(alg.INT_MAX), g,
+                         ScheduleConfig(pes=pes), comm)
+        wall_s, levels, iters = _time_run(prog, root, repeats)
+        lv = np.asarray(levels)
+        if baseline is None:
+            baseline = lv
+        else:
+            assert np.array_equal(baseline, lv), f"pes={pes} diverged"
+        te = alg.traversed_edges(g, levels)
+        out["per_pes"][str(pes)] = {
+            "wall_s": wall_s,
+            "mteps": te / wall_s / 1e6,
+            "iters": int(iters),
+            "report_pes": prog.report.pes,
+            "exchange_plane": prog.report.exchange_plane,
+            "est_collective_bytes": prog.report.est_collective_bytes,
+            "push_pe_rows": list(prog.report.push_pe_rows or ()),
+            "push_pe_edges": list(prog.report.push_pe_edges or ()),
+            "comm_collective_bytes_total":
+                comm.stats.collective_bytes_total,
+            "comm_collective_supersteps": comm.stats.collective_supersteps,
+            **prog.report.run_stats,
+        }
+    one = out["per_pes"]["1"]["wall_s"]
+    out["speedup_vs_1pe"] = {p: one / d["wall_s"]
+                            for p, d in out["per_pes"].items()}
+    return out
+
+
 def run() -> list[tuple[str, float, str]]:
     """CSV rows for the benchmark driver (smaller default for quick runs)."""
     data = collect(num_vertices=20_000, num_edges=200_000, repeats=2)

@@ -8,10 +8,21 @@ push/pull/auto per scale, edge-traversal / direction-switch / compaction
 counters, translate-time breakdowns (incl. cached repeat), and measured
 per-edge engine costs — to ``BENCH_graph.json`` (CI's perf artifact).
 The 50k/500k acceptance scale keeps its fields at the payload top level.
+
+``--pes N`` runs the multi-PE scaling sweep of the sharded push engine
+(BFS auto at pes ∈ {1, 2, …, N} on N forced host devices — the flag must
+be handled before jax initializes, which is why this driver imports the
+benchmark modules lazily) and merges the payload under ``pe_sweep`` in
+``BENCH_graph.json``: per-PE wall time / MTEPS, the executed exchange
+bytes and supersteps recorded by the run loop, and the interval balance.
+``--pes`` is a separate invocation from ``--json`` (enforced): forced
+host devices change XLA:CPU scheduling, so the single-PE acceptance
+sweep must never run under them.
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
 
 
@@ -55,11 +66,77 @@ def _run_json(path: str) -> None:
               f"{s['traversal_reduction_auto_vs_pull']:.2f}x fewer edges")
 
 
+def _run_pes(max_pes: int, path: str) -> None:
+    from . import direction
+    data = direction.collect_pe_sweep(max_pes)
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["pe_sweep"] = data
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"merged pe_sweep into {path}")
+    for pes, d in sorted(data["per_pes"].items(), key=lambda kv: int(kv[0])):
+        print(f"  pes={pes}: {d['wall_s']*1e3:.1f} ms "
+              f"({data['speedup_vs_1pe'][pes]:.2f}x vs 1 PE), "
+              f"{d['mteps']:.1f} MTEPS, push={d['push_supersteps']}"
+              f"(compacted={d['push_compacted_supersteps']}), "
+              f"exchange {d['exchange_supersteps']} supersteps / "
+              f"{d['exchange_bytes']} B")
+
+
 def main() -> None:
     argv = sys.argv[1:]
+    max_pes = None
+    if "--pes" in argv:
+        i = argv.index("--pes")
+        try:
+            max_pes = int(argv[i + 1])
+        except (IndexError, ValueError):
+            print("error: --pes needs a device count (--pes N)",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        if max_pes < 1:
+            print(f"error: --pes must be >= 1, got {max_pes}",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        del argv[i:i + 2]
+        # must land before the lazy benchmark imports pull in jax; pin
+        # the cpu platform too — forced host devices only exist on the
+        # CPU backend, so on an accelerator host the sweep would
+        # silently clamp to the single accelerator otherwise
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        import re
+        flags = os.environ.get("XLA_FLAGS", "")
+        m = re.search(r"xla_force_host_platform_device_count=(\d+)", flags)
+        if m is None:
+            os.environ["XLA_FLAGS"] = (
+                flags
+                + f" --xla_force_host_platform_device_count={max_pes}"
+            ).strip()
+        elif int(m.group(1)) < max_pes:
+            # a smaller inherited count would silently truncate the sweep
+            print(f"error: XLA_FLAGS already forces "
+                  f"{m.group(1)} host devices (< --pes {max_pes}); "
+                  "unset it or lower --pes", file=sys.stderr)
+            raise SystemExit(2)
     if "--json" in argv:
         argv.remove("--json")
+        if max_pes is not None:
+            # forced host devices are a debug configuration that changes
+            # XLA:CPU scheduling — the single-PE acceptance sweep must
+            # never run under it, or the artifact's headline numbers stop
+            # being comparable across CI runs.  Run the two sweeps as
+            # separate invocations; --pes merges into the existing file.
+            print("error: --pes and --json are separate runs "
+                  "(run --json first, then --pes N to merge pe_sweep)",
+                  file=sys.stderr)
+            raise SystemExit(2)
         _run_json(argv[0] if argv else "BENCH_graph.json")
+        return
+    if max_pes is not None:
+        _run_pes(max_pes, argv[0] if argv else "BENCH_graph.json")
         return
     _run_csv(argv)
 

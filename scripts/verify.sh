@@ -79,6 +79,43 @@ if reduction < 3.0:
 print("perf smoke OK")
 EOF
 
+echo "== multi-PE smoke: pes=2 auto BFS must stay bit-exact =="
+# The sharded forward-ELL push engine: under forced host devices a pes=2
+# auto BFS must (a) be bit-identical to pes=1, (b) actually run push
+# supersteps across the mesh (the single-PE legality pin is gone), and
+# (c) keep the direction optimization's traversal reduction.
+XLA_FLAGS="--xla_force_host_platform_device_count=8" JAX_PLATFORMS=cpu \
+python - <<'EOF'
+import sys
+import numpy as np
+from repro.core import algorithms as alg, graph as G
+from repro.core.comm import CommManager
+
+src, dst = G.rmat_edges(50_000, 500_000, seed=0)
+g = G.from_edge_list(src, dst, num_vertices=50_000)
+l1, _, _ = alg.bfs(g, root=0, pes=1, direction="auto")
+_, _, rp = alg.bfs(g, root=0, pes=2, direction="pull")
+comm = CommManager()
+l2, _, rep = alg.bfs(g, root=0, pes=2, direction="auto", comm=comm)
+s = rep.run_stats
+print(f"pes={rep.pes} plane={rep.exchange_plane} "
+      f"push={s['push_supersteps']} exchange={s['exchange_supersteps']} "
+      f"supersteps / {s['exchange_bytes']} B "
+      f"(comm total {comm.stats.collective_bytes_total} B)")
+if not np.array_equal(np.asarray(l1), np.asarray(l2)):
+    print("FAIL: pes=2 auto BFS diverged from pes=1")
+    sys.exit(1)
+if rep.pes != 2 or s["push_supersteps"] < 1:
+    print("FAIL: sharded push engine did not engage (pes pin regressed?)")
+    sys.exit(1)
+reduction = rp.run_stats["edges_traversed"] / s["edges_traversed"]
+print(f"traversal reduction vs pull @pes=2: {reduction:.2f}x")
+if reduction < 3.0:
+    print("FAIL: multi-PE auto lost the edge-traversal reduction")
+    sys.exit(1)
+print("multi-PE smoke OK")
+EOF
+
 echo "== docstring check (core/ir.py, core/passes.py) =="
 python - <<'EOF'
 import inspect, sys

@@ -16,8 +16,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_mesh", "shard_map", "pvary", "get_abstract_mesh",
-           "set_mesh"]
+__all__ = ["make_mesh", "shard_map", "shard_map_unchecked", "pvary",
+           "get_abstract_mesh", "set_mesh"]
 
 
 def make_mesh(axis_shapes, axis_names, devices=None) -> jax.sharding.Mesh:
@@ -35,6 +35,27 @@ if hasattr(jax, "shard_map"):
     shard_map = jax.shard_map
 else:
     from jax.experimental.shard_map import shard_map  # noqa: F401
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """``shard_map`` with the static replication checker disabled.
+
+    jax 0.4.x's ``check_rep`` pass mis-types values when a ``shard_map``
+    is batched by an outer ``vmap`` (the translated program's
+    ``run_batch``), rejecting programs that execute correctly — the
+    workaround jax itself suggests is ``check_rep=False``.  Newer
+    releases dropped the flag (the vma system replaced it), so pass it
+    only where the signature still has it.
+    """
+    import inspect
+    try:
+        has_flag = "check_rep" in inspect.signature(shard_map).parameters
+    except (TypeError, ValueError):
+        has_flag = False
+    if has_flag:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
 
 
 def pvary(x, axis_names):

@@ -149,6 +149,98 @@ def forward_ell(g: Graph, *, width: int = 8) -> ForwardELL:
         num_vertices=g.num_vertices, num_edges=g.num_edges)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedForwardELL:
+    """Per-PE partition of a :class:`ForwardELL`: contiguous row intervals.
+
+    The multi-PE push engine's layout (paper §V-C2: replicated PEs own
+    edge partitions).  The forward ELL's rows are split into ``pes``
+    contiguous intervals, cut at *vertex* boundaries (a vertex's rows never
+    straddle PEs, so ``active[row_src]`` stays a plain gather per PE) and
+    balanced by *edge* count, not row count — a degree-balanced split, so a
+    hub-heavy prefix doesn't serialize one PE.  Every interval is padded to
+    the longest one (``rows_per_pe_max``) because ``shard_map`` needs one
+    static per-PE shape; ``row_valid`` masks the padding.
+
+    Row ids stay **PE-local**: each PE compacts over its own ``(Rp,)``
+    interval and indexes only its own slice of the stacked arrays, while
+    destination ids remain global — the per-PE partial vertex tables are
+    disjoint by construction (intervals partition the edge set), which is
+    exactly the property that makes the reduce-matched collective
+    (psum/pmin/pmax) an exact combine.
+    """
+
+    row_src: jax.Array           # (pes, Rp) int32 owner vertex (global id)
+    dst: jax.Array               # (pes, Rp, width) int32, PAD-padded
+    weights: jax.Array           # (pes, Rp, width) edge weights
+    row_valid: jax.Array         # (pes, Rp) bool: real row vs interval pad
+    rows_per_pe: tuple = _field(metadata=dict(static=True))   # logical rows
+    edges_per_pe: tuple = _field(metadata=dict(static=True))  # balance stats
+    rows_per_pe_max: int = _field(metadata=dict(static=True))  # Rp
+    pes: int = _field(metadata=dict(static=True))
+    width: int = _field(metadata=dict(static=True))
+    num_vertices: int = _field(metadata=dict(static=True))
+    num_edges: int = _field(metadata=dict(static=True))
+
+
+def shard_forward_ell(fe: ForwardELL, pes: int) -> ShardedForwardELL:
+    """Split a forward ELL into ``pes`` degree-balanced row intervals.
+
+    Host-side numpy, like every layout builder.  Cut points are chosen on
+    the cumulative *edge* count (searchsorted at equal fractions of E),
+    then snapped to vertex boundaries; intervals may be empty on extreme
+    skew (a PE owning zero rows simply contributes the identity table).
+    """
+    if pes < 1:
+        raise ValueError(f"pes must be >= 1, got {pes}")
+    rows_per_v = np.asarray(fe.rows_per_vertex, np.int64)
+    row_off = np.zeros(fe.num_vertices + 1, np.int64)
+    np.cumsum(rows_per_v, out=row_off[1:])
+    # valid (non-PAD) slots per row = that row's edge count
+    row_edges = np.asarray(fe.dst != PAD).sum(axis=1).astype(np.int64)
+    if fe.num_rows == 0:
+        row_edges = np.zeros(1, np.int64)
+    # per-vertex edge counts via the row→owner map (rows are grouped by
+    # vertex in storage order, so cuts on vertices are cuts on rows)
+    vertex_edges = np.bincount(
+        np.asarray(fe.row_src)[:fe.num_rows],
+        weights=row_edges[:fe.num_rows],
+        minlength=fe.num_vertices).astype(np.int64)
+    cum_edges_v = np.zeros(fe.num_vertices + 1, np.int64)
+    np.cumsum(vertex_edges, out=cum_edges_v[1:])
+    targets = fe.num_edges * (np.arange(1, pes, dtype=np.float64)) / pes
+    cut_vertices = np.searchsorted(cum_edges_v[1:], targets, side="left") + 1
+    cuts = np.concatenate([[0], row_off[np.clip(cut_vertices, 0,
+                                                fe.num_vertices)],
+                           [max(fe.num_rows, 0)]]).astype(np.int64)
+    cuts = np.maximum.accumulate(cuts)
+    starts, ends = cuts[:-1], cuts[1:]
+    rows_per_pe = tuple(int(e - s) for s, e in zip(starts, ends))
+    rp = max(max(rows_per_pe), 1)
+    row_src = np.zeros((pes, rp), np.int32)
+    dst = np.full((pes, rp, fe.width), int(PAD), np.int32)
+    wgt = np.zeros((pes, rp, fe.width), np.asarray(fe.weights).dtype)
+    valid = np.zeros((pes, rp), bool)
+    fe_src, fe_dst, fe_wgt = (np.asarray(fe.row_src), np.asarray(fe.dst),
+                              np.asarray(fe.weights))
+    edges_per_pe = []
+    for p, (s, e) in enumerate(zip(starts, ends)):
+        n = int(e - s)
+        if n:
+            row_src[p, :n] = fe_src[s:e]
+            dst[p, :n] = fe_dst[s:e]
+            wgt[p, :n] = fe_wgt[s:e]
+            valid[p, :n] = True
+        edges_per_pe.append(int(row_edges[s:e].sum()))
+    return ShardedForwardELL(
+        row_src=jnp.asarray(row_src), dst=jnp.asarray(dst),
+        weights=jnp.asarray(wgt), row_valid=jnp.asarray(valid),
+        rows_per_pe=rows_per_pe, edges_per_pe=tuple(edges_per_pe),
+        rows_per_pe_max=rp, pes=pes, width=fe.width,
+        num_vertices=fe.num_vertices, num_edges=fe.num_edges)
+
+
 def from_edge_list(
     src: np.ndarray,
     dst: np.ndarray,

@@ -147,11 +147,16 @@ class PushScatterOp:
       tiers, segment-reduce combine, dense-engine fallback beyond the
       largest tier.  Requires the dense backend and an identity-fixpoint
       apply (``apply(x, identity) == x``, probed) since it skips the
-      touched-mask scatter;
+      touched-mask scatter.  This is also the only multi-PE-shardable
+      layout: under ``pes > 1`` the translator partitions the forward ELL
+      into disjoint per-PE row intervals and combines the partial tables
+      with the reduce-matched collective (the IR's resolved
+      :class:`ExchangeOp`);
     * ``'coo_chunks'`` — the chunk-streamed forward-COO scatter
       (``kernels/push_scatter.py``), for the sparse backend (no forward
       ELL is built) and for non-fixpoint applies (it keeps the touched
-      mask).
+      mask).  Single-PE only; multi-PE plans that would need it pin to
+      pull instead (the legality pass notes why).
 
     Emitted by the fusion pass alongside the pull op; the translator emits
     *both* supersteps and the runtime direction policy picks per superstep.
@@ -205,7 +210,11 @@ class ExchangeOp:
 
     ``pes``/``collective`` are unresolved (``None``) until the
     backend-selection pass consumes the scheduler plan; with one PE the
-    pass deletes this op from the pipeline instead.
+    pass deletes this op from the pipeline instead.  Which plane the
+    resolved exchange serves depends on the backend: the sparse plan
+    shards the *pull* sweep (per-PE edge-chunk slices), the dense plan
+    shards the *push* engine (per-PE forward-ELL row intervals) and keeps
+    the pull sweep replicated.
     """
 
     reduce: str

@@ -286,8 +286,20 @@ class DirectionLegalityPass(Pass):
     * ``mask_inactive=True`` — pull already drops messages from inactive
       sources, so skipping those sources entirely changes nothing;
     * ``frontier='changed'`` — a sparse frontier exists to push from
-      (``'all'`` re-activates every vertex, push degenerates to pull);
-    * single PE — the cross-PE exchange plane is pull-only for now.
+      (``'all'`` re-activates every vertex, push degenerates to pull).
+
+    Under a multi-PE plan (``pes > 1``) push is additionally legal only on
+    the compacted forward-ELL data path: the dense backend (after the
+    unmatched-gather downgrade, which this pass anticipates) *and* an
+    identity-fixpoint apply (``apply(x, identity) == x``, probed).  The
+    sharded engine partitions the forward ELL into disjoint per-PE row
+    intervals and combines the per-PE partial tables with the
+    reduce-matched collective — disjointness is what makes psum/pmin/pmax
+    an exact combine, and the commutative-reduce requirement already
+    covers the collective's reordering.  The chunk-streamed
+    ``coo_chunks`` push path stays single-PE (it has no interval
+    partition), so non-fixpoint applies pin to pull on multi-PE plans,
+    with the reason noted per-PE-count in the IR.
 
     A legal program gets ``Gather.direction='both'``; a pinned program
     keeps ``'pull'`` and the reason lands in the IR notes (and thus the
@@ -306,7 +318,7 @@ class DirectionLegalityPass(Pass):
         if gop is None or rop is None or gop.direction != "pull":
             return ir
         program = ir.program
-        pes = 1 if ctx.plan.mesh is None else int(ctx.plan.mesh.devices.size)
+        pes = ctx.plan.pes
         reasons = []
         if rop.op not in COMMUTATIVE_REDUCES:
             reasons.append(f"reduce '{rop.op}' is not commutative-with-identity")
@@ -322,12 +334,28 @@ class DirectionLegalityPass(Pass):
         if program.frontier != "changed":
             reasons.append(f"frontier='{program.frontier}' keeps every "
                            "vertex active (no sparse frontier to push from)")
-        if pes > 1:
-            reasons.append(f"multi-PE exchange (pes={pes}) is pull-only")
+        if pes > 1 and not reasons:
+            # multi-PE push runs only on the sharded forward-ELL engine;
+            # anticipate the backend-selection downgrade (unmatched gather
+            # forces sparse) so the note names the real data-path reason
+            dense = ctx.plan.backend == "dense" and gop.module is not None
+            if not dense:
+                reasons.append(
+                    f"multi-PE push (pes={pes}) needs the dense forward-ELL "
+                    "engine; the sparse plan shards the pull plane instead")
+            elif not apply_preserves_identity(program.apply, rop.op,
+                                              ir.value_dtype):
+                reasons.append(
+                    f"multi-PE push (pes={pes}) needs an identity-fixpoint "
+                    "apply (the touched-mask coo_chunks layout is single-PE)")
         if reasons:
             return ir.with_note("direction: pinned to pull ("
                                 + "; ".join(reasons) + ")")
         ir = ir.replace_op(gop, dataclasses.replace(gop, direction="both"))
+        if pes > 1:
+            return ir.with_note(
+                f"direction: push legal across pes={pes} (disjoint "
+                "forward-ELL row intervals, reduce-matched collective)")
         return ir.with_note("direction: push legal (commutative reduce, "
                             "identity masking, sparse frontier)")
 
@@ -360,8 +388,11 @@ class BackendSelectionPass(Pass):
     segment-scan module.  An unmatched gather downgrades dense → sparse
     (only the sparse module has a general gather path).  The cross-PE
     :class:`~repro.core.ir.ExchangeOp` is resolved to its reduce-matched
-    collective, or deleted when a single PE (or the dense backend, which
-    runs un-sharded) makes it dead.
+    collective whenever a plane will actually shard — the sparse pull
+    plane, or the dense plan's sharded forward-ELL *push* plane (the
+    direction-legality pass widened the gather to ``'both'``) — and
+    deleted otherwise (single PE, or a dense pull-only plan, whose masked
+    sweep runs replicated).
     """
 
     name = "backend-selection"
@@ -389,13 +420,20 @@ class BackendSelectionPass(Pass):
         if xop is not None:
             # actual mesh size, not config.pes: the plan may have degraded
             # to fewer devices (elastic re-planning)
-            pes = 1 if ctx.plan.mesh is None else int(ctx.plan.mesh.devices.size)
-            if backend == "dense" or pes <= 1:
+            pes = ctx.plan.pes
+            direction = gop.direction if gop is not None else "pull"
+            push_plane = backend == "dense" and direction == "both"
+            if pes <= 1 or (backend == "dense" and not push_plane):
                 ir = ir.replace_op(xop, None)  # dead exchange: elide
             else:
                 coll = {"add": "psum", "min": "pmin", "max": "pmax"}[xop.reduce]
                 ir = ir.replace_op(xop, dataclasses.replace(
                     xop, pes=pes, collective=coll))
+                if push_plane:
+                    ir = ir.with_note(
+                        f"exchange: push plane (pes={pes}, {coll} over "
+                        "disjoint forward-ELL intervals); pull sweep "
+                        "stays replicated")
         return ir.with_note(f"schedule: {ctx.plan.describe()}")
 
 

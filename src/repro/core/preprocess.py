@@ -94,6 +94,7 @@ class GraphLayouts:
     _reverse_bucketed: G.BucketedGraph | None = None
     _reverse_coo: tuple | None = None
     _forward_ell: dict = dataclasses.field(default_factory=dict)
+    _forward_ell_shards: dict = dataclasses.field(default_factory=dict)
 
     def _timed(self, name: str, build):
         # record *self* time: a nested build (reverse_bucketed → reverse)
@@ -132,6 +133,22 @@ class GraphLayouts:
                 f"forward_ell_w{width}",
                 lambda: G.forward_ell(self.graph, width=width))
         return self._forward_ell[width]
+
+    def forward_ell_shards(self, width: int, pes: int) -> G.ShardedForwardELL:
+        """Per-PE row-interval partition of the forward ELL (multi-PE push).
+
+        Degree-balanced contiguous intervals cut at vertex boundaries
+        (:func:`repro.core.graph.shard_forward_ell`), keyed per
+        ``(width, pes)`` so elastic re-plans onto a different PE count
+        re-partition once and then hit the cache.
+        """
+        key = (width, pes)
+        if key not in self._forward_ell_shards:
+            fe = self.forward_ell(width)
+            self._forward_ell_shards[key] = self._timed(
+                f"forward_ell_shards_w{width}_p{pes}",
+                lambda: G.shard_forward_ell(fe, pes))
+        return self._forward_ell_shards[key]
 
 
 _LAYOUT_CACHE: collections.OrderedDict = collections.OrderedDict()

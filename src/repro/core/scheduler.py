@@ -73,6 +73,13 @@ class DirectionPolicy:
     them in ``BENCH_graph.json``'s crossover section.  Push mode
     additionally requires the program to pass the translator's
     direction-legality analysis; illegal programs run pull regardless.
+
+    The policy applies unchanged across PE counts: under a multi-PE plan
+    the push superstep runs the sharded forward-ELL engine (per-PE row
+    intervals + reduce-matched collective), and the direction register is
+    computed on the replicated frontier — equal to the psum of per-PE
+    partial occupancy counts — so every PE takes the same direction each
+    superstep.
     """
 
     mode: str = "auto"           # 'pull' | 'push' | 'auto'
@@ -115,20 +122,32 @@ class ScheduleConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SchedulePlan:
-    """Resolved schedule: concrete chunking + mesh for this graph/devices."""
+    """Resolved schedule: concrete chunking + mesh for this graph/devices.
+
+    The plan owns *all* chunk/PE arithmetic: ``num_chunks`` is already
+    rounded up to a multiple of the resolved PE count (so per-PE chunk
+    slices are equal-sized) and ``chunk_size`` is derived from the rounded
+    count — the translator stages exactly these numbers, so
+    :meth:`describe` and the backend-selection pass dump always agree with
+    the staged chunk arrays.
+    """
 
     config: ScheduleConfig
     backend: str                 # resolved ('dense' | 'sparse')
-    num_chunks: int              # edge-stream chunks (>=1)
-    chunk_size: int              # edges per chunk (padded)
+    num_chunks: int              # edge-stream chunks (>=1, multiple of pes)
+    chunk_size: int              # edges per chunk (padded, >=1)
     mesh: jax.sharding.Mesh | None   # None → single device
     direction: DirectionPolicy = DirectionPolicy()  # carried from config
 
+    @property
+    def pes(self) -> int:
+        """Resolved PE count (mesh size; 1 when running un-sharded)."""
+        return 1 if self.mesh is None else int(self.mesh.devices.size)
+
     def describe(self) -> str:
         """One-line summary for IR/pass dumps (backend-selection pass)."""
-        pes = 1 if self.mesh is None else int(self.mesh.devices.size)
         return (f"backend={self.backend} pipelines={self.num_chunks} "
-                f"chunk_size={self.chunk_size} pes={pes} "
+                f"chunk_size={self.chunk_size} pes={self.pes} "
                 f"direction={self.direction.describe()}")
 
 
@@ -145,6 +164,12 @@ def push_capacity_tiers(num_rows: int) -> tuple[int, int]:
     per-edge scatter (~90 ns measured on CPU) overtakes the dense stream
     (~15 ns/slot) long before ``r_f·width`` reaches E.  Derived from the
     forward-ELL row count so the tiers track graph shape, not raw E.
+
+    Under a multi-PE plan the translator passes the *largest interval's*
+    row count (``ShardedForwardELL.rows_per_pe_max``): ``shard_map``
+    traces one SPMD program, so the tier shapes are shared mesh-wide,
+    but each PE still switches on its own local ``r_f`` — the per-PE
+    capacity tiers of the sharded engine.
     """
     def p2floor(x: int) -> int:
         return 1 << max(x.bit_length() - 1, 0)
@@ -172,18 +197,26 @@ def plan(cfg: ScheduleConfig, *, num_vertices: int, num_edges: int,
     avg_degree = num_edges / max(num_vertices, 1)
     backend = choose_backend(cfg, num_vertices=num_vertices,
                              num_edges=num_edges, avg_degree=avg_degree)
-    num_chunks = max(1, min(cfg.pipelines, math.ceil(num_edges / 1024)))
-    chunk_size = math.ceil(num_edges / num_chunks)
     mesh = None
+    pes = 1
     if cfg.pes > 1:
         devices = devices if devices is not None else jax.devices()
         if len(devices) < cfg.pes:
             # elastic degrade: fewer PEs than asked — re-plan, don't fail
-            pes = len(devices)
+            pes = max(1, len(devices))
         else:
             pes = cfg.pes
         if pes > 1:
             mesh = make_mesh((pes,), ("pe",), devices=devices[:pes])
+        else:
+            pes = 1
+    # Chunk geometry is final here — the translator must not re-derive it.
+    # Round the chunk count up to a multiple of the resolved PE count so
+    # each PE owns an equal-sized chunk slice, and keep chunk_size >= 1 so
+    # an edgeless graph still stages well-formed (all-PAD) chunk arrays.
+    num_chunks = max(1, min(cfg.pipelines, math.ceil(num_edges / 1024)))
+    num_chunks = -(-num_chunks // pes) * pes
+    chunk_size = max(1, math.ceil(num_edges / num_chunks))
     return SchedulePlan(config=cfg, backend=backend, num_chunks=num_chunks,
                         chunk_size=chunk_size, mesh=mesh,
                         direction=cfg.direction)

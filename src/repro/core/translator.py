@@ -43,6 +43,18 @@ The TPU mapping implemented here:
   picked per superstep from the live row count, and frontiers wider than
   the largest tier fall back to the dense masked sweep, so push never
   costs meaningfully more than pull.
+* **Multi-PE push** — under a ``pes > 1`` plan the push plane shards: the
+  forward ELL splits into per-PE contiguous, degree-balanced row
+  intervals (:func:`~repro.core.graph.shard_forward_ell`), each PE runs
+  interval-local compaction + gather + segment-combine inside
+  ``shard_map``, and the disjoint partial vertex tables combine with the
+  reduce-matched collective — with the exchange routed through the
+  :class:`~repro.core.comm.CommManager` so the run loop records executed
+  transfer stats.  ``message_dtype='int8'`` additionally quantizes
+  *float-add* pull-plane exchanges (the pagerank path) to an int8 wire
+  format (:meth:`CommManager.quantized_psum`); min/max and integer
+  reduces always keep the exact collective, so bfs/sssp/wcc stay
+  bit-exact at any PE count.
 * **Preprocessing cache** — every graph-derived layout (transposed CSR,
   degree buckets, forward ELL, COO) is memoized per graph in
   :mod:`repro.core.preprocess`, and the emitted/AOT-compiled supersteps
@@ -56,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 import jax
 import jax.numpy as jnp
@@ -66,7 +79,7 @@ from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
 from . import graph as G
 from . import preprocess
-from ._jax_compat import pvary, shard_map
+from ._jax_compat import pvary, shard_map, shard_map_unchecked
 from .comm import CommManager
 from .dsl import VertexProgram
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
@@ -79,6 +92,11 @@ __all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
            "translate"]
 
 P = jax.sharding.PartitionSpec
+
+# IR collective name (resolved by the backend-selection pass) → primitive;
+# shared by the pull-plane exchange and the sharded push emitter
+_COLLECTIVES = {"psum": jax.lax.psum, "pmin": jax.lax.pmin,
+                "pmax": jax.lax.pmax}
 
 
 # ---------------------------------------------------------------------------
@@ -110,6 +128,13 @@ class TranslationReport:
     translate_breakdown: dict | None = None
     push_layout: str | None = None  # 'fwd_ell' | 'coo_chunks' (push emitted)
     push_tiers: tuple | None = None  # compaction row capacities (fwd_ell)
+    # chunk geometry actually staged by the sparse module — always equal to
+    # (plan.num_chunks, plan.chunk_size) since the plan owns the rounding
+    staged_chunks: tuple | None = None
+    exchange_plane: str | None = None   # 'pull' | 'push' | None (un-sharded)
+    exchange_quantized: bool = False    # int8 wire format on the exchange
+    push_pe_rows: tuple | None = None   # per-PE forward-ELL interval rows
+    push_pe_edges: tuple | None = None  # per-PE edge counts (balance stats)
 
 
 class CompiledGraphProgram:
@@ -128,7 +153,10 @@ class CompiledGraphProgram:
                  direction: DirectionPolicy | None = None,
                  out_degrees=None, num_vertices: int = 0, num_edges: int = 0,
                  rows_per_vertex=None, push_tiers: tuple | None = None,
-                 loop_cache: dict | None = None):
+                 loop_cache: dict | None = None, push_rf_fn=None,
+                 push_stat_pes: int = 1, comm: CommManager | None = None,
+                 exchange_plane: str | None = None,
+                 collective_bytes_per_superstep: int = 0):
         self._superstep = superstep
         self._push_superstep = push_superstep
         self._init_state = init_state
@@ -142,6 +170,18 @@ class CompiledGraphProgram:
         self._out_degrees = out_degrees
         self._rows_per_vertex = rows_per_vertex   # (V,) fwd-ELL rows, or None
         self._push_tiers = push_tiers             # (small, large), or None
+        # live forward-ELL rows per PE: (active) -> (push_stat_pes,) int32.
+        # The sharded engine supplies its per-PE interval counter; the
+        # single-PE engine derives the scalar form from rows_per_vertex.
+        if push_rf_fn is None and rows_per_vertex is not None \
+                and push_tiers is not None:
+            def push_rf_fn(active, _rpv=rows_per_vertex):
+                return jnp.sum(jnp.where(active, _rpv, 0))[None]
+        self._push_rf_fn = push_rf_fn
+        self._push_stat_pes = push_stat_pes       # rf vector length (static)
+        self._comm = comm
+        self._exchange_plane = exchange_plane     # 'pull' | 'push' | None
+        self._collective_bytes = int(collective_bytes_per_superstep)
         self._num_vertices = num_vertices
         self._num_edges = num_edges
         self.report = report
@@ -175,9 +215,19 @@ class CompiledGraphProgram:
         per-lane freeze guards let :meth:`run_batch` vmap it without
         over-counting iterations on converged lanes.  The jitted function
         maps ``(values, active)`` to ``(values, iters, (push_steps,
-        compacted_push_steps, switches, push_edges_hi, push_edges_lo))``
-        — the pushed-edge counter is split into 16-bit words so its sum
-        never overflows int32 (callers recombine with python ints).
+        compacted_push_steps, switches, push_edges_hi, push_edges_lo,
+        push_live_rows))`` — the pushed-edge counter is split into 16-bit
+        words so its sum never overflows int32 (callers recombine with
+        python ints), and ``push_live_rows`` accumulates the live
+        forward-ELL row counts per PE across push supersteps (a
+        ``(pes,)`` vector under the sharded engine, ``(1,)`` otherwise).
+
+        Frontier occupancy (``m_f``, ``n_f``) is computed on the
+        replicated frontier — numerically identical to psum-ing each PE's
+        partial count, since the per-PE edge intervals partition the edge
+        set — so the direction register agrees on every PE by
+        construction and the staged ``lax.cond`` never diverges across
+        the mesh.
         """
         if mode in self._loop_cache:
             return self._loop_cache[mode]
@@ -185,7 +235,8 @@ class CompiledGraphProgram:
         policy = self._direction
         V, E = self._num_vertices, self._num_edges
         out_deg = self._out_degrees
-        rows_per_v = self._rows_per_vertex
+        rf_fn = self._push_rf_fn
+        n_pe = self._push_stat_pes
         tiers = self._push_tiers
         max_iters = self.max_iters
 
@@ -202,17 +253,22 @@ class CompiledGraphProgram:
             return (jnp.where(prev_dir == 1, stay_push, enter_push)
                     .astype(jnp.int32), m_f)
 
-        def compacted(direction, active):
+        def live_rows(active):
+            # live forward-ELL rows per PE, the quantity the push
+            # superstep's tier/fallback guard switches on (recomputed
+            # there: the superstep's public (values, active) signature
+            # stays, and the O(R) reduce is noise next to the superstep)
+            if mode == "pull" or rf_fn is None:
+                return jnp.zeros((n_pe,), jnp.int32)
+            return rf_fn(active)
+
+        def compacted(direction, rf):
             # did this push superstep fit a compaction tier (vs the dense
-            # fallback)?  r_f = live forward-ELL rows, the same quantity
-            # the push superstep switches on (recomputed there: the
-            # superstep's public (values, active) signature stays, and the
-            # O(V) reduce is noise next to the superstep itself)
-            if mode == "pull" or rows_per_v is None or tiers is None:
+            # fallback)?
+            if mode == "pull" or rf_fn is None or tiers is None:
                 return direction        # pull: always 0; coo_chunks:
                                         # chunk-skip counts as compaction
-            r_f = jnp.sum(jnp.where(active, rows_per_v, 0))
-            return direction * (r_f <= tiers[-1]).astype(jnp.int32)
+            return direction * (jnp.max(rf) <= tiers[-1]).astype(jnp.int32)
 
         def step(direction, values, active):
             if mode == "pull":
@@ -227,14 +283,16 @@ class CompiledGraphProgram:
 
         def body(state):
             values, active, it, direction, pushes, compact, switches, \
-                pe_hi, pe_lo = state
+                pe_hi, pe_lo, pe_rows = state
             alive = jnp.logical_and(jnp.any(active), it < max_iters)
             new_dir, m_f = choose(direction, active)
+            rf = live_rows(active)
             new_values, new_active = step(new_dir, values, active)
             inc = alive.astype(jnp.int32)
             values = jnp.where(alive, new_values, values)
             pushes = pushes + new_dir * inc
-            compact = compact + compacted(new_dir, active) * inc
+            compact = compact + compacted(new_dir, rf) * inc
+            pe_rows = pe_rows + rf * new_dir * inc
             active = jnp.where(alive, new_active, active)
             switches = switches + (new_dir != direction).astype(jnp.int32) * inc
             # only the push part needs a device counter; the pull part is
@@ -248,15 +306,17 @@ class CompiledGraphProgram:
             pe_lo = pe_lo + (m_f & 0xFFFF) * new_dir * inc
             direction = jnp.where(alive, new_dir, direction)
             return values, active, it + inc, direction, pushes, compact, \
-                switches, pe_hi, pe_lo
+                switches, pe_hi, pe_lo, pe_rows
 
         @jax.jit
         def loop(values, active):
             z = jnp.asarray(0, jnp.int32)
-            state = (values, active, z, z, z, z, z, z, z)
+            state = (values, active, z, z, z, z, z, z, z,
+                     jnp.zeros((n_pe,), jnp.int32))
             values, active, iters, _, pushes, compact, switches, \
-                pe_hi, pe_lo = jax.lax.while_loop(cond, body, state)
-            return values, iters, (pushes, compact, switches, pe_hi, pe_lo)
+                pe_hi, pe_lo, pe_rows = jax.lax.while_loop(cond, body, state)
+            return values, iters, (pushes, compact, switches, pe_hi, pe_lo,
+                                   pe_rows)
 
         self._loop_cache[mode] = loop
         return loop
@@ -276,11 +336,26 @@ class CompiledGraphProgram:
         superstep counts as compacted — chunk-granular ``lax.cond``
         skipping is that layout's compaction mechanism, it has no dense
         fallback (check ``report.push_layout`` when comparing engines).
+
+        Under a multi-PE plan the stats additionally record the exchange
+        plane's *executed* traffic — ``exchange_supersteps`` (supersteps
+        that ran a cross-PE collective: every pull superstep on the
+        sparse sharded plan, every compacted push superstep on the dense
+        sharded-push plan — the fallback sweep is replicated and
+        exchanges nothing) and ``exchange_bytes`` — and accumulate them
+        on the translation-time :class:`~repro.core.comm.CommManager`
+        (``comm.stats.collective_bytes_total``), so transfer reports
+        reflect what ran, not just the static estimate.
+        ``push_live_rows_per_pe`` sums each PE's live forward-ELL rows
+        over the run's push supersteps (the per-PE load-balance view of
+        the frontier; a single entry when the push engine is un-sharded).
         """
         values, active = self.init_state(roots=roots, values=values)
-        values, iters, (pushes, compact, switches, pe_hi, pe_lo) = \
+        values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows) = \
             self._run_loop(values, active)
         pull_steps = int(iters) - int(pushes)
+        exchanges = {"pull": pull_steps, "push": int(compact)}.get(
+            self._exchange_plane, 0)
         stats = {
             "push_supersteps": int(pushes),
             "push_compacted_supersteps": int(compact),
@@ -290,7 +365,14 @@ class CompiledGraphProgram:
             # exact: python-int pull part + hi/lo-recombined push part
             "edges_traversed": pull_steps * self._num_edges
             + (int(pe_hi) << 16) + int(pe_lo),
+            "pes": self.report.pes,
+            "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
+            "exchange_supersteps": exchanges,
+            "exchange_bytes": exchanges * self._collective_bytes,
         }
+        if self._comm is not None and self._exchange_plane is not None:
+            self._comm.stats.record_collective(self._collective_bytes,
+                                               exchanges)
         self.last_run_stats = stats
         self.report.run_stats = stats
         return values, iters
@@ -315,6 +397,18 @@ class CompiledGraphProgram:
         ``DirectionPolicy(mode='pull')`` when batched throughput matters
         more than per-lane direction stats — results are bit-identical
         either way.
+
+        Multi-PE programs batch too (the sharded push engine's
+        ``shard_map`` is staged with the replication checker disabled —
+        see :func:`repro.core._jax_compat.shard_map_unchecked` — because
+        jax 0.4.x mis-types vmapped shard_maps).  The stats' per-lane
+        ``exchange_supersteps``/``exchange_bytes`` stay *logical* (the
+        algorithmic cost model, matching sequential runs lane-for-lane),
+        while the comm manager's executed totals record the *physical*
+        batched traffic: under vmap the direction/tier conds become
+        execute-both-branches selects and converged lanes step until the
+        slowest lane finishes, so the exchange runs every batched
+        superstep over every lane's table.
         """
         roots = jnp.asarray(roots)
         loop = self._staged_loop(self._mode)
@@ -323,13 +417,15 @@ class CompiledGraphProgram:
             values, active = self.init_state(roots=root)
             return loop(values, active)
 
-        values, iters, (pushes, compact, switches, pe_hi, pe_lo) = \
+        values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows) = \
             jax.vmap(one)(roots)
         iters_np = np.asarray(iters)
         pushes_np = np.asarray(pushes)
         pulls_np = iters_np - pushes_np
         push_edges = (np.asarray(pe_hi).astype(np.int64) << 16) \
             + np.asarray(pe_lo)
+        exchanges_np = {"pull": pulls_np, "push": np.asarray(compact)}.get(
+            self._exchange_plane, np.zeros_like(pulls_np))
         stats = {
             "batch_size": int(roots.shape[0]),
             "push_supersteps": pushes_np.tolist(),
@@ -340,7 +436,24 @@ class CompiledGraphProgram:
             "direction_switches": np.asarray(switches).tolist(),
             "edges_traversed": (pulls_np.astype(np.int64) * self._num_edges
                                 + push_edges).tolist(),
+            "pes": self.report.pes,
+            "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
+            # per-lane *logical* counts (the algorithmic cost model);
+            # physical accounting differs under vmap — see below
+            "exchange_supersteps": exchanges_np.tolist(),
+            "exchange_bytes": (exchanges_np.astype(np.int64)
+                               * self._collective_bytes).tolist(),
         }
+        if self._comm is not None and self._exchange_plane is not None:
+            # physical traffic: vmap lowers the direction/tier conds to
+            # execute-both-branches selects and converged lanes keep
+            # stepping until the slowest finishes, so the sharded
+            # exchange runs every batched superstep over every lane's
+            # table — that, not the logical per-lane sum, is what the
+            # comm manager's executed totals must record
+            self._comm.stats.record_collective(
+                self._collective_bytes * int(roots.shape[0]),
+                int(iters_np.max()) if iters_np.size else 0)
         self.last_run_stats = stats
         self.report.run_stats = stats
         return values, iters
@@ -400,14 +513,17 @@ def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
 def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
                               reverse_coo: tuple, num_vertices: int,
                               num_edges: int, out_deg,
-                              splan: SchedulePlan, pes_planned: int):
+                              splan: SchedulePlan):
     """Emit the sparse chunk-streamed partial-reduce module.
 
     ``pipelines`` → ``lax.scan`` over edge chunks (bounds the live working
-    set); the chunk count is rounded up to a multiple of the planned PEs so
-    shard slices stay equal-sized.  ``reverse_coo`` is the cached COO of
-    the transposed graph (:meth:`~repro.core.preprocess.GraphLayouts.
-    reverse_coo`).
+    set).  The chunk geometry comes verbatim from the
+    :class:`~repro.core.scheduler.SchedulePlan` — the plan already rounded
+    the chunk count to a multiple of the resolved PEs and guarded the
+    edgeless degenerate, so what this module stages is exactly what
+    ``SchedulePlan.describe()`` reports.  ``reverse_coo`` is the cached
+    COO of the transposed graph
+    (:meth:`~repro.core.preprocess.GraphLayouts.reverse_coo`).
     """
     program = ir.program
     dtype = ir.value_dtype
@@ -420,9 +536,7 @@ def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
     # COO of the reversed graph: edge (u → v) appears as (dst=v, src=u)
     seg_dst, src, wts = reverse_coo            # seg: receiving vertex
     nchunk = splan.num_chunks
-    if pes_planned > 1:       # each PE owns nchunk/pes edge chunks
-        nchunk = -(-nchunk // pes_planned) * pes_planned
-    csize = -(-E // nchunk)
+    csize = splan.chunk_size
     pad = nchunk * csize - E
     PADV = jnp.iinfo(jnp.int32).max
     seg_c = jnp.pad(seg_dst, (0, pad), constant_values=PADV).reshape(nchunk, csize)
@@ -554,18 +668,125 @@ def _emit_push_ell(ir: SuperstepIR, push_op: PushScatterOp,
     return push_superstep, tiers
 
 
+def _emit_push_ell_sharded(ir: SuperstepIR, push_op: PushScatterOp,
+                           sfe: G.ShardedForwardELL, out_deg, apply_fn,
+                           pull_reduce_module, use_pallas: bool, mesh,
+                           xop: ExchangeOp):
+    """Emit the multi-PE frontier-compacted push superstep (``shard_map``).
+
+    The paper's ``pipelines × PEs`` runtime applied to the push plane:
+    each PE owns one contiguous, degree-balanced forward-ELL row interval
+    (:class:`~repro.core.graph.ShardedForwardELL`) and runs the same
+    three-stage engine as the single-PE path — interval-local frontier
+    compaction (row ids stay PE-local), gather/message over the
+    ``(capacity, W)`` block, one segment-combine into a full-width partial
+    vertex table — inside ``shard_map`` over the ``pe`` mesh axis.  The
+    disjoint per-PE partials then combine with the reduce-matched
+    collective (psum/pmin/pmax), after which the table is replicated and
+    the apply runs like the single-PE engine's.
+
+    Capacity tiers are shared across PEs (``shard_map`` traces one SPMD
+    program, so buffer shapes must agree), derived from the *largest*
+    interval's row count; each PE still picks its own tier per superstep
+    from its local live row count — the ``lax.switch`` is collective-free,
+    so PEs may diverge.  The *fallback* decision is global (``max`` of the
+    per-PE live counts, computed on the replicated frontier): a wide
+    frontier routes the whole superstep to the replicated dense masked
+    sweep — the identical pull module, no exchange — so every PE takes the
+    same branch and the collective inside the sharded branch can never
+    deadlock.
+
+    Returns ``(push_superstep, tiers, live_rows_per_pe)`` where the last
+    is the ``(pes,)`` live-row counter the run loop uses for the
+    tier/fallback stat and the per-PE load-balance stats.
+    """
+    dtype = ir.value_dtype
+    V = sfe.num_vertices
+    ident = push_op.reduce.identity
+    gather_fn = push_op.gather.fn
+    gather_module = push_op.gather.module
+    reduce_op = push_op.reduce.op
+    tiers = push_capacity_tiers(sfe.rows_per_pe_max)
+    interpret = jax.default_backend() != "tpu"
+    collective = _COLLECTIVES[xop.collective]
+    rp = sfe.rows_per_pe_max
+
+    def live_rows_per_pe(active):
+        """(pes,) live rows — per-PE partials of the frontier occupancy."""
+        return jnp.sum(active[sfe.row_src] & sfe.row_valid,
+                       axis=1).astype(jnp.int32)
+
+    def pe_partial(rs, dstb, wgtb, valid, values, active):
+        rs, dstb, wgtb, valid = rs[0], dstb[0], wgtb[0], valid[0]
+        live = active[rs] & valid       # interval-local live-row mask
+        r_f = jnp.sum(live.astype(jnp.int32))
+
+        def branch(capacity):
+            def b(values):
+                red, _ = push_ell_kernel.compacted_push_reduce(
+                    rs, dstb, wgtb, live, values, out_deg,
+                    num_rows=rp, capacity=capacity, gather_fn=gather_fn,
+                    reduce=reduce_op, identity=ident, num_vertices=V,
+                    dtype=dtype, gather_module=gather_module,
+                    use_pallas=use_pallas, interpret=interpret,
+                    emit_touched=False)
+                return red
+            return b
+
+        tier = sum((r_f > c).astype(jnp.int32) for c in tiers[:-1])
+        red = jax.lax.switch(tier, [branch(c) for c in tiers], values)
+        # disjoint partials: the reduce-matched collective is exact
+        return collective(red, "pe")
+
+    def sharded_compacted(values, active):
+        # unchecked: 0.4.x's replication checker mis-types this body when
+        # run_batch vmaps the loop (see shard_map_unchecked); the output
+        # is genuinely replicated — the collective runs unconditionally
+        red = shard_map_unchecked(pe_partial, mesh=mesh,
+                                  in_specs=(P("pe"), P("pe"), P("pe"),
+                                            P("pe"), P(), P()),
+                                  out_specs=P())(
+            sfe.row_src, sfe.dst, sfe.weights, sfe.row_valid,
+            values, active)
+        new = apply_fn(values, red)
+        return new, new != values
+
+    def dense_fallback(values, active):
+        # the pull module's masked sweep, replicated (no exchange)
+        red, got = pull_reduce_module(values, active)
+        new = jnp.where(got, apply_fn(values, red), values)
+        return new, new != values
+
+    @jax.jit
+    def push_superstep(values, active):
+        wide = jnp.max(live_rows_per_pe(active)) > tiers[-1]
+        return jax.lax.cond(wide, dense_fallback, sharded_compacted,
+                            values, active)
+
+    return push_superstep, tiers, live_rows_per_pe
+
+
 def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
-                   nchunk: int, mesh):
+                   nchunk: int, mesh, quantized: bool = False):
     """Emit the cross-PE combine around the partial-reduce module.
 
     Each PE owns an edge-chunk slice (paper: edge partitions per PE);
     vertex tables replicate and combine with the reduce-matched collective —
     psum for 'add' is only correct because the edge sets are disjoint per PE.
+
+    ``quantized`` swaps the full-precision psum for
+    :meth:`~repro.core.comm.CommManager.quantized_psum` (int8 wire format
+    with a pmax-agreed shared scale).  The caller only sets it for *float
+    add* combines — min/max and integer-add exchanges keep the exact
+    collective, the bit-exactness escape hatch.
     """
     seg_c, src_c, wts_c = chunk_arrays
     k_per_pe = nchunk // xop.pes
-    collective = {"psum": jax.lax.psum, "pmin": jax.lax.pmin,
-                  "pmax": jax.lax.pmax}[xop.collective]
+    collective = _COLLECTIVES[xop.collective]
+    if quantized:
+        assert xop.collective == "psum", "quantization is add-only"
+        collective = functools.partial(CommManager.quantized_psum,
+                                       pes=xop.pes)
 
     def sharded_reduce(values, active):
         def pe_body(values, active):
@@ -578,8 +799,14 @@ def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
             got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
             return red, got
 
-        return shard_map(pe_body, mesh=mesh,
-                         in_specs=(P(), P()), out_specs=(P(), P()))(
+        # unchecked: the quantized combine ends in all_gather + local sum,
+        # whose replicated-ness 0.4.x's static checker cannot infer (and
+        # the checker also mis-types vmapped shard_maps — see
+        # shard_map_unchecked).  The outputs are genuinely replicated:
+        # every PE computes the same combine of the same gathered parts.
+        return shard_map_unchecked(pe_body, mesh=mesh,
+                                   in_specs=(P(), P()),
+                                   out_specs=(P(), P()))(
             values, active)
 
     return sharded_reduce
@@ -726,8 +953,10 @@ def translate(
     aot_s = time.perf_counter() - t_aot0
 
     tt = time.perf_counter() - t0
+    exchange_plane = staged["exchange_plane"]
     est_collective = comm.estimate_collective_bytes(
-        V, dtype, staged["pes"], quantized=schedule.message_dtype == "int8")
+        V, dtype, staged["pes"] if exchange_plane is not None else 1,
+        quantized=staged["exchange_quantized"])
     report = TranslationReport(
         program=program.name,
         backend=ir.backend,
@@ -750,13 +979,22 @@ def translate(
             "staging_cached": cached},
         push_layout=staged["push_layout"],
         push_tiers=staged["push_tiers"],
+        staged_chunks=staged["chunk_geometry"],
+        exchange_plane=exchange_plane,
+        exchange_quantized=staged["exchange_quantized"],
+        push_pe_rows=staged["push_pe_rows"],
+        push_pe_edges=staged["push_pe_edges"],
     )
     return CompiledGraphProgram(
         superstep, init_state, report, max_iters,
         push_superstep=push_superstep, direction=policy,
         out_degrees=staged["out_degrees"], num_vertices=V,
         num_edges=g.num_edges, rows_per_vertex=staged["rows_per_vertex"],
-        push_tiers=staged["push_tiers"], loop_cache=staged["loop_cache"])
+        push_tiers=staged["push_tiers"], loop_cache=staged["loop_cache"],
+        push_rf_fn=staged["push_rf_fn"],
+        push_stat_pes=staged["push_stat_pes"], comm=comm,
+        exchange_plane=exchange_plane,
+        collective_bytes_per_superstep=est_collective)
 
 
 def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
@@ -773,17 +1011,30 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
     V = g.num_vertices
     out_deg = g.out_degrees.astype(jnp.int32)
 
+    pes = 1 if exchange_op is None else exchange_op.pes
+    # which plane exchanges across PEs (for runtime transfer accounting):
+    # the sparse backend shards the pull sweep, the dense backend shards
+    # the compacted push engine (resolved below), a single PE shards none
+    exchange_plane = None
+    exchange_quantized = False
+    chunk_geometry = None
+
     if fused.kernel == "edge_block":
         reduce_module = _emit_edge_block_reduce(
             ir, fused, lay.reverse_bucketed(), out_deg, schedule, use_pallas)
-        pes = 1
     else:
-        pes = 1 if exchange_op is None else exchange_op.pes
         partial_reduce, chunk_arrays, nchunk = _emit_segment_scan_reduce(
-            ir, fused, lay.reverse_coo(), V, g.num_edges, out_deg, splan, pes)
+            ir, fused, lay.reverse_coo(), V, g.num_edges, out_deg, splan)
+        chunk_geometry = (nchunk, splan.chunk_size)
         if exchange_op is not None:
+            exchange_quantized = (
+                schedule.message_dtype == "int8"
+                and exchange_op.collective == "psum"
+                and jnp.issubdtype(dtype, jnp.floating))
             reduce_module = _emit_exchange(
-                exchange_op, partial_reduce, chunk_arrays, nchunk, splan.mesh)
+                exchange_op, partial_reduce, chunk_arrays, nchunk,
+                splan.mesh, quantized=exchange_quantized)
+            exchange_plane = "pull"
         else:
             reduce_module = partial_reduce
 
@@ -814,17 +1065,38 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
     push_layout = None
     push_tiers = None
     rows_per_vertex = None
+    push_rf_fn = None
+    push_stat_pes = 1
+    push_pe_rows = None
+    push_pe_edges = None
     if push_op is not None:
         push_layout = push_op.layout
         if push_op.layout == "fwd_ell":
             fe = lay.forward_ell(schedule.push_ell_width)
-            push_superstep, push_tiers = _emit_push_ell(
-                ir, push_op, fe, out_deg, apply_fn, reduce_module,
-                use_pallas)
             rows_per_vertex = fe.rows_per_vertex
+            if exchange_op is not None and splan.mesh is not None \
+                    and fe.num_rows >= 1:
+                # multi-PE: shard the push plane over forward-ELL intervals
+                sfe = lay.forward_ell_shards(schedule.push_ell_width, pes)
+                push_superstep, push_tiers, push_rf_fn = \
+                    _emit_push_ell_sharded(
+                        ir, push_op, sfe, out_deg, apply_fn, reduce_module,
+                        use_pallas, splan.mesh, exchange_op)
+                push_stat_pes = pes
+                push_pe_rows = sfe.rows_per_pe
+                push_pe_edges = sfe.edges_per_pe
+                exchange_plane = "push"
+            else:
+                push_superstep, push_tiers = _emit_push_ell(
+                    ir, push_op, fe, out_deg, apply_fn, reduce_module,
+                    use_pallas)
         else:
             push_superstep = make_superstep(
                 _emit_push_scatter(ir, push_op, g, out_deg, splan))
+    if fused.kernel == "edge_block" and exchange_plane != "push":
+        # a dense plan whose push plane didn't shard (edgeless forward
+        # ELL, or no push twin) runs fully replicated — report pes=1
+        pes = 1
 
     def init_state(roots=None, values=None):
         if values is None:
@@ -848,7 +1120,14 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
         "rows_per_vertex": rows_per_vertex,
         "push_tiers": push_tiers,
         "push_layout": push_layout,
+        "push_rf_fn": push_rf_fn,
+        "push_stat_pes": push_stat_pes,
+        "push_pe_rows": push_pe_rows,
+        "push_pe_edges": push_pe_edges,
         "pes": pes,
+        "exchange_plane": exchange_plane,
+        "exchange_quantized": exchange_quantized,
+        "chunk_geometry": chunk_geometry,
         "loop_cache": {},
         "aot_done": False,
         "preprocess_s": preprocess_s,

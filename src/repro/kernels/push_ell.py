@@ -178,10 +178,50 @@ def push_ell_reduce(
     """
     if reduce not in REDUCE_OPS:
         raise ValueError(reduce)
-    identity = jnp.asarray(identity, dtype)
     live = active[row_src]
     if num_rows == 0:
         live = jnp.zeros_like(live)
+    return compacted_push_reduce(
+        row_src, ell_dst, ell_wgt, live, values, degrees,
+        num_rows=num_rows, capacity=capacity, gather_fn=gather_fn,
+        reduce=reduce, identity=identity, num_vertices=num_vertices,
+        dtype=dtype, gather_module=gather_module, use_pallas=use_pallas,
+        interpret=interpret, emit_touched=emit_touched)
+
+
+def compacted_push_reduce(
+    row_src: jax.Array,     # (R_storage,) int32 owner vertex per row
+    ell_dst: jax.Array,     # (R_storage, W) int32 destinations, PAD-padded
+    ell_wgt: jax.Array,     # (R_storage, W) edge weights
+    live: jax.Array,        # (R_storage,) bool: row is live this superstep
+    values: jax.Array,      # (V,) vertex values
+    degrees: jax.Array,     # (V,) out-degrees (gather's third argument)
+    *,
+    num_rows: int,          # rows eligible for selection (<= R_storage)
+    capacity: int,          # compaction buffer size (static)
+    gather_fn: Callable,
+    reduce: str,
+    identity,
+    num_vertices: int,
+    dtype,
+    gather_module: str | None = None,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    emit_touched: bool = False,
+) -> tuple[jax.Array, jax.Array | None]:
+    """Compaction → gather/message → segment-combine over a live-row mask.
+
+    The core of :func:`push_ell_reduce`, split out so the multi-PE engine
+    can hand in a *PE-local* live mask: under ``shard_map`` each PE owns a
+    contiguous row interval padded to a common storage length, and its
+    ``live`` mask is ``active[row_src] & row_valid`` — row ids stay local
+    to the interval (the interval-offset form of compaction), while the
+    destination ids in ``ell_dst`` remain global, so the returned table is
+    this PE's disjoint partial over the full vertex range.
+    """
+    if reduce not in REDUCE_OPS:
+        raise ValueError(reduce)
+    identity = jnp.asarray(identity, dtype)
     sel, ok = compact_rows(live, num_rows, capacity)
     dst_blk = jnp.where(ok[:, None], ell_dst[sel], PAD)   # (cap, W)
     wgt_blk = ell_wgt[sel]

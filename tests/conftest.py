@@ -1,10 +1,22 @@
+import os
 import subprocess
 import sys
 
 import pytest
 
-# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
-# Multi-device behaviour is tested via subprocesses (run_in_subprocess).
+# Force 8 host devices so the multi-PE paths (shard_map over the 'pe'
+# mesh axis: the sparse pull exchange and the sharded forward-ELL push
+# engine) run *in-process* inside the fast suite — no subprocess round
+# trip per test.  Conftest imports before any test module, so this lands
+# before jax initializes its backends.  Single-device tests are
+# unaffected (un-sharded jit commits to device 0); tests that need a
+# genuinely degraded device pool pass explicit `devices=` lists to
+# `scheduler.plan`.  The heavyweight LM mesh tests still use
+# run_in_subprocess (they want 8 devices *and* a scrubbed env).
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_force_host_platform_device_count" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_force_host_platform_device_count=8").strip()
 
 
 def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 300):

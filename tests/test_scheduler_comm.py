@@ -50,10 +50,23 @@ def test_plan_explicit_backend_override_beats_heuristic():
 
 
 def test_plan_elastic_degrade_to_single_device():
-    """pes > available devices degrades instead of failing (CPU: 1 device)."""
-    p = plan(ScheduleConfig(pes=8), num_vertices=10, num_edges=50)
+    """pes > available devices degrades instead of failing."""
+    import jax
+    p = plan(ScheduleConfig(pes=8), num_vertices=10, num_edges=50,
+             devices=jax.devices()[:1])       # simulate a 1-device pool
     assert p.mesh is None          # degraded: single device → no mesh
+    assert p.pes == 1
     assert p.describe().endswith(p.direction.describe())
+
+
+def test_plan_builds_pe_mesh_when_devices_allow():
+    """With forced host devices (conftest), pes>1 resolves to a real mesh."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    p = plan(ScheduleConfig(pes=2), num_vertices=10_000, num_edges=100_000)
+    assert p.mesh is not None and p.pes == 2
+    assert p.num_chunks % 2 == 0   # plan owns the PE rounding
 
 
 def test_plan_for_devices_clamps_pes():
@@ -79,6 +92,52 @@ def test_schedule_config_validation():
         ScheduleConfig(backend="fpga")
     with pytest.raises(TypeError):
         ScheduleConfig(direction="auto")   # must be a DirectionPolicy
+
+
+# ---------------------------------------------------------------------------
+# comm manager: collective-volume estimate + executed-run accounting
+# ---------------------------------------------------------------------------
+
+
+def test_estimate_collective_bytes_ring_formula():
+    """Pin the wire model: ring all-reduce moves 2·(p−1)/p · V per
+    participant — at itemsize bytes/element full-precision, at 1
+    byte/element quantized (quantized_psum's int8 all-to-all + int8
+    all-gather phases execute exactly that), plus two float32 scale
+    scalars through the same ring."""
+    comm = CommManager()
+    assert comm.estimate_collective_bytes(1000, jnp.float32, pes=1) == 0
+    vol = comm.estimate_collective_bytes(1000, jnp.float32, pes=4)
+    assert vol == int(2 * 3 / 4 * 1000 * 4)            # 6000
+    assert comm.stats.collective_bytes_per_superstep == vol
+    q = comm.estimate_collective_bytes(1000, jnp.float32, pes=4,
+                                       quantized=True)
+    assert q == int(2 * 3 / 4 * 1000) + 2 * int(2 * 3 / 4 * 4)  # 1500 + 12
+    assert q < vol / 2                          # ~4x saving for float32
+    # the saving holds at any PE count (the ring volume scales the same
+    # way quantized and not — no gather-of-full-tables blowup)
+    assert comm.estimate_collective_bytes(1000, jnp.float32, pes=16,
+                                          quantized=True) < \
+        comm.estimate_collective_bytes(1000, jnp.float32, pes=16) / 2
+    # int32 payload at pes=2: half the buffer crosses each link twice
+    assert comm.estimate_collective_bytes(64, jnp.int32, pes=2) == \
+        int(2 * 1 / 2 * 64 * 4)
+
+
+def test_estimate_does_not_clobber_run_totals():
+    """Repeated estimates refresh the per-superstep figure only; the
+    executed-run totals accumulate separately via record_collective."""
+    comm = CommManager()
+    comm.estimate_collective_bytes(1000, jnp.float32, pes=4)
+    comm.stats.record_collective(6000, supersteps=3)
+    comm.stats.record_collective(6000, supersteps=2)
+    comm.estimate_collective_bytes(1000, jnp.float32, pes=4)  # re-estimate
+    assert comm.stats.collective_supersteps == 5
+    assert comm.stats.collective_bytes_total == 5 * 6000
+    rep = comm.report()
+    assert rep["collective_bytes_per_superstep"] == 6000
+    assert rep["collective_bytes_total"] == 30000
+    assert rep["collective_supersteps"] == 5
 
 
 # ---------------------------------------------------------------------------

@@ -91,23 +91,22 @@ def test_comm_manager_stats(g):
     assert comm.estimate_collective_bytes(1000, jnp.float32, pes=1) == 0
 
 
-def test_multi_pe_equivalence(subproc):
+def test_multi_pe_equivalence():
     """PE-partitioned supersteps (shard_map + pmin) ≡ single device —
     the paper's PE-scheduling knob, with disjoint edge partitions.
-    Light tier-1 variant (2 PEs, bfs only); the 4-PE bfs+pagerank
-    version runs in the slow suite."""
-    out = subproc("""
-import numpy as np
-from repro.core import graph as G, algorithms as alg
-src, dst = G.rmat_edges(300, 3000, seed=7)
-g = G.from_edge_list(src, dst, num_vertices=300)
-l1, _, _ = alg.bfs(g, root=0, pes=1, backend="sparse")
-l2, _, rep = alg.bfs(g, root=0, pes=2, backend="sparse")
-assert rep.pes == 2
-assert (np.asarray(l1) == np.asarray(l2)).all()
-print("MULTI_PE_OK")
-""", devices=2, timeout=560)
-    assert "MULTI_PE_OK" in out
+    Runs in-process on the conftest's forced host devices; the 4-PE
+    bfs+pagerank version runs in the slow suite."""
+    import jax
+    import numpy as np
+    from repro.core import algorithms as alg
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    src, dst = G.rmat_edges(300, 3000, seed=7)
+    g2 = G.from_edge_list(src, dst, num_vertices=300)
+    l1, _, _ = alg.bfs(g2, root=0, pes=1, backend="sparse")
+    l2, _, rep = alg.bfs(g2, root=0, pes=2, backend="sparse")
+    assert rep.pes == 2
+    assert (np.asarray(l1) == np.asarray(l2)).all()
 
 
 @pytest.mark.slow
