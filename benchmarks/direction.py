@@ -55,6 +55,30 @@ def _time_run(prog, root, repeats=3):
     return best, values, iters
 
 
+def _time_interleaved(progs: dict, root, repeats=5) -> dict:
+    """Best-of-``repeats`` wall per program, *interleaved* round-robin.
+
+    Timing each candidate in its own contiguous block lets multi-ms
+    drift on a shared 2-core box (background compiles, cache state,
+    scheduler phase) land entirely on one candidate and skew ratios by
+    2x; round-robin rounds expose every candidate to the same drift, so
+    min-per-candidate ratios stay meaningful.  One warm-up run each
+    (compile + cache fill) is excluded.
+    """
+    out = {}
+    for name, prog in progs.items():
+        values, _ = prog.run(roots=root)              # warm-up, untimed
+        jax.block_until_ready(values)
+        out[name] = float("inf")
+    for _ in range(repeats):
+        for name, prog in progs.items():
+            t0 = time.perf_counter()
+            values, _ = prog.run(roots=root)
+            jax.block_until_ready(values)
+            out[name] = min(out[name], time.perf_counter() - t0)
+    return out
+
+
 def _time_fn(fn, *args, repeats=5):
     out = fn(*args)
     jax.block_until_ready(out)
@@ -110,22 +134,32 @@ def collect(num_vertices: int = 50_000, num_edges: int = 500_000,
                   "generator": f"rmat(seed={seed})"},
         "modes": {},
     }
-    baseline = None
+    program = dsl.bfs_program(alg.INT_MAX)
     progs = {}
-    push_ell_width = None
+    repeat_s = {}
+    push_ell_width = ScheduleConfig().push_ell_width
     for mode in MODES:
-        program = dsl.bfs_program(alg.INT_MAX)
         cfg = ScheduleConfig(direction=DirectionPolicy(mode=mode))
-        if mode == "push":
-            push_ell_width = cfg.push_ell_width
-        prog = translate(program, g, cfg)
+        progs[mode] = translate(program, g, cfg)
         # repeat translate of identical inputs: preprocessing + staging
         # caches make this milliseconds (the acceptance criterion)
         t0 = time.perf_counter()
         translate(program, g, cfg)
-        translate_repeat_s = time.perf_counter() - t0
-        progs[mode] = prog
-        wall_s, levels, iters = _time_run(prog, root, repeats)
+        repeat_s[mode] = time.perf_counter() - t0
+    # the bitmap-vs-dense pull-plane A/B the verify-script regression
+    # guard pins: the forced block-skipping sweep vs the flat dense sweep
+    # the shipped default resolves to on this (XLA) backend
+    progs["pull_bitmap"] = translate(
+        program, g, ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                   pull_sweep="bitmap"))
+    progs["pull_dense"] = translate(
+        program, g, ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                   pull_sweep="dense"))
+    walls = _time_interleaved(progs, root, repeats)
+    baseline = None
+    for mode in MODES:
+        prog = progs[mode]
+        levels, iters = prog.run(roots=root)
         lv = np.asarray(levels)
         if baseline is None:
             baseline = lv
@@ -133,17 +167,29 @@ def collect(num_vertices: int = 50_000, num_edges: int = 500_000,
             assert np.array_equal(baseline, lv), f"{mode} diverged from pull"
         te = alg.traversed_edges(g, levels)
         out["modes"][mode] = {
-            "wall_s": wall_s,
+            "wall_s": walls[mode],
             "iters": int(iters),
-            "mteps": te / wall_s / 1e6,
+            "mteps": te / walls[mode] / 1e6,
             "translate_time_s": prog.report.translate_time_s,
-            "translate_repeat_s": translate_repeat_s,
+            "translate_repeat_s": repeat_s[mode],
             "translate_breakdown": prog.report.translate_breakdown,
             "backend": prog.report.backend,
             "push_layout": prog.report.push_layout,
+            "pull_sweep": prog.report.pull_sweep,
             **prog.report.run_stats,
         }
     pull, auto = out["modes"]["pull"], out["modes"]["auto"]
+    bstats = progs["pull_bitmap"].last_run_stats
+    out["pull_plane"] = {
+        "default_sweep": out["modes"]["pull"]["pull_sweep"],
+        "dense_wall_s": walls["pull_dense"],
+        "bitmap_wall_s": walls["pull_bitmap"],
+        "wall_ratio_bitmap_vs_dense":
+            walls["pull_bitmap"] / walls["pull_dense"],
+        "blocks_total": progs["pull_bitmap"].report.pull_blocks_total,
+        "blocks_swept": bstats["pull_blocks_swept"],
+        "blocks_skipped": bstats["pull_blocks_skipped"],
+    }
     out["crossover"] = {
         "traversal_reduction_auto_vs_pull":
             pull["edges_traversed"] / max(auto["edges_traversed"], 1),

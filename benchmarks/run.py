@@ -4,9 +4,13 @@ Default mode prints ``name,us_per_call,derived`` CSV rows for the selected
 modules.  ``--json [path]`` runs the direction-optimization graph benchmark
 as a multi-scale sweep (10k/50k/200k-vertex R-MAT, 10x edges each) and
 writes the machine-readable payload — BFS MTEPS and wall time for
-push/pull/auto per scale, edge-traversal / direction-switch / compaction
-counters, translate-time breakdowns (incl. cached repeat), and measured
-per-edge engine costs — to ``BENCH_graph.json`` (CI's perf artifact).
+push/pull/auto per scale, edge-traversal / direction-switch / compaction /
+pull-block-skip counters, the bitmap-vs-dense pull-plane A/B, translate-time
+breakdowns (incl. cached repeat), and measured per-edge engine costs — to
+``BENCH_graph.json`` (CI's perf artifact).  The payload is
+schema-versioned (``schema``/``timestamp``/``commit``) and every ``--json``
+run also appends a compact record to ``reports/graphs/history.jsonl`` so
+the perf trajectory accumulates across PRs instead of being overwritten.
 The 50k/500k acceptance scale keeps its fields at the payload top level.
 
 ``--pes N`` runs the multi-PE scaling sweep of the sharded push engine
@@ -23,7 +27,58 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
 import sys
+import time
+
+BENCH_SCHEMA = 2          # bump when BENCH_graph.json's shape changes
+HISTORY_DIR = os.path.join("reports", "graphs")
+
+
+def _commit() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _stamp(payload: dict) -> dict:
+    """Schema-version the payload so CI consumers can evolve safely."""
+    payload["schema"] = BENCH_SCHEMA
+    payload["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    payload["commit"] = _commit()
+    return payload
+
+
+def _append_history(payload: dict) -> str:
+    """Append a compact per-run record to reports/graphs/history.jsonl.
+
+    ``BENCH_graph.json`` is overwritten every run; the history line keeps
+    the perf trajectory across PRs (one JSON object per line: schema,
+    timestamp, commit, and the headline numbers).
+    """
+    os.makedirs(HISTORY_DIR, exist_ok=True)
+    path = os.path.join(HISTORY_DIR, "history.jsonl")
+    entry = {
+        "schema": payload.get("schema"),
+        "timestamp": payload.get("timestamp"),
+        "commit": payload.get("commit"),
+        "mteps": {m: d["mteps"] for m, d in payload.get("modes", {}).items()},
+        "wall_s": {m: d["wall_s"]
+                   for m, d in payload.get("modes", {}).items()},
+        "speedup_auto_vs_pull":
+            payload.get("crossover", {}).get("speedup_auto_vs_pull"),
+        "traversal_reduction_auto_vs_pull":
+            payload.get("crossover", {}).get(
+                "traversal_reduction_auto_vs_pull"),
+        "pull_plane": payload.get("pull_plane"),
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return path
 
 
 def _run_csv(only: list[str]) -> None:
@@ -47,11 +102,21 @@ def _run_csv(only: list[str]) -> None:
 
 def _run_json(path: str) -> None:
     from . import direction
-    data = direction.collect_sweep()
+    data = _stamp(direction.collect_sweep())
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
+    hist = _append_history(data)
     c = data["crossover"]
-    print(f"wrote {path}")
+    print(f"wrote {path} (schema {data['schema']}, commit {data['commit']}); "
+          f"appended {hist}")
+    p = data.get("pull_plane", {})
+    if p:
+        print(f"  pull plane (default={p['default_sweep']}): "
+              f"bitmap {p['bitmap_wall_s']*1e3:.1f} ms vs "
+              f"dense {p['dense_wall_s']*1e3:.1f} ms "
+              f"({p['wall_ratio_bitmap_vs_dense']:.2f}x), "
+              f"blocks {p['blocks_swept']}/{p['blocks_skipped']} "
+              f"swept/skipped")
     for mode, m in data["modes"].items():
         print(f"  bfs[{mode}] @50k: {m['mteps']:.1f} MTEPS, "
               f"{m['edges_traversed']} edges traversed, "
@@ -74,6 +139,7 @@ def _run_pes(max_pes: int, path: str) -> None:
         with open(path) as f:
             payload = json.load(f)
     payload["pe_sweep"] = data
+    _stamp(payload)
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print(f"merged pe_sweep into {path}")

@@ -37,6 +37,11 @@ class TransferStats:
     host_to_device_bytes: int = 0
     device_to_host_bytes: int = 0
     collective_bytes_per_superstep: int = 0
+    # frontier plane of the sharded pull sweep: bytes one touched-mask
+    # combine ships per participant (packed bitmap words or int8 table —
+    # see CommManager.estimate_frontier_bytes); folded into the run loop's
+    # executed exchange accounting alongside the value-table bytes
+    frontier_bytes_per_superstep: int = 0
     collective_supersteps: int = 0
     collective_bytes_total: int = 0
     placements: int = 0
@@ -170,6 +175,48 @@ class CommManager:
         # all-gather the int8 chunk results back to a full table
         full = jax.lax.all_gather(q2, axis_name).reshape(-1)[:v]
         return full.astype(x.dtype) * (scale2 * scale)
+
+    @staticmethod
+    def bitmap_or(words: jax.Array, axis_name: str, *, pes: int) -> jax.Array:
+        """Cross-PE OR of packed frontier bitmaps (the mask exchange).
+
+        The sharded pull plane must combine each PE's touched mask; the
+        old wire format was an int8 table through ``pmax`` (a ring
+        all-reduce, ``2·(p−1)/p·V`` bytes per participant).  Packed uint32
+        words cannot ride ``pmax`` (``max`` of words is not bitwise OR),
+        so the bitmap ships as an ``all_gather`` of the V/32-word tables —
+        ``(p−1)·V/8`` bytes received per participant — followed by a local
+        OR fold (``pes`` is static, the fold unrolls).  That beats the
+        int8 ring whenever ``(p−1)/8 < 2·(p−1)/p`` ⇔ ``p < 16``: 8× less
+        wire at p=2, ~2× at p=8, break-even at p=16 — the translator keeps
+        the int8 ``pmax`` form at p ≥ 16 (see
+        :func:`repro.core.translator._emit_exchange`).  Bit-exact: OR of
+        packed words equals ``pmax`` of the unpacked mask.
+        """
+        parts = jax.lax.all_gather(words, axis_name)     # (p, V/32)
+        out = parts[0]
+        for i in range(1, pes):
+            out = out | parts[i]
+        return out
+
+    def estimate_frontier_bytes(self, num_vertices: int, pes: int,
+                                packed: bool = True) -> int:
+        """Per-superstep mask-exchange volume per participant.
+
+        ``packed`` → the bitmap ``all_gather`` form: ``(p−1) · ceil(V/32) ·
+        4`` bytes received per participant; otherwise the int8 ``pmax``
+        ring: ``2·(p−1)/p · V``.  Recorded on
+        :attr:`TransferStats.frontier_bytes_per_superstep`; the run loop
+        folds it into the executed exchange totals.
+        """
+        if pes <= 1:
+            vol = 0
+        elif packed:
+            vol = (pes - 1) * (-(-num_vertices // 32)) * 4
+        else:
+            vol = int(2 * (pes - 1) / pes * num_vertices)
+        self.stats.frontier_bytes_per_superstep = vol
+        return vol
 
     def estimate_collective_bytes(self, num_vertices: int, value_dtype,
                                   pes: int, quantized: bool = False) -> int:

@@ -21,7 +21,12 @@ Ops mirror the paper's hardware modules:
   fusion pass when the direction-legality analysis proved push legal,
 * :class:`ApplyOp`         — vertex update,
 * :class:`FrontierUpdateOp`— next-frontier computation,
-* :class:`ExchangeOp`      — cross-PE combine (the comm manager's plane).
+* :class:`ExchangeOp`      — cross-PE combine (the comm manager's plane),
+* :class:`FusedSuperstepOp`— the whole ``FusedGatherReduce → Apply →
+  FrontierUpdate`` triple fused into one emitted stage (inserted by the
+  superstep-fusion pass when the apply is provably elementwise), which
+  also binds the pull plane's data path — the block-skipping
+  bitmap-frontier sweep vs the dense full sweep.
 
 Edge processing carries a *direction*: ``'pull'`` (the canonical lowering —
 every vertex gathers over its in-edges) or ``'both'`` once the
@@ -51,6 +56,7 @@ __all__ = [
     "ApplyOp",
     "FrontierUpdateOp",
     "ExchangeOp",
+    "FusedSuperstepOp",
     "SuperstepIR",
     "lower_program",
 ]
@@ -226,6 +232,57 @@ class ExchangeOp:
         pes = "?" if self.pes is None else self.pes
         coll = self.collective if self.collective is not None else "?"
         return f"Exchange(reduce={self.reduce}, pes={pes}, collective={coll})"
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSuperstepOp:
+    """A whole superstep fused into one emitted stage.
+
+    Produced by the superstep-fusion pass when the apply is provably
+    *elementwise* (probed like module matching): the
+    ``FusedGatherReduce → Apply → FrontierUpdate`` triple collapses so the
+    reduced per-vertex values flow straight into the apply and the
+    change-mask computation inside a single emitted stage — no
+    HBM-shaped ``(V,)`` intermediates crossing stage boundaries.  The
+    member ops keep their full annotations (the translation stage reads
+    them through this wrapper).
+
+    ``pull_sweep`` names the pull plane's data path, bound here because
+    only a fused stage can skip work:
+
+    * ``'bitmap'`` — the block-skipping bitmap-frontier sweep
+      (``kernels/pull_bitmap.py``): a per-superstep touched summary from
+      a compacted forward pass, per-block any-active liveness, compacted
+      live-block gather, scatter-free row→vertex combine.  Requires
+      ``mask_inactive=True`` (skipping relies on inactive sources
+      contributing nothing), a sparse ``'changed'`` frontier (an ``'all'``
+      frontier keeps every block live — nothing to skip), the dense
+      backend (the blocks are the reversed bucketed ELL's), and an
+      un-sharded pull plane (the sparse multi-PE plan streams per-PE COO
+      chunks instead).  *No* reduce restriction: skipping never reorders
+      a surviving row's lane reduction, so even float ``add`` stays
+      bit-exact — a strictly weaker requirement than push legality.
+    * ``'dense'`` — the full masked sweep (every block, every superstep);
+      the decline reason is recorded as an IR note.
+    """
+
+    fused: FusedGatherReduceOp
+    apply: ApplyOp
+    frontier: FrontierUpdateOp
+    pull_sweep: str = "dense"        # 'dense' | 'bitmap'
+    # apply is an identity fixpoint (``apply(x, identity) == x``, probed):
+    # untouched vertices are fixpoints of the fused stage, so the emitted
+    # superstep applies the reduced table everywhere and the touched-mask
+    # plane (its gathers and its any-reduce) is never computed at all
+    touched_free: bool = False
+
+    def render(self) -> str:
+        """One-line textual form used in IR dumps."""
+        return (f"FusedSuperstep(pull_sweep={self.pull_sweep}, "
+                f"touched_free={self.touched_free}, "
+                f"fused={self.fused.render()}, "
+                f"apply={self.apply.render()}, "
+                f"frontier={self.frontier.render()})")
 
 
 IROp = Any  # union of the op dataclasses above (kept informal: plain tags)

@@ -28,7 +28,12 @@ Concrete passes (in :func:`default_pipeline` order):
    Pallas ELL edge-block or sparse segment-scan kernel, inserting the
    push-mode :class:`~repro.core.ir.PushScatterOp` twin when legal;
 6. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
-   ``frontier='all'`` programs so no change mask is emitted.
+   ``frontier='all'`` programs so no change mask is emitted;
+7. :class:`SuperstepFusionPass` — when the apply is provably elementwise
+   (probed), fuse ``FusedGatherReduce → Apply → FrontierUpdate`` into one
+   emitted stage (:class:`~repro.core.ir.FusedSuperstepOp`) and bind the
+   pull plane's data path (block-skipping bitmap sweep vs dense sweep),
+   recording why fusion or the bitmap plane was declined.
 
 Every :meth:`PassPipeline.run` records a per-pass before/after textual dump
 (the "TT"-style report) so the whole pipeline is observable end-to-end;
@@ -45,13 +50,16 @@ import numpy as np
 
 from ..kernels.ref import GATHER_OPS, gather_msg
 from .dsl import reduce_identity
-from .ir import (ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
-                 GatherOp, PushScatterOp, ReduceOp, SuperstepIR)
+from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
+                 FusedSuperstepOp, GatherOp, PushScatterOp, ReduceOp,
+                 SuperstepIR)
 from .scheduler import ScheduleConfig, SchedulePlan
 
 __all__ = [
     "classify_gather",
     "apply_preserves_identity",
+    "apply_is_elementwise",
+    "gather_absorbs_identity",
     "PassContext",
     "Pass",
     "PassRecord",
@@ -63,6 +71,7 @@ __all__ = [
     "BackendSelectionPass",
     "GatherReduceFusionPass",
     "DeadFrontierEliminationPass",
+    "SuperstepFusionPass",
     "default_pipeline",
 ]
 
@@ -143,6 +152,84 @@ def apply_preserves_identity(apply: Callable, reduce: str, dtype) -> bool:
     except Exception:
         return False
     return got.shape == x.shape and np.array_equal(got, np.asarray(x))
+
+
+def gather_absorbs_identity(gather: Callable, reduce: str, dtype) -> bool:
+    """Probe whether the reduce identity absorbs through the gather:
+    ``gather(identity, w, d) == identity`` for any weight/degree.
+
+    When it holds, the dense sweep for a *weight-dependent* gather can
+    pre-mask the vertex-value table once (inactive/PAD sources hold the
+    identity) and evaluate the gather per edge without a separate
+    frontier gather — e.g. SSSP's ``dist + w``: ``inf + w == inf``.
+    Integer identities generally fail (``INT_MAX + 1`` wraps), keeping
+    the classic masked form.  Standard abstract-probing caveats apply
+    (fixed seeds, evidence not proof — like :func:`classify_gather`).
+    """
+    ident = reduce_identity(reduce, dtype)
+    rng = np.random.default_rng(2)
+    w = jnp.asarray(rng.uniform(-8, 8, (16,)),
+                    dtype if jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
+                    else jnp.float32)
+    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
+    x = jnp.full((16,), ident, dtype)
+    try:
+        got = np.asarray(gather(x, w.astype(x.dtype), d))
+    except Exception:
+        return False
+    return got.shape == (16,) and np.array_equal(
+        got, np.asarray(jnp.full((16,), ident, dtype)), equal_nan=True)
+
+
+def apply_is_elementwise(apply: Callable, dtype) -> bool:
+    """Probe whether ``apply`` is elementwise: output ``i`` depends only on
+    ``(old[i], reduced[i])``.
+
+    The legality condition for fusing the whole superstep into one stage
+    (:class:`SuperstepFusionPass`): an elementwise apply commutes with the
+    sweep's row→vertex data movement, so the reduced values can flow into
+    the apply and the change mask without a materialized full-table
+    intermediate between stages.  Probed by the translator's standard
+    abstract-probing idiom (fixed random batch, no syntax analysis):
+
+    * shape preservation — ``apply(x, r).shape == x.shape``;
+    * per-element agreement — evaluating element-by-element reproduces
+      the batch result bit-exactly;
+    * locality — perturbing one input slot changes no *other* output slot.
+
+    Every DSL template apply (``jnp.minimum``, damped sums, overwrite)
+    passes; reductions-over-the-table style applies (e.g. a normalizing
+    ``old / s.sum()``) fail and keep the unfused three-stage emission.
+    Like :func:`classify_gather` this is evidence, not proof — an apply
+    that is non-elementwise only outside the probe batch would slip
+    through; fixed seeds keep the decision deterministic.
+    """
+    rng = np.random.default_rng(1)
+    n = 8
+    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
+        xs = rng.uniform(-8, 8, (2, n))
+    else:
+        xs = rng.integers(-8, 8, (2, n))
+    x = jnp.asarray(xs[0], dtype)
+    r = jnp.asarray(xs[1], dtype)
+    try:
+        full = np.asarray(apply(x, r))
+        if full.shape != (n,):
+            return False
+        per = np.stack([np.asarray(apply(x[i:i + 1], r[i:i + 1]))[0]
+                        for i in range(n)])
+        if not np.array_equal(full, per, equal_nan=True):
+            return False
+        for k in (0, n - 1):
+            x2 = x.at[k].add(jnp.asarray(1, dtype))
+            r2 = r.at[k].add(jnp.asarray(1, dtype))
+            out2 = np.asarray(apply(x2, r2))
+            others = np.arange(n) != k
+            if not np.array_equal(full[others], out2[others], equal_nan=True):
+                return False
+    except Exception:
+        return False
+    return True
 
 
 # ---------------------------------------------------------------------------
@@ -517,6 +604,115 @@ class DeadFrontierEliminationPass(Pass):
         return ir.replace_op(fop, dataclasses.replace(fop, dead=True))
 
 
+class SuperstepFusionPass(Pass):
+    """Fuse ``FusedGatherReduce → Apply → FrontierUpdate`` into one stage
+    (transform), and bind the pull plane's data path.
+
+    When :func:`apply_is_elementwise` proves the apply elementwise, the
+    triple collapses into a :class:`~repro.core.ir.FusedSuperstepOp` so
+    the translation stage emits one fused superstep — reduced values feed
+    the apply and the change mask directly instead of round-tripping
+    through full-table intermediates between separately-staged modules.
+    A non-elementwise apply declines fusion with the reason as an IR note
+    and keeps the three-op emission.
+
+    Fusion is also where the **bitmap-frontier pull sweep** becomes
+    available (only a fused stage can skip blocks: the skip decision
+    needs the frontier, the apply, and the combine in one place).  The
+    fused op's ``pull_sweep`` is bound ``'bitmap'`` iff:
+
+    * the schedule does not pin ``pull_sweep='dense'``;
+    * ``mask_inactive=True`` — a skipped block's sources are inactive, so
+      under masking it contributes exactly the identity (bit-exact skip;
+      without masking every block always contributes);
+    * ``frontier='changed'`` — an ``'all'`` frontier keeps every block
+      live, so the bitmap plane would add summary work and skip nothing;
+    * the backend is dense (the skippable blocks are the reversed
+      bucketed ELL's) and the pull plane is un-sharded (the sparse
+      multi-PE plan streams per-PE COO chunks — its exchange already
+      ships the packed frontier bitmap instead);
+    * the graph has edges (an edgeless sweep has nothing to skip).
+
+    Unlike push legality there is **no reduce restriction**: block
+    skipping preserves each surviving row's lane-reduction order, so
+    float ``add`` programs stay bit-exact on the bitmap plane.
+    """
+
+    name = "superstep-fusion"
+    kind = "transform"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Wrap the triple in a :class:`FusedSuperstepOp` when legal."""
+        fused = ir.find(FusedGatherReduceOp)
+        aop, fop = ir.find(ApplyOp), ir.find(FrontierUpdateOp)
+        if fused is None or aop is None or fop is None \
+                or ir.find(FusedSuperstepOp) is not None:
+            return ir
+        if not apply_is_elementwise(ir.program.apply, ir.value_dtype):
+            return ir.with_note(
+                "superstep fusion declined (apply is not elementwise: "
+                "output slots depend on more than their own inputs)")
+        program = ir.program
+        sweep = "bitmap"
+        reasons = []
+        if ctx.schedule.pull_sweep == "dense":
+            reasons.append("schedule pins pull_sweep='dense'")
+        elif ctx.schedule.pull_sweep == "auto" and not ctx.use_pallas:
+            # measured cost-model resolution (BENCH_graph.json
+            # pull_plane): on the XLA path the flat dense sweep runs at
+            # ~1.2 ns/slot, below the block-skip plane's fixed
+            # bookkeeping (touched pre-pass, liveness, compaction,
+            # expansion — all O(V + R/8) per superstep) plus the
+            # conditional routing tax, so skipping loses 10-25% end to
+            # end on CPU; the Pallas path skips real per-block kernel
+            # work in-grid and keeps the bitmap plane.  Explicit
+            # pull_sweep='bitmap' overrides (tests, benchmarks, other
+            # backends' cost models).
+            reasons.append("pull_sweep='auto' resolves dense on the XLA "
+                           "path (block-skip bookkeeping ≥ the flat dense "
+                           "sweep it saves; measured, see BENCH pull_plane)")
+        if not program.mask_inactive:
+            reasons.append("mask_inactive=False (every block contributes)")
+        if program.frontier != "changed":
+            reasons.append(f"frontier='{program.frontier}' keeps every "
+                           "block live")
+        if not (ir.backend or "").startswith("dense"):
+            reasons.append("sparse backend has no blocked reversed ELL "
+                           "(and its multi-PE plan shards the pull plane)")
+        if ctx.num_edges == 0:
+            reasons.append("edgeless graph")
+        if reasons:
+            sweep = "dense"
+            ir = ir.with_note("pull sweep: dense (" + "; ".join(reasons)
+                              + ")")
+        else:
+            ir = ir.with_note(
+                "pull sweep: bitmap (block-skipping sweep over the "
+                "reversed ELL; skip is bit-exact under identity masking)")
+        # identity-fixpoint applies (min/max templates, integer add) let
+        # the fused stage skip the touched-mask plane entirely: untouched
+        # vertices hold the reduce identity, which the apply fixes
+        touched_free = program.frontier == "changed" \
+            and apply_preserves_identity(program.apply, fused.reduce.op,
+                                         ir.value_dtype)
+        if touched_free:
+            ir = ir.with_note(
+                "superstep: touched-mask elided (apply(x, identity) == x)")
+        step = FusedSuperstepOp(fused=fused, apply=aop, frontier=fop,
+                                pull_sweep=sweep, touched_free=touched_free)
+        ops = []
+        for op in ir.ops:
+            if op is fused:
+                ops.append(step)
+            elif op is aop or op is fop:
+                continue
+            else:
+                ops.append(op)
+        return ir.replace(ops=tuple(ops)).with_note(
+            "superstep fused: gather+reduce -> apply -> frontier emit as "
+            "one stage")
+
+
 def default_pipeline() -> PassPipeline:
     """The translator's standard pass order (see module docstring)."""
     return PassPipeline([
@@ -526,4 +722,5 @@ def default_pipeline() -> PassPipeline:
         BackendSelectionPass(),
         GatherReduceFusionPass(),
         DeadFrontierEliminationPass(),
+        SuperstepFusionPass(),
     ])

@@ -95,6 +95,7 @@ class GraphLayouts:
     _reverse_coo: tuple | None = None
     _forward_ell: dict = dataclasses.field(default_factory=dict)
     _forward_ell_shards: dict = dataclasses.field(default_factory=dict)
+    _pull_plan: dict = dataclasses.field(default_factory=dict)
 
     def _timed(self, name: str, build):
         # record *self* time: a nested build (reverse_bucketed → reverse)
@@ -125,6 +126,21 @@ class GraphLayouts:
             self._reverse_coo = self._timed(
                 "reverse_coo", lambda: G.coo_arrays(self.reverse()))
         return self._reverse_coo
+
+    def pull_plan(self, block_slots: int = 64) -> G.PullBitmapPlan:
+        """Static metadata of the bitmap-frontier pull plane.
+
+        Block structure + scatter-free combine maps over the reversed
+        bucketed ELL (:func:`repro.core.graph.pull_bitmap_plan`), keyed
+        per ``block_slots``.  The per-superstep any-active summaries are
+        *not* cached here — only the frontier-independent layout is.
+        """
+        if block_slots not in self._pull_plan:
+            rb = self.reverse_bucketed()
+            self._pull_plan[block_slots] = self._timed(
+                f"pull_plan_s{block_slots}",
+                lambda: G.pull_bitmap_plan(rb, block_slots=block_slots))
+        return self._pull_plan[block_slots]
 
     def forward_ell(self, width: int = 8) -> G.ForwardELL:
         """Fixed-width forward ELL (the compacted push engine's layout)."""

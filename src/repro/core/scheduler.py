@@ -108,6 +108,20 @@ class ScheduleConfig:
     message_dtype: str | None = None   # e.g. 'int8' → comm quantization
     direction: DirectionPolicy = DirectionPolicy()  # push/pull/auto policy
     push_ell_width: int = 8      # forward-ELL row width (compacted push)
+    # bitmap-frontier pull plane: 'auto' engages the block-skipping sweep
+    # when the superstep-fusion pass proves it legal AND the backend's
+    # cost model favors it — currently the Pallas path only, where the
+    # in-kernel early-out skips real per-block work; on the XLA path the
+    # flat dense sweep is measured faster than the skip bookkeeping, so
+    # 'auto' resolves dense there (IR note records it).  'bitmap' forces
+    # the block-skipping sweep on any backend (tests, benchmarks, A/B);
+    # 'dense' pins the flat full sweep.  All choices are bit-exact.
+    pull_sweep: str = "auto"     # 'auto' | 'bitmap' | 'dense'
+    # edge slots per skippable pull block (multiple of 8).  Small blocks
+    # are what make skipping real on scattered power-law frontiers:
+    # measured block liveness only tracks row liveness below ~8 rows per
+    # block, and the flat width-8 view keeps per-block bookkeeping cheap
+    pull_block_slots: int = 64
 
     def __post_init__(self):
         if self.backend not in ("auto", "dense", "sparse"):
@@ -116,6 +130,11 @@ class ScheduleConfig:
             raise ValueError("pipelines and pes must be >= 1")
         if self.push_ell_width < 1:
             raise ValueError("push_ell_width must be >= 1")
+        if self.pull_sweep not in ("auto", "bitmap", "dense"):
+            raise ValueError(f"unsupported pull_sweep: {self.pull_sweep}")
+        if self.pull_block_slots < 8 or self.pull_block_slots % 8:
+            raise ValueError("pull_block_slots must be a positive "
+                             "multiple of 8")
         if not isinstance(self.direction, DirectionPolicy):
             raise TypeError("direction must be a DirectionPolicy")
 
@@ -148,7 +167,8 @@ class SchedulePlan:
         """One-line summary for IR/pass dumps (backend-selection pass)."""
         return (f"backend={self.backend} pipelines={self.num_chunks} "
                 f"chunk_size={self.chunk_size} pes={self.pes} "
-                f"direction={self.direction.describe()}")
+                f"direction={self.direction.describe()} "
+                f"pull_sweep={self.config.pull_sweep}")
 
 
 def push_capacity_tiers(num_rows: int) -> tuple[int, int]:
@@ -177,6 +197,32 @@ def push_capacity_tiers(num_rows: int) -> tuple[int, int]:
     small = max(256, p2floor(max(num_rows, 1) // 64))
     large = max(2 * small, p2floor(max(num_rows, 1) // 16))
     return small, large
+
+
+# Live-block capacity fractions of the bitmap pull plane: tier t covers a
+# superstep whose frontier out-edge count fits
+# ``ceil(num_blocks · PULL_BLOCK_TIERS[t])``; wider frontiers take the
+# dense full sweep.  Two tiers mirror the push engine's small/large
+# capacity split — compacted cost is proportional to *capacity* (the
+# touched pre-pass scatter and the block gather both pay per buffer slot,
+# live or not), so one wide tier would erase the savings on near-empty
+# frontiers.  The fractions are deliberately tight: the flat dense sweep
+# costs ~2.5 ns/edge while the pre-pass byte-scatter costs ~60 ns/slot, so
+# a compacted superstep only wins when its capacity is a small fraction of
+# the block count — beyond ~1/16 it merely matches the dense sweep it
+# replaces (measured on the 50k/500k R-MAT; see BENCH_graph.json).
+PULL_BLOCK_TIERS = (1 / 64, 1 / 16)
+
+
+def pull_block_capacities(num_blocks: int) -> tuple:
+    """Per-tier live-block capacities for the compacted pull sweep:
+    ``caps[t] = max(1, ceil(num_blocks * PULL_BLOCK_TIERS[t]))``.
+
+    Derived from the flat view's block count so the tiers track graph
+    shape (like :func:`push_capacity_tiers` tracks forward-ELL rows).
+    """
+    return tuple(max(1, math.ceil(num_blocks * f))
+                 for f in PULL_BLOCK_TIERS)
 
 
 def choose_backend(cfg: ScheduleConfig, *, num_vertices: int,

@@ -75,6 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..kernels import pull_bitmap as pull_bitmap_kernel
 from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
 from . import graph as G
@@ -83,10 +84,10 @@ from ._jax_compat import pvary, shard_map, shard_map_unchecked
 from .comm import CommManager
 from .dsl import VertexProgram
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
-                 PushScatterOp, SuperstepIR, lower_program)
+                 FusedSuperstepOp, PushScatterOp, SuperstepIR, lower_program)
 from .passes import PassContext, classify_gather, default_pipeline
 from .scheduler import (DirectionPolicy, ScheduleConfig, SchedulePlan, plan,
-                        push_capacity_tiers)
+                        pull_block_capacities, push_capacity_tiers)
 
 __all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
            "translate"]
@@ -124,7 +125,10 @@ class TranslationReport:
     run_stats: dict | None = None   # last run's direction stats (see run())
     # translate-time itemization: preprocess_s (graph layouts built this
     # call), passes_s, emit_s, aot_s, total_s, staging_cached (True when
-    # the emitted+compiled supersteps came from the staging cache)
+    # the emitted+compiled supersteps came from the staging cache),
+    # preprocess_cached (True when every layout came from the graph-keyed
+    # preprocessing cache — preprocess_s is then 0.0 *because nothing was
+    # built*, not because building was instant)
     translate_breakdown: dict | None = None
     push_layout: str | None = None  # 'fwd_ell' | 'coo_chunks' (push emitted)
     push_tiers: tuple | None = None  # compaction row capacities (fwd_ell)
@@ -135,6 +139,10 @@ class TranslationReport:
     exchange_quantized: bool = False    # int8 wire format on the exchange
     push_pe_rows: tuple | None = None   # per-PE forward-ELL interval rows
     push_pe_edges: tuple | None = None  # per-PE edge counts (balance stats)
+    pull_sweep: str = "dense"           # pull plane: 'bitmap' | 'dense'
+    pull_block_tiers: tuple | None = None  # total live-block caps per tier
+    pull_blocks_total: int | None = None   # skippable blocks (bitmap plane)
+    est_frontier_bytes: int = 0         # mask-exchange bytes per superstep
 
 
 class CompiledGraphProgram:
@@ -192,8 +200,14 @@ class CompiledGraphProgram:
         return self._init_state(roots=roots, values=values)
 
     def superstep(self, values, active):
-        """One pull-direction superstep (the canonical form)."""
-        return self._superstep(values, active)
+        """One pull-direction superstep (the canonical form).
+
+        The staged pull superstep internally also returns its sweep stats
+        (swept edges, swept/skipped blocks — see :meth:`run`); this public
+        form keeps the ``(values, active)`` contract.
+        """
+        new, nxt, _ = self._superstep(values, active)
+        return new, nxt
 
     def superstep_push(self, values, active):
         """One push-direction superstep; ``None``-guard via report.directions."""
@@ -216,11 +230,16 @@ class CompiledGraphProgram:
         over-counting iterations on converged lanes.  The jitted function
         maps ``(values, active)`` to ``(values, iters, (push_steps,
         compacted_push_steps, switches, push_edges_hi, push_edges_lo,
-        push_live_rows))`` — the pushed-edge counter is split into 16-bit
-        words so its sum never overflows int32 (callers recombine with
-        python ints), and ``push_live_rows`` accumulates the live
-        forward-ELL row counts per PE across push supersteps (a
-        ``(pes,)`` vector under the sharded engine, ``(1,)`` otherwise).
+        push_live_rows, pull_edges_hi, pull_edges_lo, pull_blocks_swept,
+        pull_blocks_skipped, pull_cost))`` — both edge counters are split
+        into 16-bit words so their sums never overflow int32 (callers
+        recombine with python ints); ``push_live_rows`` accumulates the
+        live forward-ELL row counts per PE across push supersteps (a
+        ``(pes,)`` vector under the sharded engine, ``(1,)`` otherwise);
+        the pull counters accumulate the bitmap plane's *swept* cost
+        (edges in swept blocks — E on dense full sweeps) and block
+        skip/sweep split; ``pull_cost`` is the measured-pull-cost
+        register the ``'auto'`` policy's m_f-aware alpha reads.
 
         Frontier occupancy (``m_f``, ``n_f``) is computed on the
         replicated frontier — numerically identical to psum-ing each PE's
@@ -240,7 +259,7 @@ class CompiledGraphProgram:
         tiers = self._push_tiers
         max_iters = self.max_iters
 
-        def choose(prev_dir, active):
+        def choose(prev_dir, active, pull_cost):
             # frontier occupancy: n_f vertices, m_f out-edges (≤ E < 2^31)
             m_f = jnp.sum(jnp.where(active, out_deg, 0))
             if mode == "pull":
@@ -248,7 +267,12 @@ class CompiledGraphProgram:
             if mode == "push":
                 return jnp.asarray(1, jnp.int32), m_f
             n_f = jnp.sum(active.astype(jnp.int32))
-            stay_push = m_f.astype(jnp.float32) * policy.alpha < E
+            # m_f-aware alpha: compare push work against the *measured*
+            # pull cost (the last pull superstep's swept edges — the
+            # bitmap plane sweeps far less than E on narrow frontiers),
+            # not a full-E sweep the pull plane may never pay
+            stay_push = m_f.astype(jnp.float32) * policy.alpha \
+                < pull_cost.astype(jnp.float32)
             enter_push = n_f.astype(jnp.float32) * policy.beta < V
             return (jnp.where(prev_dir == 1, stay_push, enter_push)
                     .astype(jnp.int32), m_f)
@@ -270,12 +294,20 @@ class CompiledGraphProgram:
                                         # chunk-skip counts as compaction
             return direction * (jnp.max(rf) <= tiers[-1]).astype(jnp.int32)
 
+        zero_pstats = tuple(jnp.asarray(0, jnp.int32) for _ in range(3))
+
         def step(direction, values, active):
+            # every branch returns (values, active, (swept_edges,
+            # blocks_swept, blocks_skipped)) — push supersteps have no
+            # pull-plane sweep, so their stats are zeros
             if mode == "pull":
                 return pull(values, active)
             if mode == "push":
-                return push(values, active)
-            return jax.lax.cond(direction == 1, push, pull, values, active)
+                return (*push(values, active), zero_pstats)
+            return jax.lax.cond(
+                direction == 1,
+                lambda v, a: (*push(v, a), zero_pstats),
+                pull, values, active)
 
         def cond(state):
             _, active, it, *_ = state
@@ -283,11 +315,12 @@ class CompiledGraphProgram:
 
         def body(state):
             values, active, it, direction, pushes, compact, switches, \
-                pe_hi, pe_lo, pe_rows = state
+                pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, \
+                pull_cost = state
             alive = jnp.logical_and(jnp.any(active), it < max_iters)
-            new_dir, m_f = choose(direction, active)
+            new_dir, m_f = choose(direction, active, pull_cost)
             rf = live_rows(active)
-            new_values, new_active = step(new_dir, values, active)
+            new_values, new_active, pstats = step(new_dir, values, active)
             inc = alive.astype(jnp.int32)
             values = jnp.where(alive, new_values, values)
             pushes = pushes + new_dir * inc
@@ -295,28 +328,41 @@ class CompiledGraphProgram:
             pe_rows = pe_rows + rf * new_dir * inc
             active = jnp.where(alive, new_active, active)
             switches = switches + (new_dir != direction).astype(jnp.int32) * inc
-            # only the push part needs a device counter; the pull part is
-            # pull_supersteps·E, computed exactly host-side in run().  m_f
-            # fits int32 (≤ E) but its *sum* over supersteps may not, so
-            # accumulate split 16-bit words (exact up to ~32k push
-            # supersteps × full frontiers ≈ 2^47 edges); run() recombines
-            # with python ints.
+            # push and pull cost counters are both device-side now: m_f
+            # per push superstep, *swept* edges per pull superstep (the
+            # bitmap plane's real cost — E only on dense full sweeps).
+            # Both fit int32 (≤ E) but their sums may not, so accumulate
+            # split 16-bit words (exact up to ~32k supersteps × full
+            # sweeps ≈ 2^47 edges); run() recombines with python ints.
             m_f = m_f.astype(jnp.int32)
             pe_hi = pe_hi + (m_f >> 16) * new_dir * inc
             pe_lo = pe_lo + (m_f & 0xFFFF) * new_dir * inc
+            swept_e, swept_b, skip_b = pstats
+            pull_inc = (1 - new_dir) * inc
+            pl_hi = pl_hi + (swept_e >> 16) * pull_inc
+            pl_lo = pl_lo + (swept_e & 0xFFFF) * pull_inc
+            bl_swept = bl_swept + swept_b * pull_inc
+            bl_skip = bl_skip + skip_b * pull_inc
+            # measured pull-cost register for the m_f-aware direction
+            # choice: what the pull plane actually swept last time
+            pull_cost = jnp.where(pull_inc == 1, swept_e, pull_cost)
             direction = jnp.where(alive, new_dir, direction)
             return values, active, it + inc, direction, pushes, compact, \
-                switches, pe_hi, pe_lo, pe_rows
+                switches, pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, \
+                bl_skip, pull_cost
 
         @jax.jit
         def loop(values, active):
             z = jnp.asarray(0, jnp.int32)
             state = (values, active, z, z, z, z, z, z, z,
-                     jnp.zeros((n_pe,), jnp.int32))
+                     jnp.zeros((n_pe,), jnp.int32), z, z, z, z,
+                     jnp.asarray(E, jnp.int32))
             values, active, iters, _, pushes, compact, switches, \
-                pe_hi, pe_lo, pe_rows = jax.lax.while_loop(cond, body, state)
+                pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, \
+                pull_cost = jax.lax.while_loop(cond, body, state)
             return values, iters, (pushes, compact, switches, pe_hi, pe_lo,
-                                   pe_rows)
+                                   pe_rows, pl_hi, pl_lo, bl_swept, bl_skip,
+                                   pull_cost)
 
         self._loop_cache[mode] = loop
         return loop
@@ -351,8 +397,12 @@ class CompiledGraphProgram:
         the frontier; a single entry when the push engine is un-sharded).
         """
         values, active = self.init_state(roots=roots, values=values)
-        values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows) = \
-            self._run_loop(values, active)
+        values, iters, stats_dev = self._run_loop(values, active)
+        # one host transfer for the whole counter tuple (a per-scalar
+        # int() would pay a device sync each)
+        iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows,
+                pl_hi, pl_lo, bl_swept, bl_skip, pull_cost) = \
+            jax.device_get((iters, stats_dev))
         pull_steps = int(iters) - int(pushes)
         exchanges = {"pull": pull_steps, "push": int(compact)}.get(
             self._exchange_plane, 0)
@@ -362,11 +412,20 @@ class CompiledGraphProgram:
             "push_fallback_supersteps": int(pushes) - int(compact),
             "pull_supersteps": pull_steps,
             "direction_switches": int(switches),
-            # exact: python-int pull part + hi/lo-recombined push part
-            "edges_traversed": pull_steps * self._num_edges
+            # exact: hi/lo-recombined pull part (swept edges — the real
+            # pull cost model, ≤ pull_supersteps·E) + push part (m_f)
+            "edges_traversed": (int(pl_hi) << 16) + int(pl_lo)
             + (int(pe_hi) << 16) + int(pe_lo),
             "pes": self.report.pes,
             "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
+            # block-skip split of the bitmap pull plane (zeros on the
+            # dense plane, which has no block accounting) — the pull-side
+            # analogue of the push compacted/fallback tier split
+            "pull_blocks_swept": int(bl_swept),
+            "pull_blocks_skipped": int(bl_skip),
+            # the measured-pull-cost register's final value (E until a
+            # pull superstep runs) — what the m_f-aware alpha compared
+            "pull_cost_model": int(pull_cost),
             "exchange_supersteps": exchanges,
             "exchange_bytes": exchanges * self._collective_bytes,
         }
@@ -417,13 +476,16 @@ class CompiledGraphProgram:
             values, active = self.init_state(roots=root)
             return loop(values, active)
 
-        values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows) = \
+        values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows,
+                        pl_hi, pl_lo, bl_swept, bl_skip, _) = \
             jax.vmap(one)(roots)
         iters_np = np.asarray(iters)
         pushes_np = np.asarray(pushes)
         pulls_np = iters_np - pushes_np
         push_edges = (np.asarray(pe_hi).astype(np.int64) << 16) \
             + np.asarray(pe_lo)
+        pull_edges = (np.asarray(pl_hi).astype(np.int64) << 16) \
+            + np.asarray(pl_lo)
         exchanges_np = {"pull": pulls_np, "push": np.asarray(compact)}.get(
             self._exchange_plane, np.zeros_like(pulls_np))
         stats = {
@@ -434,10 +496,11 @@ class CompiledGraphProgram:
                                          - np.asarray(compact)).tolist(),
             "pull_supersteps": pulls_np.tolist(),
             "direction_switches": np.asarray(switches).tolist(),
-            "edges_traversed": (pulls_np.astype(np.int64) * self._num_edges
-                                + push_edges).tolist(),
+            "edges_traversed": (pull_edges + push_edges).tolist(),
             "pes": self.report.pes,
             "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
+            "pull_blocks_swept": np.asarray(bl_swept).tolist(),
+            "pull_blocks_skipped": np.asarray(bl_skip).tolist(),
             # per-lane *logical* counts (the algorithmic cost model);
             # physical accounting differs under vmap — see below
             "exchange_supersteps": exchanges_np.tolist(),
@@ -464,50 +527,329 @@ class CompiledGraphProgram:
 # ---------------------------------------------------------------------------
 
 
-def _emit_edge_block_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
-                            bucket: G.BucketedGraph, out_deg,
-                            schedule: ScheduleConfig, use_pallas: bool):
-    """Emit the dense ELL partial-reduce module (Pallas or jnp reference).
+_ROW_REDUCE = pull_bitmap_kernel._ROW_REDUCE
 
-    ``bucket`` is the graph's cached reverse degree-bucketed ELL
-    (:meth:`repro.core.preprocess.GraphLayouts.reverse_bucketed`) — the
-    translator no longer re-buckets per call.
+
+def _flat_message_mode(fused: FusedGatherReduceOp, program, dtype) -> str:
+    """Pick the flat sweep's per-edge message form (all bit-identical):
+
+    * ``'table'`` — weight-free gather: messages precompute into a
+      ``(V+1,)`` masked table, the sweep is ONE gather per slot;
+    * ``'masked'`` — the reduce identity absorbs through the gather
+      (probed — e.g. SSSP's ``inf + w == inf``): the *value* table is
+      pre-masked once and the gather evaluates per edge with no separate
+      frontier gather;
+    * ``'classic'`` — everything else: per-edge value/degree/frontier
+      gathers with explicit identity masking.
+    """
+    from ..kernels.ref import WEIGHT_FREE_GATHERS
+    from .passes import gather_absorbs_identity
+    if fused.gather.module in WEIGHT_FREE_GATHERS:
+        return "table"
+    if program.mask_inactive and gather_absorbs_identity(
+            fused.gather.fn, fused.reduce.op, dtype):
+        return "masked"
+    return "classic"
+
+
+def _emit_dense_pull_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
+                            pplan: G.PullBitmapPlan, out_deg,
+                            schedule: ScheduleConfig, use_pallas: bool):
+    """Emit the dense pull partial-reduce module over the flat width-8 view.
+
+    The module contract is unchanged — ``(values, active) → (red, got)``
+    per-vertex tables — but the sweep is rebuilt around
+    :class:`~repro.core.graph.PullBitmapPlan`'s flat layout:
+
+    * ONE uniform ``(R8, 8)`` gather + row-reduce instead of eight
+      per-bucket kernels of different widths (~1.2 vs ~5.8 ns/slot
+      measured on XLA:CPU — narrow uniform rows vectorize, tiny buckets
+      stop paying per-op dispatch), with the message form picked by
+      :func:`_flat_message_mode`;
+    * the row→vertex combine is the scatter-free reshape cascade +
+      ``row_map`` gather (``pull_bitmap.subrow_combine``) — the old
+      per-bucket ``at[sid].min/add/max`` paid ~70 ns/row, ≈4 ms of a
+      6.6 ms superstep at 30k rows;
+    * ``got`` is computed on a separate gather chain so XLA DCE deletes
+      the whole touched-mask plane when the fused superstep never reads
+      it (identity-fixpoint applies — see ``FusedSuperstepOp``).
+
+    On the Pallas path the flat arrays stream through the
+    ``edge_block_reduce`` kernel (same VMEM vertex-cache addressing,
+    uniform width 8) and only the combine cascade runs in XLA.
+    Bit-exactness: min/max/integer-add are order-free; float-add keeps a
+    deterministic per-vertex lane order (sub-rows reduce in lane order,
+    then fold in ascending sub-row order), reassociated relative to the
+    pre-flat bucketed sweep within normal reduction noise.
     """
     program = ir.program
     dtype = ir.value_dtype
-    V = bucket.num_vertices
+    V = pplan.num_vertices
     ident = fused.reduce.identity
+    op = fused.reduce.op
     gather_module = fused.gather.module
+    gather_fn = fused.gather.fn
+    mode = _flat_message_mode(fused, program, dtype)
+    rop = _ROW_REDUCE[op]
+
+    def sub_sweep(values, active, dst_blk, wgt_blk):
+        """Per-sub-row (red, any) over a flat edge block (any is lazy).
+
+        ``dst_blk`` uses the *safe* index form (PAD baked to V, the
+        message/live tables' always-identity dummy slot) so the hot loop
+        runs with no per-superstep PAD masking temp.
+        """
+        if mode == "table":
+            msg_t = pull_bitmap_kernel.message_table(
+                values, out_deg, active, gather=gather_module,
+                gather_fn=gather_fn, reduce=op,
+                mask_inactive=program.mask_inactive, dtype=dtype)
+            msg = msg_t[dst_blk]
+        elif mode == "masked":
+            vmask = jnp.concatenate(
+                [jnp.where(active, values, jnp.asarray(ident, dtype)),
+                 jnp.full((1,), ident, dtype)])
+            deg_t = jnp.concatenate([out_deg, jnp.zeros((1,), jnp.int32)])
+            msg = gather_fn(vmask[dst_blk], wgt_blk.astype(dtype),
+                            deg_t[dst_blk]).astype(dtype)
+        else:
+            valid = dst_blk != V
+            safe0 = jnp.where(valid, dst_blk, 0)
+            v = values[safe0]
+            d = out_deg[safe0]
+            msg = gather_fn(v, wgt_blk.astype(v.dtype), d)
+            live = valid
+            if program.mask_inactive:
+                live = live & active[safe0]
+            msg = jnp.where(live, msg.astype(dtype),
+                            jnp.asarray(ident, dtype))
+            return rop(msg, axis=1), jnp.any(live, axis=1)
+
+        # lazy any-chain: a separate uint8 gather XLA can DCE wholesale
+        def sub_any():
+            if program.mask_inactive:
+                live_t = jnp.concatenate([active.astype(jnp.uint8),
+                                          jnp.zeros((1,), jnp.uint8)])
+                return jnp.any(live_t[dst_blk], axis=1)
+            return jnp.any(dst_blk != V, axis=1)
+
+        return rop(msg, axis=1), sub_any()
 
     def partial_reduce(values, active):
-        red_table = jnp.full((V,), ident, dtype)
-        got_table = jnp.zeros((V,), bool)
-        for sid, nbr, wgt in zip(bucket.src_ids, bucket.dst, bucket.weights):
-            if use_pallas:
-                red, got = kops.edge_block_reduce(
-                    nbr, wgt, values, out_deg, active,
-                    gather=gather_module, reduce=fused.reduce.op,
-                    mask_inactive=program.mask_inactive,
-                    block_rows=schedule.block_rows)
-            else:
-                from ..kernels.ref import edge_block_reduce_ref
-                red, got = edge_block_reduce_ref(
-                    nbr, wgt, values, out_deg, active,
-                    gather=gather_module, reduce=fused.reduce.op,
-                    mask_inactive=program.mask_inactive)
-            # scatter-combine: sid may repeat (a hub split across several
-            # max-width ELL rows), so use at[].add/min/max — a .set() of
-            # comb(old, new) silently drops all but one duplicate row
-            if fused.reduce.op == "add":
-                red_table = red_table.at[sid].add(red.astype(dtype))
-            elif fused.reduce.op == "min":
-                red_table = red_table.at[sid].min(red.astype(dtype))
-            else:
-                red_table = red_table.at[sid].max(red.astype(dtype))
-            got_table = got_table.at[sid].max(got)
-        return red_table, got_table
+        if use_pallas:
+            sub_red, sub_anyv = kops.edge_block_reduce(
+                pplan.flat_dst, pplan.flat_wgt, values, out_deg, active,
+                gather=gather_module, reduce=op,
+                mask_inactive=program.mask_inactive,
+                block_rows=schedule.block_rows)
+        else:
+            sub_red, sub_anyv = sub_sweep(values, active,
+                                          pplan.flat_dst_safe,
+                                          pplan.flat_wgt)
+        red = pull_bitmap_kernel.subrow_combine(sub_red, pplan, ident, op,
+                                                dtype)
+        got = pull_bitmap_kernel.subrow_combine(
+            sub_anyv.astype(jnp.int8), pplan, 0, "max", jnp.int8) != 0
+        return red, got
 
-    return partial_reduce
+    return partial_reduce, sub_sweep
+
+
+def _emit_pull_bitmap(ir: SuperstepIR, fstep: FusedSuperstepOp,
+                      pplan: G.PullBitmapPlan, fe: G.ForwardELL, out_deg,
+                      reduce_module, sub_sweep, use_pallas: bool,
+                      num_edges: int, schedule: ScheduleConfig):
+    """Emit the fused bitmap-frontier pull superstep (block-skipping sweep).
+
+    The fused stage the superstep-fusion pass legalized: one jitted
+    function carries the whole superstep — touched summary, block
+    skipping, gathered sweep, apply, frontier — and returns
+    ``(new_values, next_active, (swept_edges, blocks_swept,
+    blocks_skipped))`` so the run loop can account the *real* pull cost
+    instead of assuming a full-E sweep.
+
+    Structure per superstep (all branches bit-exact, like the push tiers):
+
+    * ``r_f`` (live forward-ELL rows) gates the whole plane: beyond the
+      largest pre-pass capacity tier the superstep runs the dense full
+      sweep directly — the touched pre-pass itself costs O(capacity·W)
+      scatter, which a wide frontier would waste (stats then report all
+      blocks swept, ``swept_edges = E``).
+    * narrow frontiers build the **touched table** (compacted forward
+      scatter of frontier bits, capacity tier picked from ``r_f`` exactly
+      like the push engine), take exact per-block liveness over the flat
+      view's uniform blocks, and either compact live block ids into a
+      capacity tier (:data:`~repro.core.scheduler.PULL_BLOCK_TIERS`
+      fractions of the block count, XLA path — the cumsum+searchsorted
+      idiom on the packed liveness bitmap) and gather just those blocks,
+      or run the whole Pallas grid with the per-block early-out
+      (``edge_block_reduce(block_live=...)``, TPU path).  Both reduce
+      swept sub-rows densely and assemble the table through the
+      scatter-free combine cascade.
+    * the touched table doubles as the ``got`` mask (bit-identical to the
+      dense module's: both mean "some live in-edge"), and identity-
+      fixpoint applies (``fstep.touched_free``) skip the mask entirely.
+    """
+    fused = fstep.fused
+    apply_fn = fstep.apply.fn
+    dtype = ir.value_dtype
+    V = pplan.num_vertices
+    ident = fused.reduce.identity
+    op = fused.reduce.op
+    caps = pull_block_capacities(pplan.num_blocks)
+    b_total = pplan.num_blocks
+    br = pplan.block_rows
+    r8p = pplan.num_subrows
+
+    def finish(values, red, got, swept_e, swept_b):
+        if fstep.touched_free:
+            new = apply_fn(values, red)       # untouched are fixpoints
+        else:
+            new = jnp.where(got, apply_fn(values, red), values)
+        nxt = new != values
+        return new, nxt, (swept_e, swept_b,
+                          jnp.asarray(b_total, jnp.int32) - swept_b)
+
+    def sweep_gathered(cap, touched, live, values, active):
+        """XLA path: compact live block ids, gather their sub-rows."""
+        nb = b_total
+        selb, okb = G.bitmap_select(G.pack_bits(live), cap)
+        rows = (selb[:, None] * br
+                + jnp.arange(br, dtype=jnp.int32)[None, :]).reshape(-1)
+        okr = jnp.repeat(okb, br)
+        dst_blk = jnp.where(okr[:, None], pplan.flat_dst_safe[rows], V)
+        sub, _ = sub_sweep(values, active, dst_blk, pplan.flat_wgt[rows])
+        # expand back to the full sub-row space GATHER-side: a tiny
+        # inverse-map scatter (cap entries) + two cheap gathers, instead
+        # of scatter-setting cap·block_rows sub-results (~60 ns/el — it
+        # dominated the whole compacted superstep at the large tier)
+        inv = jnp.full((nb + 1,), cap, jnp.int32).at[
+            jnp.where(okb, selb, nb)].set(
+                jnp.where(okb, jnp.arange(cap, dtype=jnp.int32), cap))
+        buffer = jnp.concatenate([sub.astype(dtype),
+                                  jnp.full((br,), ident, dtype)])
+        sub_idx = jnp.arange(r8p, dtype=jnp.int32)
+        slot = inv[sub_idx // br]              # cap → the identity tail
+        sub_full = buffer[slot * br + sub_idx % br]
+        return pull_bitmap_kernel.subrow_combine(sub_full, pplan,
+                                                 ident, op, dtype)
+
+    def sweep_pallas(touched, live, values, active):
+        """Pallas path: full grid, per-block in-kernel early-out.
+
+        Skipping happens at the Pallas grid's ``schedule.block_rows``
+        granularity (coarser than the plan's blocks); stats still account
+        at plan-block granularity, conservatively rounded up to the grid
+        blocks that actually ran — the two paths are bit-exact in results
+        but may legitimately differ in their skip counts.
+        """
+        t8 = touched[pplan.owner8] != 0
+        grid_br = schedule.block_rows
+        pad = (-r8p) % grid_br
+        grid_live = jnp.pad(t8, (0, pad)).reshape(-1, grid_br).any(axis=1)
+        sub_red, _ = kops.edge_block_reduce(
+            pplan.flat_dst, pplan.flat_wgt, values, out_deg, active,
+            gather=fused.gather.module, reduce=op, mask_inactive=True,
+            block_rows=grid_br, block_live=grid_live)
+        red = pull_bitmap_kernel.subrow_combine(sub_red, pplan, ident, op,
+                                                dtype)
+        if grid_br % br == 0:
+            fine_live = jnp.repeat(grid_live, grid_br // br)[:b_total]
+        else:    # odd grid: account conservatively at fine granularity
+            fine_live = live
+        return red, fine_live
+
+    def narrow(cap):
+        """One compacted tier: pre-pass + block skip + sweep.
+
+        ``cap`` (static) sizes the pre-pass row buffer soundly: on this
+        branch ``m_f ≤ cap`` and the live forward-ELL row count
+        ``r_f = Σ ceil(deg/W) ≤ m_f``, so one m_f comparison routes the
+        whole superstep and no nested capacity conditional is needed for
+        the pre-pass (XLA:CPU conditionals carry real per-superstep
+        overhead, measured ~0.3 ms each).
+
+        The *live-block* count has no such m_f bound — touched hubs span
+        ``ceil(in_deg/block_slots)`` blocks each, so a handful of frontier
+        edges can light hundreds of blocks (measured: m_f=57 lights ~430
+        of 12k blocks on the 50k R-MAT, hub in-neighborhoods).  The block
+        select capacity is therefore 4× the routing threshold (gather
+        cost stays proportional to capacity, still far under the dense
+        sweep), and the XLA gathered sweep keeps one safety conditional
+        on the exact count (falling back to the dense sweep,
+        bit-identical); the Pallas early-out grid has no capacity to
+        overflow and needs no guard.
+        """
+        block_cap = min(4 * cap, b_total)
+
+        def f(values, active):
+            touched = kops.touched_frontier(
+                fe.row_src, fe.dst, active, num_rows=fe.num_rows,
+                capacity=cap, num_vertices=V)
+            live = pull_bitmap_kernel.block_liveness(touched, pplan.owner8,
+                                                     br)
+            got = touched[:V] != 0
+
+            if use_pallas:
+                red, fine_live = sweep_pallas(touched, live, values,
+                                              active)
+                swept_e = jnp.sum(jnp.where(fine_live, pplan.block_edges,
+                                            0))
+                return finish(values, red, got, swept_e,
+                              jnp.sum(fine_live.astype(jnp.int32)))
+
+            def compacted(values, active):
+                red = sweep_gathered(block_cap, touched, live, values,
+                                     active)
+                swept_e = jnp.sum(jnp.where(live, pplan.block_edges, 0))
+                return finish(values, red, got, swept_e,
+                              jnp.sum(live.astype(jnp.int32)))
+
+            def overflow(values, active):
+                red, got_d = reduce_module(values, active)
+                return finish(values, red, got_d,
+                              jnp.asarray(num_edges, jnp.int32),
+                              jnp.asarray(b_total, jnp.int32))
+
+            cnt = jnp.sum(live.astype(jnp.int32))
+            return jax.lax.cond(cnt <= block_cap, compacted, overflow,
+                                values, active)
+        return f
+
+    def wide(values, active):
+        red, got = reduce_module(values, active)
+        return finish(values, red, got, jnp.asarray(num_edges, jnp.int32),
+                      jnp.asarray(b_total, jnp.int32))
+
+    @jax.jit
+    def pull_superstep(values, active):
+        # single-switch routing on m_f alone: the frontier's out-edge
+        # count bounds every dynamic size in a compacted superstep (live
+        # forward-ELL rows, touched vertices, live blocks), so the tier
+        # whose capacity covers m_f is guaranteed sufficient — and a
+        # frontier too wide for the largest tier takes the dense sweep
+        # without ever paying the pre-pass
+        m_f = jnp.sum(jnp.where(active, out_deg, 0))
+        tier = (m_f > caps[0]).astype(jnp.int32) \
+            + (m_f > caps[1]).astype(jnp.int32)
+        return jax.lax.switch(tier, [narrow(caps[0]), narrow(caps[1]),
+                                     wide], values, active)
+
+    return pull_superstep, caps
+
+
+def _wrap_superstep_stats(superstep, num_edges: int):
+    """Lift a ``(values, active) → (values, active)`` superstep to the run
+    loop's stats-carrying contract: non-bitmap pull planes sweep all E
+    edges every superstep and have no block accounting (zeros)."""
+    z = jnp.asarray(0, jnp.int32)
+    e = jnp.asarray(num_edges, jnp.int32)
+
+    def wrapped(values, active):
+        new, nxt = superstep(values, active)
+        return new, nxt, (e, z, z)
+
+    return wrapped
 
 
 def _emit_segment_scan_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
@@ -652,9 +994,11 @@ def _emit_push_ell(ir: SuperstepIR, push_op: PushScatterOp,
 
     def dense_fallback(values, active):
         # the pull module's masked sweep (bit-identical reduce); the
-        # touched mask is free here, so keep pull's take-if-touched form
-        red, got = pull_reduce_module(values, active)
-        new = jnp.where(got, apply_fn(values, red), values)
+        # fwd_ell layout already guarantees an identity-fixpoint apply,
+        # so applying everywhere matches take-if-touched bit-for-bit and
+        # the unused `got` chain is dead code XLA deletes
+        red, _ = pull_reduce_module(values, active)
+        new = apply_fn(values, red)
         return new, new != values
 
     branches = [compacted_branch(c) for c in tiers] + [dense_fallback]
@@ -752,9 +1096,11 @@ def _emit_push_ell_sharded(ir: SuperstepIR, push_op: PushScatterOp,
         return new, new != values
 
     def dense_fallback(values, active):
-        # the pull module's masked sweep, replicated (no exchange)
-        red, got = pull_reduce_module(values, active)
-        new = jnp.where(got, apply_fn(values, red), values)
+        # the pull module's masked sweep, replicated (no exchange); the
+        # identity-fixpoint apply lets it skip the touched mask (as in
+        # the single-PE engine)
+        red, _ = pull_reduce_module(values, active)
+        new = apply_fn(values, red)
         return new, new != values
 
     @jax.jit
@@ -767,7 +1113,8 @@ def _emit_push_ell_sharded(ir: SuperstepIR, push_op: PushScatterOp,
 
 
 def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
-                   nchunk: int, mesh, quantized: bool = False):
+                   nchunk: int, mesh, quantized: bool = False,
+                   num_vertices: int = 0):
     """Emit the cross-PE combine around the partial-reduce module.
 
     Each PE owns an edge-chunk slice (paper: edge partitions per PE);
@@ -779,10 +1126,19 @@ def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
     with a pmax-agreed shared scale).  The caller only sets it for *float
     add* combines — min/max and integer-add exchanges keep the exact
     collective, the bit-exactness escape hatch.
+
+    The frontier half of the exchange (the touched mask) ships as a
+    **packed bitmap** (V/32 uint32 words, OR-combined via
+    :meth:`~repro.core.comm.CommManager.bitmap_or`) when ``pes < 16`` —
+    V/8 bytes per table instead of the int8 ``pmax`` ring's V bytes, an
+    8× wire reduction at p=2 that decays to break-even at p=16, where the
+    int8 ring form is kept.  Both forms are bit-exact (OR of packed words
+    ≡ pmax of the unpacked mask).
     """
     seg_c, src_c, wts_c = chunk_arrays
     k_per_pe = nchunk // xop.pes
     collective = _COLLECTIVES[xop.collective]
+    pack_mask = xop.pes < 16
     if quantized:
         assert xop.collective == "psum", "quantization is add-only"
         collective = functools.partial(CommManager.quantized_psum,
@@ -796,7 +1152,12 @@ def _emit_exchange(xop: ExchangeOp, partial_reduce, chunk_arrays,
                 for c in (seg_c, src_c, wts_c))
             red, got = partial_reduce(values, active, chunks)
             red = collective(red, "pe")
-            got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
+            if pack_mask:
+                words = CommManager.bitmap_or(G.pack_bits(got), "pe",
+                                              pes=xop.pes)
+                got = G.unpack_bits(words, num_vertices)
+            else:
+                got = jax.lax.pmax(got.astype(jnp.int8), "pe") != 0
             return red, got
 
         # unchecked: the quantized combine ends in all_gather + local sum,
@@ -903,9 +1264,14 @@ def translate(
         lower_program(program), ctx, dump=dump_passes)
     passes_s = time.perf_counter() - t_passes0
 
-    fused = ir.find(FusedGatherReduceOp)
-    apply_op = ir.find(ApplyOp)
-    frontier_op = ir.find(FrontierUpdateOp)
+    fstep = ir.find(FusedSuperstepOp)
+    if fstep is not None:
+        fused, apply_op, frontier_op = fstep.fused, fstep.apply, \
+            fstep.frontier
+    else:
+        fused = ir.find(FusedGatherReduceOp)
+        apply_op = ir.find(ApplyOp)
+        frontier_op = ir.find(FrontierUpdateOp)
     exchange_op = ir.find(ExchangeOp)
     assert fused is not None and apply_op is not None \
         and frontier_op is not None, "pass pipeline left the IR incomplete"
@@ -924,7 +1290,7 @@ def translate(
     else:
         lay = preprocess.layouts_for(g)
         staged = _stage(program, ir, g, lay, schedule, splan, use_pallas,
-                        fused, apply_op, frontier_op, exchange_op,
+                        fstep, fused, apply_op, frontier_op, exchange_op,
                         push_op if policy.mode != "pull" else None)
         preprocess_s = staged.pop("preprocess_s")
         emit_s = staged.pop("emit_s")
@@ -957,6 +1323,11 @@ def translate(
     est_collective = comm.estimate_collective_bytes(
         V, dtype, staged["pes"] if exchange_plane is not None else 1,
         quantized=staged["exchange_quantized"])
+    # the sharded pull plane additionally ships the touched mask each
+    # superstep — as a packed bitmap below 16 PEs (V/8 bytes per table)
+    est_frontier = comm.estimate_frontier_bytes(
+        V, staged["pes"] if exchange_plane == "pull" else 1,
+        packed=staged["pes"] < 16)
     report = TranslationReport(
         program=program.name,
         backend=ir.backend,
@@ -968,6 +1339,7 @@ def translate(
         est_flops_per_superstep=2.0 * g.num_edges,
         est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
         est_collective_bytes=est_collective,
+        est_frontier_bytes=est_frontier,
         pass_report=pipeline_report.render() if dump_passes else None,
         ir_dump=ir.dump(),
         direction_policy=policy.describe(),
@@ -976,7 +1348,8 @@ def translate(
         translate_breakdown={
             "preprocess_s": preprocess_s, "passes_s": passes_s,
             "emit_s": emit_s, "aot_s": aot_s, "total_s": tt,
-            "staging_cached": cached},
+            "staging_cached": cached,
+            "preprocess_cached": staged["preprocess_cached"] or cached},
         push_layout=staged["push_layout"],
         push_tiers=staged["push_tiers"],
         staged_chunks=staged["chunk_geometry"],
@@ -984,6 +1357,9 @@ def translate(
         exchange_quantized=staged["exchange_quantized"],
         push_pe_rows=staged["push_pe_rows"],
         push_pe_edges=staged["push_pe_edges"],
+        pull_sweep=staged["pull_sweep"],
+        pull_block_tiers=staged["pull_block_tiers"],
+        pull_blocks_total=staged["pull_blocks_total"],
     )
     return CompiledGraphProgram(
         superstep, init_state, report, max_iters,
@@ -994,10 +1370,10 @@ def translate(
         push_rf_fn=staged["push_rf_fn"],
         push_stat_pes=staged["push_stat_pes"], comm=comm,
         exchange_plane=exchange_plane,
-        collective_bytes_per_superstep=est_collective)
+        collective_bytes_per_superstep=est_collective + est_frontier)
 
 
-def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
+def _stage(program, ir, g, lay, schedule, splan, use_pallas, fstep, fused,
            apply_op, frontier_op, exchange_op, push_op):
     """Stage 3 proper: walk the optimized IR, emit the jitted supersteps.
 
@@ -1018,10 +1394,13 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
     exchange_plane = None
     exchange_quantized = False
     chunk_geometry = None
+    pplan = None
 
+    sub_sweep = None
     if fused.kernel == "edge_block":
-        reduce_module = _emit_edge_block_reduce(
-            ir, fused, lay.reverse_bucketed(), out_deg, schedule, use_pallas)
+        pplan = lay.pull_plan(schedule.pull_block_slots)
+        reduce_module, sub_sweep = _emit_dense_pull_reduce(
+            ir, fused, pplan, out_deg, schedule, use_pallas)
     else:
         partial_reduce, chunk_arrays, nchunk = _emit_segment_scan_reduce(
             ir, fused, lay.reverse_coo(), V, g.num_edges, out_deg, splan)
@@ -1033,7 +1412,7 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
                 and jnp.issubdtype(dtype, jnp.floating))
             reduce_module = _emit_exchange(
                 exchange_op, partial_reduce, chunk_arrays, nchunk,
-                splan.mesh, quantized=exchange_quantized)
+                splan.mesh, quantized=exchange_quantized, num_vertices=V)
             exchange_plane = "pull"
         else:
             reduce_module = partial_reduce
@@ -1041,6 +1420,7 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
     # ---- superstep = Receive/Reduce (module) + Apply + frontier ---------
     apply_fn = apply_op.fn
     frontier_dead = frontier_op.dead
+    touched_free = fstep.touched_free if fstep is not None else False
 
     def make_superstep(module):
         @jax.jit
@@ -1050,6 +1430,13 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
             if frontier_dead:
                 # frontier='all': every vertex stays active, no change mask
                 return new, jnp.ones_like(active)
+            if touched_free and frontier_op.mode == "changed":
+                # fused stage with an identity-fixpoint apply: untouched
+                # vertices hold the reduce identity, which the apply
+                # fixes — `got` is never read, so its whole gather chain
+                # is dead code XLA deletes (the touched-mask elision)
+                changed = new != values
+                return new, changed
             take = got if frontier_op.mode == "changed" else jnp.ones_like(got)
             new = jnp.where(take, new, values)
             changed = new != values
@@ -1058,7 +1445,20 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
             return new, next_active
         return superstep
 
-    superstep = make_superstep(reduce_module)
+    # ---- pull plane: bitmap block-skipping sweep when the fusion pass
+    # legalized it, otherwise the (structurally fused) dense sweep -------
+    pull_sweep = fstep.pull_sweep if fstep is not None else "dense"
+    pull_block_tiers = None
+    pull_blocks_total = None
+    if pull_sweep == "bitmap":
+        fe_pull = lay.forward_ell(schedule.push_ell_width)
+        superstep, pull_block_tiers = _emit_pull_bitmap(
+            ir, fstep, pplan, fe_pull, out_deg, reduce_module, sub_sweep,
+            use_pallas, g.num_edges, schedule)
+        pull_blocks_total = pplan.num_blocks
+    else:
+        superstep = _wrap_superstep_stats(make_superstep(reduce_module),
+                                          g.num_edges)
 
     # ---- push direction: emit the twin superstep when legal + wanted ----
     push_superstep = None
@@ -1098,16 +1498,24 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
         # ELL, or no push twin) runs fully replicated — report pes=1
         pes = 1
 
+    # the default init values are program-static: materialize once at
+    # staging time and stage the rooted form (the eager per-run scatter
+    # chain cost ~1 ms of every run() call)
+    base_values = program.materialize_init(V)
+
+    @jax.jit
+    def _rooted(values, roots):
+        root_val = jnp.asarray(0, dtype)
+        values = values.at[roots].set(root_val)
+        active = jnp.zeros((V,), bool).at[roots].set(True)
+        return values, active
+
     def init_state(roots=None, values=None):
         if values is None:
-            values = program.materialize_init(V)
+            values = base_values
         if roots is not None:
-            root_val = jnp.asarray(0, dtype)
-            values = values.at[jnp.asarray(roots)].set(root_val)
-            active = jnp.zeros((V,), bool).at[jnp.asarray(roots)].set(True)
-        else:
-            active = jnp.ones((V,), bool)
-        return values, active
+            return _rooted(values, jnp.asarray(roots))
+        return values, jnp.ones((V,), bool)
 
     emit_s = time.perf_counter() - t_emit0
     preprocess_s = sum(lay.build_times_s.values()) - pre_before
@@ -1128,8 +1536,15 @@ def _stage(program, ir, g, lay, schedule, splan, use_pallas, fused,
         "exchange_plane": exchange_plane,
         "exchange_quantized": exchange_quantized,
         "chunk_geometry": chunk_geometry,
+        "pull_sweep": pull_sweep,
+        "pull_block_tiers": pull_block_tiers,
+        "pull_blocks_total": pull_blocks_total,
         "loop_cache": {},
         "aot_done": False,
         "preprocess_s": preprocess_s,
+        # every layout this program needed came from the graph-keyed
+        # cache: 0.0 preprocess seconds means "reused", not "instant"
+        "preprocess_cached": preprocess_s == 0.0
+        and bool(lay.build_times_s),
         "emit_s": emit_s - preprocess_s,
     }

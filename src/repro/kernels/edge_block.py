@@ -55,6 +55,33 @@ def _kernel(nbr_ref, wgt_ref, val_ref, deg_ref, act_ref,
     any_ref[...] = jnp.any(live, axis=1).astype(jnp.int8)
 
 
+def _kernel_skip(live_ref, nbr_ref, wgt_ref, val_ref, deg_ref, act_ref,
+                 out_ref, any_ref, *, gather: str, reduce: str,
+                 mask_inactive: bool):
+    """The per-block early-out variant: a dead edge block never gathers.
+
+    ``live_ref`` holds this grid block's precomputed liveness flag (the
+    bitmap pull plane's any-active summary).  A dead block writes the
+    reduce identity and an empty touched mask without touching the vertex
+    cache — the paper's "block never enters the pipeline", expressed as
+    predicated execution (both branches write, so the outputs are always
+    defined).
+    """
+    live = live_ref[0] != 0
+
+    @pl.when(live)
+    def _():
+        _kernel(nbr_ref, wgt_ref, val_ref, deg_ref, act_ref, out_ref,
+                any_ref, gather=gather, reduce=reduce,
+                mask_inactive=mask_inactive)
+
+    @pl.when(jnp.logical_not(live))
+    def _():
+        ident = jnp.asarray(_identity(reduce, out_ref.dtype), out_ref.dtype)
+        out_ref[...] = jnp.full_like(out_ref[...], ident)
+        any_ref[...] = jnp.zeros_like(any_ref[...])
+
+
 def edge_block_reduce(
     nbr: jax.Array,          # (R, W) int32, PAD-padded
     wgt: jax.Array,          # (R, W)
@@ -67,8 +94,18 @@ def edge_block_reduce(
     mask_inactive: bool = True,
     block_rows: int = 128,
     interpret: bool = True,
+    block_live: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Pallas dispatch with padding/unpadding. Returns (reduced, any_live)."""
+    """Pallas dispatch with padding/unpadding. Returns (reduced, any_live).
+
+    ``block_live`` (optional, ``(ceil(R/block_rows),)`` bool/int8) enables
+    the per-block early-out: grid step ``i`` checks ``block_live[i]`` and,
+    when dead, writes the reduce identity without gathering from the
+    vertex cache.  Callers must pass a *conservative* liveness (never
+    False for a block holding a live edge) — the bitmap pull plane's
+    touched summary is exact, the word-range popcount form is a valid
+    over-approximation.  Results are bit-identical to the full sweep.
+    """
     assert gather in GATHER_OPS and reduce in REDUCE_OPS
     R, W = nbr.shape
     V = values.shape[0]
@@ -88,17 +125,29 @@ def edge_block_reduce(
     rp = nbr.shape[0]
     grid = (rp // block_rows,)
 
+    kernel = functools.partial(_kernel, gather=gather, reduce=reduce,
+                               mask_inactive=mask_inactive)
+    in_specs = [
+        pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # edge block
+        pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # weights
+        pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # vertex cache
+        pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # degree cache
+        pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # frontier
+    ]
+    args = (nbr, wgt, table, degs, acts)
+    if block_live is not None:
+        assert block_live.shape[0] == grid[0], \
+            f"block_live wants {grid[0]} blocks, got {block_live.shape[0]}"
+        kernel = functools.partial(_kernel_skip, gather=gather,
+                                   reduce=reduce,
+                                   mask_inactive=mask_inactive)
+        in_specs = [pl.BlockSpec((1,), lambda i: (i,))] + in_specs
+        args = (block_live.astype(jnp.int8),) + args
+
     out, any_live = pl.pallas_call(
-        functools.partial(_kernel, gather=gather, reduce=reduce,
-                          mask_inactive=mask_inactive),
+        kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # edge block
-            pl.BlockSpec((block_rows, W), lambda i: (i, 0)),   # weights
-            pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # vertex cache
-            pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # degree cache
-            pl.BlockSpec((vr, LANES), lambda i: (0, 0)),       # frontier
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_rows,), lambda i: (i,)),
             pl.BlockSpec((block_rows,), lambda i: (i,)),
@@ -108,5 +157,5 @@ def edge_block_reduce(
             jax.ShapeDtypeStruct((rp,), jnp.int8),
         ],
         interpret=interpret,
-    )(nbr, wgt, table, degs, acts)
+    )(*args)
     return out[:R], any_live[:R] != 0

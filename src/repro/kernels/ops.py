@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import decode_gqa as _decode_gqa
 from . import edge_block as _edge_block
+from . import pull_bitmap as _pull_bitmap
 from . import push_ell as _push_ell
 from . import push_scatter as _push_scatter
 from . import segment_sum as _segment_sum
@@ -26,15 +27,39 @@ def _on_tpu() -> bool:
 @partial(jax.jit, static_argnames=("gather", "reduce", "mask_inactive",
                                    "block_rows", "use_kernel"))
 def edge_block_reduce(nbr, wgt, values, degrees, active, *, gather, reduce,
-                      mask_inactive=True, block_rows=128, use_kernel=True):
+                      mask_inactive=True, block_rows=128, use_kernel=True,
+                      block_live=None):
+    """Dense ELL edge-block reduce (Pallas, or jnp reference).
+
+    ``block_live`` (optional ``(ceil(R/block_rows),)`` mask) engages the
+    kernel's per-block early-out: dead blocks write the reduce identity
+    without gathering — the bitmap pull plane's block skip, in-kernel.
+    Callers must pass a conservative liveness; results are bit-identical
+    to the full sweep.  The reference path ignores it (it *is* the full
+    sweep, which the early-out must match bit-for-bit).
+    """
     if use_kernel:
         return _edge_block.edge_block_reduce(
             nbr, wgt, values, degrees, active,
             gather=gather, reduce=reduce, mask_inactive=mask_inactive,
-            block_rows=block_rows, interpret=not _on_tpu())
+            block_rows=block_rows, interpret=not _on_tpu(),
+            block_live=block_live)
     return _ref.edge_block_reduce_ref(
         nbr, wgt, values, degrees, active,
         gather=gather, reduce=reduce, mask_inactive=mask_inactive)
+
+
+@partial(jax.jit, static_argnames=("num_rows", "capacity", "num_vertices"))
+def touched_frontier(row_src, ell_dst, active, *, num_rows, capacity,
+                     num_vertices):
+    """Per-superstep any-active summary of the bitmap pull plane: which
+    vertices have at least one active in-neighbor.  Returns the
+    ``(V+1,)`` uint8 touched table (see ``pull_bitmap.touched_table``);
+    callers wanting the packed wire form apply
+    ``repro.core.graph.pack_bits(table[:V] != 0)``."""
+    return _pull_bitmap.touched_table(
+        row_src, ell_dst, active, num_rows=num_rows, capacity=capacity,
+        num_vertices=num_vertices)
 
 
 @partial(jax.jit, static_argnames=("num_segments", "reduce", "block_e",

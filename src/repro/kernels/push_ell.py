@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core import graph as _G
 from .ref import GATHER_OPS, PAD, REDUCE_OPS, _gather_msg
 
 LANES = 128
@@ -57,19 +58,22 @@ def compact_rows(live: jax.Array, num_rows: int, capacity: int
 
     Returns ``(sel (capacity,) int32, ok (capacity,) bool)``: ``sel[i]`` is
     the index of the i-th live row (in storage order) and ``ok[i]`` marks
-    slots past the live count (or past ``num_rows``) invalid.  Implemented
-    as inclusive cumsum + ``searchsorted`` — the scatter-free form of
-    stream compaction (the classic cumsum form writes through a scatter,
-    which costs ~30x a gather on XLA:CPU).
+    slots past the live count (or past ``num_rows``) invalid.
+
+    Implemented on the packed bitmap (:func:`repro.core.graph.pack_bits` +
+    :func:`repro.core.graph.bitmap_select`): the original inclusive-cumsum
+    + ``searchsorted`` form paid a *serial* O(R) cumsum (~8 ns/row on
+    XLA:CPU — the dominant fixed cost of a compacted push superstep at
+    R ≈ 100k rows); the bitmap form packs the mask elementwise and cumsums
+    R/32 word popcounts instead, with the in-word position recovered by a
+    five-round popcount binary search.  Selection is bit-for-bit identical
+    to the cumsum form.
 
     Rows beyond ``capacity`` are silently dropped: callers must guarantee
     ``capacity >= live.sum()`` (the runtime policy's tier guard does).
     """
-    cs = jnp.cumsum(live.astype(jnp.int32))
-    sel = jnp.searchsorted(
-        cs, jnp.arange(1, capacity + 1, dtype=jnp.int32)).astype(jnp.int32)
-    ok = sel < num_rows
-    return jnp.where(ok, sel, 0), ok
+    words = _G.pack_bits(live)
+    return _G.bitmap_select(words, capacity, num_items=num_rows)
 
 
 def _messages_xla(dst_blk, wgt_blk, src_blk, values, degrees, *, gather_fn):

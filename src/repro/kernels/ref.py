@@ -11,6 +11,13 @@ PAD = jnp.iinfo(jnp.int32).max
 GATHER_OPS = ("copy", "plus_one", "add_w", "mul_w", "div_deg")
 REDUCE_OPS = ("add", "min", "max")
 
+# Menu gathers whose message ignores the edge weight: their per-edge
+# message depends only on the source vertex, so the dense pull sweep can
+# precompute one (V,)-table of masked messages and stream edges as a
+# single gather (see translator._emit_dense_pull_reduce) — bit-identical
+# to per-edge evaluation (same elementwise ops on the same operands).
+WEIGHT_FREE_GATHERS = ("copy", "plus_one", "div_deg")
+
 
 def _identity(reduce: str, dtype):
     if jnp.issubdtype(dtype, jnp.integer):

@@ -107,8 +107,20 @@ def test_auto_traverses_fewer_edges(graph):
     assert sp["push_supersteps"] == 0
     assert sa["push_supersteps"] >= 1
     assert sa["edges_traversed"] < sp["edges_traversed"]
-    # pull traverses all E edges every superstep
-    assert sp["edges_traversed"] == g.num_edges * sp["pull_supersteps"]
+    # pull traverses at most all E edges per superstep — exactly E·steps
+    # on the dense sweep, less when the bitmap plane skipped blocks
+    assert sp["edges_traversed"] <= g.num_edges * sp["pull_supersteps"]
+    if rep_pull.pull_sweep == "bitmap":
+        assert sp["pull_blocks_swept"] + sp["pull_blocks_skipped"] == \
+            (rep_pull.pull_blocks_total or 0) * sp["pull_supersteps"]
+    # the dense-pinned sweep keeps the old full-E cost model exactly
+    c = translate(dsl.bfs_program(alg.INT_MAX), g,
+                  ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                 pull_sweep="dense"))
+    c.run(roots=0)
+    sd = c.last_run_stats
+    assert sd["edges_traversed"] == g.num_edges * sd["pull_supersteps"]
+    assert sd["pull_blocks_swept"] == 0 == sd["pull_blocks_skipped"]
 
 
 def test_pinned_program_ignores_push_policy(graph):

@@ -21,8 +21,9 @@ from repro.core import algorithms as alg
 from repro.core import dsl
 from repro.core import graph as G
 from repro.core.ir import (ApplyOp, ExchangeOp, FrontierUpdateOp,
-                           FusedGatherReduceOp, GatherOp, PushScatterOp,
-                           ReduceOp, SuperstepIR, lower_program)
+                           FusedGatherReduceOp, FusedSuperstepOp, GatherOp,
+                           PushScatterOp, ReduceOp, SuperstepIR,
+                           lower_program)
 from repro.core.passes import (BackendSelectionPass, DeadFrontierEliminationPass,
                                DirectionLegalityPass, GatherClassificationPass,
                                PassContext, PassPipeline,
@@ -147,11 +148,13 @@ def test_fusion_inserts_push_twin_only_when_legal():
     ir, _ = default_pipeline().run(lower_program(dsl.bfs_program()), _ctx())
     push = ir.find(PushScatterOp)
     assert push is not None
-    assert ir.find(FusedGatherReduceOp).direction == "both"
+    # after superstep fusion the gather+reduce op lives inside the fused
+    # superstep op
+    assert ir.find(FusedSuperstepOp).fused.direction == "both"
     assert push.reduce.identity is not None    # folded identity propagated
     ir, _ = default_pipeline().run(lower_program(dsl.spmv_program()), _ctx())
     assert ir.find(PushScatterOp) is None
-    assert ir.find(FusedGatherReduceOp).direction == "pull"
+    assert ir.find(FusedSuperstepOp).fused.direction == "pull"
 
 
 def test_dead_frontier_elimination_only_for_all_mode():
@@ -169,9 +172,13 @@ def test_dead_frontier_elimination_only_for_all_mode():
 
 
 def test_pipeline_dump_golden_bfs():
-    """The per-pass report for bfs_program() (reproduced in the docs)."""
+    """The per-pass report for bfs_program() (reproduced in the docs).
+
+    ``use_pallas=True`` so ``pull_sweep='auto'`` resolves to the bitmap
+    plane (on the XLA path auto resolves dense by measured cost — see
+    ``test_pull_sweep_auto_resolution``)."""
     ir, report = default_pipeline().run(
-        lower_program(dsl.bfs_program()), _ctx(), dump=True)
+        lower_program(dsl.bfs_program()), _ctx(use_pallas=True), dump=True)
     text = report.render()
     # one section per pass, in order, with its taxonomy kind
     headers = [l for l in text.splitlines() if l.startswith("== ")]
@@ -182,10 +189,11 @@ def test_pipeline_dump_golden_bfs():
         "== backend-selection [transform] (changed)",
         "== gather-reduce-fusion [transform] (changed)",
         "== dead-frontier-elimination [transform] (no change)",
+        "== superstep-fusion [transform] (changed)",
     ]
     # every section carries before/after IR listings
-    assert text.count("-- before --") == 6
-    assert text.count("-- after --") == 6
+    assert text.count("-- before --") == 7
+    assert text.count("-- after --") == 7
     # the facts each pass establishes are visible in the dump
     assert "module=plus_one" in text
     assert "identity=Array(2147483647, dtype=int32)" in text
@@ -193,9 +201,12 @@ def test_pipeline_dump_golden_bfs():
     assert "FusedGatherReduce(kernel=edge_block" in text
     assert "direction=both" in text
     assert "PushScatter(kernel=push_scatter" in text
+    assert "FusedSuperstep(pull_sweep=bitmap" in text
     # analysis notes survive into the final IR
     assert "gather matched module 'plus_one'" in ir.dump()
     assert "direction: push legal" in ir.dump()
+    assert "pull sweep: bitmap" in ir.dump()
+    assert "superstep fused" in ir.dump()
 
 
 def test_pipeline_without_dump_records_names_only():
@@ -204,11 +215,16 @@ def test_pipeline_without_dump_records_names_only():
     assert [r.name for r in report.records] == [
         "gather-classification", "direction-legality",
         "reduce-identity-fold", "backend-selection",
-        "gather-reduce-fusion", "dead-frontier-elimination"]
+        "gather-reduce-fusion", "dead-frontier-elimination",
+        "superstep-fusion"]
     assert all(r.before is None and r.after is None for r in report.records)
-    # spmv is frontier='all' → the frontier op ends up dead
-    assert ir.find(FrontierUpdateOp).dead
-    assert ir.find(FusedGatherReduceOp).gather.module == "mul_w"
+    # spmv is frontier='all' → the frontier op ends up dead, and the dead
+    # flag survives into the fused superstep op
+    fstep = ir.find(FusedSuperstepOp)
+    assert fstep.frontier.dead
+    assert fstep.fused.gather.module == "mul_w"
+    # spmv's 'all' frontier keeps every block live → dense pull sweep
+    assert fstep.pull_sweep == "dense"
     # spmv is pinned to pull (no sparse frontier) → no push twin
     assert ir.find(PushScatterOp) is None
     assert any("pinned to pull" in n for n in ir.notes)

@@ -1,0 +1,489 @@
+"""Bitmap-frontier pull plane: packed-bitmap helpers, block-skipping sweep,
+superstep fusion, and the block-accounting run stats."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms as alg
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core.passes import apply_is_elementwise
+from repro.core.scheduler import (DirectionPolicy, ScheduleConfig,
+                                  pull_block_capacities)
+from repro.core.translator import translate
+from repro.kernels import ops as kops
+from repro.kernels import pull_bitmap as pb
+from repro.kernels import edge_block as eb
+from repro.kernels.ref import edge_block_reduce_ref
+
+PAD = np.iinfo(np.int32).max
+
+
+# ---------------------------------------------------------------------------
+# 1. packed bitmap helpers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100, 4097])
+@pytest.mark.parametrize("frac", [0.0, 0.25, 1.0])
+def test_pack_unpack_roundtrip(n, frac):
+    rng = np.random.default_rng(n)
+    mask = rng.random(n) < frac
+    words = G.pack_bits(jnp.asarray(mask))
+    assert words.shape == (G.bitmap_num_words(n),)
+    assert words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(G.unpack_bits(words, n)), mask)
+    assert int(G.popcount_words(words).sum()) == int(mask.sum())
+
+
+def test_pack_empty_and_full():
+    n = 70
+    empty = G.pack_bits(jnp.zeros(n, bool))
+    assert not np.asarray(empty).any()
+    full = G.pack_bits(jnp.ones(n, bool))
+    # 70 = 2*32 + 6: last word has only 6 bits set
+    assert np.asarray(full)[:2].tolist() == [0xFFFFFFFF] * 2
+    assert int(np.asarray(full)[2]) == 0b111111
+    assert int(G.popcount_words(full).sum()) == n
+
+
+def test_select_bits_matches_numpy():
+    rng = np.random.default_rng(0)
+    words = rng.integers(1, 2**32, 256, dtype=np.uint64).astype(np.uint32)
+    for w in words[:32]:
+        positions = [i for i in range(32) if (int(w) >> i) & 1]
+        ranks = jnp.arange(len(positions), dtype=jnp.int32)
+        got = G.select_bits(jnp.full(len(positions), w, jnp.uint32), ranks)
+        assert np.asarray(got).tolist() == positions
+
+
+def _ref_compact(live, num_items, capacity):
+    cs = np.cumsum(live.astype(np.int64))
+    sel = np.searchsorted(cs, np.arange(1, capacity + 1))
+    ok = sel < num_items
+    return np.where(ok, sel, 0), ok
+
+
+@pytest.mark.parametrize("n,frac,cap", [
+    (5, 0.5, 3), (64, 0.0, 8), (64, 1.0, 64), (64, 1.0, 16),
+    (1000, 0.1, 256), (1000, 0.9, 100), (33, 0.3, 64),
+])
+def test_bitmap_select_matches_cumsum_form(n, frac, cap):
+    rng = np.random.default_rng(n + cap)
+    live = rng.random(n) < frac
+    sel, ok = G.bitmap_select(G.pack_bits(jnp.asarray(live)), cap,
+                              num_items=n)
+    want_sel, want_ok = _ref_compact(live, n, cap)
+    np.testing.assert_array_equal(np.asarray(sel), want_sel)
+    np.testing.assert_array_equal(np.asarray(ok), want_ok)
+
+
+def test_bitmap_select_num_items_clamps_tail_bits():
+    # bits past num_items consume slots but come back invalid — the same
+    # contract as compact_rows on storage rows past the logical count
+    live = jnp.ones(40, bool)
+    sel, ok = G.bitmap_select(G.pack_bits(live), 40, num_items=35)
+    assert np.asarray(ok).sum() == 35
+    assert not np.asarray(ok)[35:].any()
+
+
+def test_hypothesis_property_sweep():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.booleans(), min_size=1, max_size=200),
+           st.integers(min_value=1, max_value=64))
+    def roundtrip_and_select(bits, cap):
+        mask = np.asarray(bits, bool)
+        n = len(mask)
+        words = G.pack_bits(jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(G.unpack_bits(words, n)),
+                                      mask)
+        sel, ok = G.bitmap_select(words, cap, num_items=n)
+        want_sel, want_ok = _ref_compact(mask, n, cap)
+        np.testing.assert_array_equal(np.asarray(sel), want_sel)
+        np.testing.assert_array_equal(np.asarray(ok), want_ok)
+
+    roundtrip_and_select()
+
+
+# ---------------------------------------------------------------------------
+# 2. touched summary + block liveness kernels
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = G.rmat_edges(300, 3000, seed=7)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, len(src)).astype(
+        np.float32)
+    return G.from_edge_list(src, dst, num_vertices=300, weights=w), src, dst
+
+
+def _touched_oracle(src, dst, active):
+    t = np.zeros(len(active) + 1, np.uint8)
+    live = active[src]
+    t[dst[live]] = 1
+    return t
+
+
+@pytest.mark.parametrize("frac", [0.0, 0.05, 1.0])
+def test_touched_table_matches_oracle(graph, frac):
+    g, src, dst = graph
+    fe = G.forward_ell(g, width=8)
+    rng = np.random.default_rng(11)
+    active = rng.random(g.num_vertices) < frac
+    cap = int(np.where(active, np.asarray(fe.rows_per_vertex), 0).sum()) + 1
+    table = kops.touched_frontier(
+        fe.row_src, fe.dst, jnp.asarray(active), num_rows=fe.num_rows,
+        capacity=cap, num_vertices=g.num_vertices)
+    np.testing.assert_array_equal(np.asarray(table),
+                                  _touched_oracle(src, dst, active))
+    # the dummy slot padded owner ids read must stay untouched
+    assert int(np.asarray(table)[g.num_vertices]) == 0
+
+
+def test_block_liveness_exact_and_range_conservative(graph):
+    g, src, dst = graph
+    rb = G.bucketize(G.reverse(g))
+    plan = G.pull_bitmap_plan(rb, block_slots=64)
+    rng = np.random.default_rng(3)
+    active = rng.random(g.num_vertices) < 0.05
+    touched = _touched_oracle(src, dst, active)
+    words = G.pack_bits(jnp.asarray(touched[:g.num_vertices] != 0))
+    prefix = pb.word_prefix(words)
+    exact = pb.block_liveness(jnp.asarray(touched), plan.owner8,
+                              plan.block_rows)
+    # oracle: any sub-row owner in the block touched
+    own = np.asarray(plan.owner8).reshape(-1, plan.block_rows)
+    want = (touched[np.minimum(own, g.num_vertices)] != 0).any(axis=1)
+    np.testing.assert_array_equal(np.asarray(exact), want)
+    # the word-range form is a conservative superset of the exact form
+    coarse = pb.block_range_live(prefix, plan.block_word_lo,
+                                 plan.block_word_hi)
+    assert bool(np.all(~want | np.asarray(coarse)))
+
+
+def test_pull_plan_invariants_odd_vertex_count():
+    # V deliberately not a multiple of 32 (and with isolated vertices)
+    src, dst = G.rmat_edges(277, 1900, seed=5)
+    g = G.from_edge_list(src, dst, num_vertices=277)
+    rb = G.bucketize(G.reverse(g))
+    plan = G.pull_bitmap_plan(rb, block_slots=16)
+    rm = np.asarray(plan.row_map)
+    indeg = np.bincount(np.asarray(g.edges_dst), minlength=277)
+    np.testing.assert_array_equal(rm < plan.num_rows_total, indeg > 0)
+    assert int(np.asarray(plan.block_edges).sum()) == g.num_edges
+    assert (rm < plan.num_rows_total).sum() + plan.num_dup == \
+        plan.num_rows_total
+    # the flat view re-expresses exactly the bucketed edges, in order
+    flat = np.asarray(plan.flat_dst)
+    assert flat.shape == (plan.num_subrows, 8)
+    assert plan.num_subrows == plan.num_blocks * plan.block_rows
+    total_sub = sum(r * f for r, f in plan.bucket_shapes)
+    assert (np.asarray(plan.owner8)[total_sub:] == 277).all()  # pad rows
+    caps = pull_block_capacities(plan.num_blocks)
+    assert len(caps) == 2 and caps[0] <= caps[1] <= plan.num_blocks
+    with pytest.raises(ValueError):
+        G.pull_bitmap_plan(rb, block_slots=12)   # not a multiple of 8
+
+
+# ---------------------------------------------------------------------------
+# 3. the edge-block early-out (Pallas interpret path)
+# ---------------------------------------------------------------------------
+
+
+def _random_block(V=90, R=41, W=8, seed=2):
+    rng = np.random.default_rng(seed)
+    nbr = rng.integers(0, V, (R, W)).astype(np.int32)
+    nbr[rng.random((R, W)) < 0.25] = PAD
+    wgt = rng.uniform(0.5, 2, (R, W)).astype(np.float32)
+    vals = rng.uniform(0, 5, V).astype(np.float32)
+    deg = rng.integers(1, 9, V).astype(np.int32)
+    act = rng.random(V) < 0.3
+    return tuple(jnp.asarray(a) for a in (nbr, wgt, vals, deg, act))
+
+
+@pytest.mark.parametrize("reduce", ["add", "min", "max"])
+def test_edge_block_early_out_bit_exact(reduce):
+    nbr, wgt, vals, deg, act = _random_block()
+    br = 8
+    nb = -(-nbr.shape[0] // br)
+    # exact per-block liveness from the frontier
+    nbr_np, act_np = np.asarray(nbr), np.asarray(act)
+    live = []
+    for b in range(nb):
+        rows = nbr_np[b * br:(b + 1) * br]
+        valid = rows != PAD
+        live.append(bool((valid & act_np[np.where(valid, rows, 0)]).any()))
+    skip = eb.edge_block_reduce(nbr, wgt, vals, deg, act, gather="mul_w",
+                                reduce=reduce, block_rows=br,
+                                block_live=jnp.asarray(live),
+                                interpret=True)
+    full = eb.edge_block_reduce(nbr, wgt, vals, deg, act, gather="mul_w",
+                                reduce=reduce, block_rows=br,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(skip[0]), np.asarray(full[0]))
+    np.testing.assert_array_equal(np.asarray(skip[1]), np.asarray(full[1]))
+    ref = edge_block_reduce_ref(nbr, wgt, vals, deg, act, gather="mul_w",
+                                reduce=reduce)
+    np.testing.assert_allclose(np.asarray(skip[0]), np.asarray(ref[0]),
+                               rtol=1e-6)
+
+
+def test_edge_block_all_dead_blocks_write_identity():
+    nbr, wgt, vals, deg, act = _random_block(seed=9)
+    nb = -(-nbr.shape[0] // 8)
+    red, got = eb.edge_block_reduce(
+        nbr, wgt, vals, deg, act, gather="copy", reduce="min", block_rows=8,
+        block_live=jnp.zeros(nb, bool), interpret=True)
+    assert np.isposinf(np.asarray(red)).all()
+    assert not np.asarray(got).any()
+
+
+# ---------------------------------------------------------------------------
+# 4. bitmap pull plane ≡ dense pull plane, end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("template", ["bfs", "sssp", "wcc"])
+def test_bitmap_pull_bit_exact_vs_dense(graph, template):
+    g, src, dst = graph
+    if template == "wcc":
+        # wcc runs on the symmetrized graph — build it like alg.wcc does
+        und = G.from_edge_list(np.concatenate([src, dst]),
+                               np.concatenate([dst, src]),
+                               num_vertices=g.num_vertices)
+        g = und
+    prog = dsl.PROGRAM_TEMPLATES[template]()
+    roots = None if template == "wcc" else 0
+    results = {}
+    for sweep in ("dense", "bitmap"):
+        c = translate(prog, g,
+                      ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                     pull_sweep=sweep))
+        assert c.report.pull_sweep == sweep
+        vals, iters = c.run(roots=roots)
+        results[sweep] = (np.asarray(vals), int(iters), c.last_run_stats)
+    np.testing.assert_array_equal(results["dense"][0], results["bitmap"][0])
+    assert results["dense"][1] == results["bitmap"][1]
+
+
+def test_bitmap_pull_superstep_random_frontiers(graph):
+    """Single-superstep equivalence on adversarial frontiers (empty, full,
+    hub-only, random) — tighter than whole-run equality because every
+    branch (both pre-pass tiers, both block tiers, dense tail) gets hit."""
+    g, *_ = graph
+    progs = {
+        sweep: translate(dsl.bfs_program(alg.INT_MAX), g,
+                         ScheduleConfig(
+                             direction=DirectionPolicy(mode="pull"),
+                             pull_sweep=sweep))
+        for sweep in ("dense", "bitmap")}
+    rng = np.random.default_rng(0)
+    values = jnp.asarray(
+        rng.integers(0, 10, g.num_vertices).astype(np.int32))
+    hub = int(np.argmax(np.asarray(g.out_degrees)))
+    frontiers = [np.zeros(g.num_vertices, bool),
+                 np.ones(g.num_vertices, bool)]
+    only_hub = np.zeros(g.num_vertices, bool)
+    only_hub[hub] = True
+    frontiers.append(only_hub)
+    for frac in (0.01, 0.1, 0.6):
+        frontiers.append(rng.random(g.num_vertices) < frac)
+    for f in frontiers:
+        outs = {s: p.superstep(values, jnp.asarray(f))
+                for s, p in progs.items()}
+        np.testing.assert_array_equal(np.asarray(outs["dense"][0]),
+                                      np.asarray(outs["bitmap"][0]))
+        np.testing.assert_array_equal(np.asarray(outs["dense"][1]),
+                                      np.asarray(outs["bitmap"][1]))
+
+
+def test_bitmap_pull_pallas_interpret_matches_xla(graph):
+    """The Pallas early-out path (use_pallas, interpret on CPU) is
+    bit-exact against the XLA gather-compaction path."""
+    g, *_ = graph
+    outs = {}
+    for pallas in (False, True):
+        c = translate(dsl.bfs_program(alg.INT_MAX), g,
+                      ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                     pull_sweep="bitmap"),
+                      use_pallas=pallas)
+        assert c.report.pull_sweep == "bitmap"
+        vals, it = c.run(roots=0)
+        outs[pallas] = (np.asarray(vals), int(it), c.last_run_stats)
+    np.testing.assert_array_equal(outs[False][0], outs[True][0])
+    assert outs[False][1] == outs[True][1]
+    # skip granularities differ (Pallas: schedule.block_rows grid blocks;
+    # XLA: plan blocks, with the dense tail reporting a full sweep), so
+    # the counts need not match — but each accounting must close over the
+    # plan's block total on every path
+    from repro.core import preprocess
+    nb = preprocess.layouts_for(g).pull_plan(
+        ScheduleConfig().pull_block_slots).num_blocks
+    for path in (False, True):
+        s = outs[path][2]
+        assert s["pull_blocks_swept"] + s["pull_blocks_skipped"] == \
+            nb * s["pull_supersteps"], path
+
+
+def test_float_add_masked_program_gets_bitmap_plane(graph):
+    """Block skipping needs no commutativity proof: a float-add program
+    with identity masking rides the bitmap plane bit-exactly (push would
+    be pinned for it — strictly weaker legality)."""
+    g, *_ = graph
+    prog = dsl.VertexProgram(
+        name="facc", gather=lambda v, w, d: v * w, reduce="add",
+        apply=lambda old, s: old + s, init_value=1.0,
+        frontier="changed", value_dtype=jnp.float32)
+    outs = {}
+    for sweep in ("dense", "bitmap"):
+        c = translate(prog, g, ScheduleConfig(
+            direction=DirectionPolicy(mode="pull"), pull_sweep=sweep))
+        assert c.report.pull_sweep == sweep
+        assert c.report.directions == ("pull",)      # push stays pinned
+        vals, _ = c.run(roots=0)
+        outs[sweep] = np.asarray(vals)
+    np.testing.assert_array_equal(outs["dense"], outs["bitmap"])
+
+
+# ---------------------------------------------------------------------------
+# 5. run stats: the block-skip accounting and the measured pull cost
+# ---------------------------------------------------------------------------
+
+
+def test_pull_block_accounting(graph):
+    g, *_ = graph
+    c = translate(dsl.bfs_program(alg.INT_MAX), g,
+                  ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                 pull_sweep="bitmap"))
+    # a low-degree root keeps the first frontier narrow enough that the
+    # compacted tiers engage and something is actually skipped (vertex 0
+    # is the R-MAT mega-hub, whose neighborhood touches most blocks)
+    deg = np.asarray(g.out_degrees)
+    root = int(np.nonzero(deg == deg[deg > 0].min())[0][0])
+    c.run(roots=root)
+    s = c.last_run_stats
+    total = c.report.pull_blocks_total
+    assert total and total > 0
+    assert s["pull_blocks_swept"] + s["pull_blocks_skipped"] == \
+        total * s["pull_supersteps"]
+    assert s["pull_blocks_skipped"] > 0          # something was skipped
+    assert s["edges_traversed"] <= g.num_edges * s["pull_supersteps"]
+    assert s["pull_cost_model"] <= g.num_edges
+    assert c.report.pull_block_tiers is not None
+    # the report surfaces the tier capacities like the push tier split
+    assert len(c.report.pull_block_tiers) == 2
+
+
+def test_run_batch_carries_pull_block_stats(graph):
+    g, *_ = graph
+    c = translate(dsl.bfs_program(alg.INT_MAX), g,
+                  ScheduleConfig(direction=DirectionPolicy(mode="pull"),
+                                 pull_sweep="bitmap"))
+    roots = [0, 5]
+    c.run_batch(roots)
+    batch = c.last_run_stats
+    for k, root in enumerate(roots):
+        c.run(roots=root)
+        seq = c.last_run_stats
+        for key in ("pull_blocks_swept", "pull_blocks_skipped",
+                    "edges_traversed"):
+            assert batch[key][k] == seq[key], (key, k)
+
+
+def test_preprocess_cached_flag(graph):
+    from repro.core import preprocess
+    from repro.core.translator import staging_cache_clear
+    src, dst = G.rmat_edges(120, 900, seed=31)
+    g = G.from_edge_list(src, dst, num_vertices=120)
+    staging_cache_clear()
+    preprocess.layout_cache_clear()
+    c1 = translate(dsl.bfs_program(alg.INT_MAX), g, ScheduleConfig())
+    bd1 = c1.report.translate_breakdown
+    assert not bd1["preprocess_cached"] and bd1["preprocess_s"] > 0
+    # different schedule → staging miss, but every layout is already built
+    c2 = translate(dsl.bfs_program(alg.INT_MAX), g,
+                   ScheduleConfig(direction=DirectionPolicy(mode="pull")))
+    bd2 = c2.report.translate_breakdown
+    assert not bd2["staging_cached"]
+    assert bd2["preprocess_cached"] and bd2["preprocess_s"] == 0.0
+    # identical translate → staging hit, preprocess trivially cached
+    c3 = translate(dsl.bfs_program(alg.INT_MAX), g,
+                   ScheduleConfig(direction=DirectionPolicy(mode="pull")))
+    bd3 = c3.report.translate_breakdown
+    assert bd3["staging_cached"] and bd3["preprocess_cached"]
+
+
+# ---------------------------------------------------------------------------
+# 6. superstep fusion legality (the elementwise probe)
+# ---------------------------------------------------------------------------
+
+
+def test_apply_is_elementwise_probe():
+    assert apply_is_elementwise(jnp.minimum, jnp.int32)
+    assert apply_is_elementwise(lambda o, s: 0.15 + 0.85 * s, jnp.float32)
+    assert apply_is_elementwise(lambda o, s: s, jnp.float32)
+    # table-coupled applies must fail the probe
+    assert not apply_is_elementwise(lambda o, s: o + s.sum(), jnp.float32)
+    assert not apply_is_elementwise(lambda o, s: s[::-1], jnp.float32)
+    assert not apply_is_elementwise(lambda o, s: s[:4], jnp.float32)
+
+
+def test_non_elementwise_apply_declines_fusion(graph):
+    g, *_ = graph
+    prog = dsl.VertexProgram(
+        name="norm", gather=lambda v, w, d: v, reduce="add",
+        apply=lambda old, s: old + s.sum(), init_value=1.0,
+        frontier="all", value_dtype=jnp.float32, mask_inactive=False,
+        max_iters=2)
+    c = translate(prog, g, ScheduleConfig(), dump_passes=True)
+    assert c.report.pull_sweep == "dense"
+    assert "superstep fusion declined" in c.report.pass_report
+    vals, it = c.run()
+    assert int(it) == 2 and np.isfinite(np.asarray(vals)).all()
+
+
+def test_pull_sweep_auto_resolution(graph):
+    """'auto' resolves per backend cost model: dense on the XLA path
+    (block-skip bookkeeping is measured slower than the flat sweep it
+    saves on CPU), bitmap on the Pallas path; explicit 'bitmap' forces
+    the plane on any backend."""
+    g, *_ = graph
+    cfg = ScheduleConfig(direction=DirectionPolicy(mode="pull"))
+    c_xla = translate(dsl.bfs_program(alg.INT_MAX), g, cfg,
+                      use_pallas=False, dump_passes=True)
+    assert c_xla.report.pull_sweep == "dense"
+    assert "resolves dense on the XLA path" in c_xla.report.pass_report
+    c_pal = translate(dsl.bfs_program(alg.INT_MAX), g, cfg,
+                      use_pallas=True)
+    assert c_pal.report.pull_sweep == "bitmap"
+    c_forced = translate(dsl.bfs_program(alg.INT_MAX), g,
+                         ScheduleConfig(direction=DirectionPolicy(
+                             mode="pull"), pull_sweep="bitmap"),
+                         use_pallas=False)
+    assert c_forced.report.pull_sweep == "bitmap"
+    # all three bit-exact
+    base, _ = c_xla.run(roots=0)
+    for c in (c_pal, c_forced):
+        vals, _ = c.run(roots=0)
+        np.testing.assert_array_equal(np.asarray(base), np.asarray(vals))
+
+
+def test_bitmap_decline_reasons_recorded(graph):
+    g, *_ = graph
+    # frontier='all' + mask_inactive=False (pagerank) declines the bitmap
+    # plane but still fuses the superstep
+    c = translate(dsl.pagerank_program(iters=2), g, ScheduleConfig(),
+                  dump_passes=True)
+    assert c.report.pull_sweep == "dense"
+    assert "pull sweep: dense" in c.report.pass_report
+    assert "superstep fused" in c.report.pass_report
+    # schedule pin
+    c2 = translate(dsl.bfs_program(alg.INT_MAX), g,
+                   ScheduleConfig(pull_sweep="dense"), dump_passes=True)
+    assert c2.report.pull_sweep == "dense"
+    assert "pins pull_sweep='dense'" in c2.report.pass_report

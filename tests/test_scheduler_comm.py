@@ -56,7 +56,8 @@ def test_plan_elastic_degrade_to_single_device():
              devices=jax.devices()[:1])       # simulate a 1-device pool
     assert p.mesh is None          # degraded: single device → no mesh
     assert p.pes == 1
-    assert p.describe().endswith(p.direction.describe())
+    assert f"direction={p.direction.describe()}" in p.describe()
+    assert p.describe().endswith(f"pull_sweep={p.config.pull_sweep}")
 
 
 def test_plan_builds_pe_mesh_when_devices_allow():
@@ -122,6 +123,53 @@ def test_estimate_collective_bytes_ring_formula():
     # int32 payload at pes=2: half the buffer crosses each link twice
     assert comm.estimate_collective_bytes(64, jnp.int32, pes=2) == \
         int(2 * 1 / 2 * 64 * 4)
+
+
+def test_estimate_frontier_bytes_formula():
+    """Pin the mask-exchange wire model: packed bitmap = (p−1)·⌈V/32⌉·4
+    received per participant (all_gather of word tables), int8 pmax ring
+    = 2·(p−1)/p·V — packed wins 8× at p=2, break-even at p=16."""
+    comm = CommManager()
+    assert comm.estimate_frontier_bytes(1000, pes=1) == 0
+    packed2 = comm.estimate_frontier_bytes(1024, pes=2, packed=True)
+    assert packed2 == 1 * 32 * 4                       # (p−1)·V/32·4
+    assert comm.stats.frontier_bytes_per_superstep == packed2
+    int8_2 = comm.estimate_frontier_bytes(1024, pes=2, packed=False)
+    assert int8_2 == int(2 * 1 / 2 * 1024)
+    assert int8_2 == 8 * packed2                       # the 8× reduction
+    # break-even at p=16: (p−1)/8 vs 2·(p−1)/p of V
+    p16p = comm.estimate_frontier_bytes(3200, pes=16, packed=True)
+    p16i = comm.estimate_frontier_bytes(3200, pes=16, packed=False)
+    assert p16p == p16i == 6000
+
+
+def test_bitmap_or_equals_pmax_of_unpacked():
+    """The packed-bitmap OR combine is bit-exact vs the int8 pmax form."""
+    import jax
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices")
+    import jax.numpy as jnp
+    from repro.core import graph as G
+    from repro.core._jax_compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+    rng = np.random.default_rng(5)
+    V = 101                                          # not a multiple of 32
+    masks = rng.random((2, V)) < 0.3
+    mesh = make_mesh((2,), ("pe",), devices=jax.devices()[:2])
+
+    def pe_body(m):
+        m = m[0]
+        words = CommManager.bitmap_or(G.pack_bits(m), "pe", pes=2)
+        packed = G.unpack_bits(words, V)
+        ref = jax.lax.pmax(m.astype(jnp.int8), "pe") != 0
+        return packed[None], ref[None]
+
+    packed, ref = shard_map(pe_body, mesh=mesh, in_specs=(P("pe"),),
+                            out_specs=(P("pe"), P("pe")))(
+        jnp.asarray(masks))
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(packed[0]),
+                                  masks[0] | masks[1])
 
 
 def test_estimate_does_not_clobber_run_totals():
