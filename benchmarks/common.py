@@ -1,0 +1,75 @@
+"""Shared benchmark-payload plumbing: schema stamp + history append.
+
+Every machine-readable benchmark artifact (``BENCH_graph.json`` from
+``benchmarks.run --json``, ``BENCH_serve.json`` from ``benchmarks.serve``)
+is stamped through :func:`stamp` and logged through :func:`append_history`,
+so the schema-version/commit fields can't drift between payloads: one
+helper, two (or more) consumers.  Bump :data:`BENCH_SCHEMA` whenever any
+payload's shape changes — consumers key on it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+
+BENCH_SCHEMA = 2          # bump when any BENCH_*.json payload shape changes
+HISTORY_DIR = os.path.join("reports", "graphs")
+HISTORY_PATH = os.path.join(HISTORY_DIR, "history.jsonl")
+
+
+def commit() -> str:
+    """Short git commit of the working tree, or 'unknown' outside a repo."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def stamp(payload: dict) -> dict:
+    """Schema-version a payload in place so CI consumers can evolve safely."""
+    payload["schema"] = BENCH_SCHEMA
+    payload["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
+    payload["commit"] = _commit_cached()
+    return payload
+
+
+_COMMIT = None
+
+
+def _commit_cached() -> str:
+    global _COMMIT
+    if _COMMIT is None:
+        _COMMIT = commit()
+    return _COMMIT
+
+
+def append_history(entry: dict, *, stamped: dict | None = None) -> str:
+    """Append one compact record to ``reports/graphs/history.jsonl``.
+
+    ``BENCH_*.json`` files are overwritten every run; the history line
+    keeps the perf trajectory across PRs (one JSON object per line).
+    When ``stamped`` is given (a payload that went through :func:`stamp`),
+    its schema/timestamp/commit are copied onto the entry — the entry and
+    the payload it summarizes can't carry different stamps.
+    """
+    if stamped is not None:
+        entry = {**entry,
+                 "schema": stamped.get("schema"),
+                 "timestamp": stamped.get("timestamp"),
+                 "commit": stamped.get("commit")}
+    os.makedirs(HISTORY_DIR, exist_ok=True)
+    with open(HISTORY_PATH, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return HISTORY_PATH
+
+
+def write_payload(path: str, payload: dict) -> None:
+    """Stamp + pretty-write a benchmark payload (stable key order)."""
+    stamp(payload)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)

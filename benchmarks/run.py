@@ -27,45 +27,20 @@ from __future__ import annotations
 
 import json
 import os
-import subprocess
 import sys
-import time
 
-BENCH_SCHEMA = 2          # bump when BENCH_graph.json's shape changes
-HISTORY_DIR = os.path.join("reports", "graphs")
-
-
-def _commit() -> str:
-    try:
-        return subprocess.run(
-            ["git", "rev-parse", "--short", "HEAD"],
-            capture_output=True, text=True, timeout=10,
-        ).stdout.strip() or "unknown"
-    except Exception:
-        return "unknown"
-
-
-def _stamp(payload: dict) -> dict:
-    """Schema-version the payload so CI consumers can evolve safely."""
-    payload["schema"] = BENCH_SCHEMA
-    payload["timestamp"] = time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())
-    payload["commit"] = _commit()
-    return payload
+from .common import BENCH_SCHEMA, append_history, stamp as _stamp  # noqa: F401
 
 
 def _append_history(payload: dict) -> str:
-    """Append a compact per-run record to reports/graphs/history.jsonl.
+    """Append this sweep's headline numbers to reports/graphs/history.jsonl.
 
     ``BENCH_graph.json`` is overwritten every run; the history line keeps
-    the perf trajectory across PRs (one JSON object per line: schema,
-    timestamp, commit, and the headline numbers).
+    the perf trajectory across PRs.  Stamping (schema/timestamp/commit)
+    rides :func:`benchmarks.common.append_history` — the same helper the
+    serving benchmark uses, so the two payloads can't drift.
     """
-    os.makedirs(HISTORY_DIR, exist_ok=True)
-    path = os.path.join(HISTORY_DIR, "history.jsonl")
     entry = {
-        "schema": payload.get("schema"),
-        "timestamp": payload.get("timestamp"),
-        "commit": payload.get("commit"),
         "mteps": {m: d["mteps"] for m, d in payload.get("modes", {}).items()},
         "wall_s": {m: d["wall_s"]
                    for m, d in payload.get("modes", {}).items()},
@@ -76,9 +51,7 @@ def _append_history(payload: dict) -> str:
                 "traversal_reduction_auto_vs_pull"),
         "pull_plane": payload.get("pull_plane"),
     }
-    with open(path, "a") as f:
-        f.write(json.dumps(entry, sort_keys=True) + "\n")
-    return path
+    return append_history(entry, stamped=payload)
 
 
 def _run_csv(only: list[str]) -> None:

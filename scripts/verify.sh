@@ -194,6 +194,16 @@ if reduction < 3.0:
 print("multi-PE smoke OK")
 EOF
 
+echo "== serving smoke: mixed stream, every answer matches its oracle =="
+# The serving plane (continuous-batched query runtime): a short mixed
+# bfs/sssp/dist stream on a small weighted R-MAT must drain with every
+# answer bit-exact against the sequential run(roots=root) oracle and a
+# positive sustained QPS.  benchmarks.serve --smoke raises on any
+# mismatch and asserts qps > 0; the grep pins the success line so a
+# silently-empty run can't pass.
+python -m benchmarks.serve --smoke | tee /tmp/serve_smoke.out
+grep -q "serve smoke ok" /tmp/serve_smoke.out
+
 echo "== docstring check (core/ir.py, core/passes.py) =="
 python - <<'EOF'
 import inspect, sys

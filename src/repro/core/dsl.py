@@ -134,6 +134,37 @@ def pagerank_program(damping: float = 0.85, iters: int = 20) -> VertexProgram:
 
 
 @functools.lru_cache(maxsize=None)
+def ppr_program(root: int = 0, damping: float = 0.85,
+                iters: int = 20) -> VertexProgram:
+    """Personalized PageRank from ``root``: damped sum with restart mass
+    ``(1-d)`` concentrated on the personalization vertex.
+
+    The one-hot restart vector is derived inside ``apply`` from the
+    reduced-message vector's length (``s.shape[0] == V``), so the template
+    stays graph-independent and the factory memoizes per ``root`` — the
+    serving plane's per-root staging-cache keys hit on the same object.
+    Fixed ``iters`` truncation of the power series
+    ``(1-d) * sum_t (d M)^t e_root``; scores are comparable across queries
+    served with the same ``iters``.
+    """
+    def apply(old, s):
+        e = (jnp.arange(s.shape[0]) == root).astype(s.dtype)
+        return (1.0 - damping) * e + damping * s
+
+    return VertexProgram(
+        name="ppr",
+        gather=lambda v, w, d: v / jnp.maximum(d, 1).astype(v.dtype),
+        reduce="add",
+        apply=apply,
+        init_value=0.0,
+        frontier="all",
+        value_dtype=jnp.float32,
+        mask_inactive=False,
+        max_iters=iters,
+    )
+
+
+@functools.lru_cache(maxsize=None)
 def wcc_program() -> VertexProgram:
     """Connected components by label propagation: reduce min of labels."""
     return VertexProgram(
@@ -186,6 +217,7 @@ PROGRAM_TEMPLATES: dict[str, Callable[[], VertexProgram]] = {
     "bfs": bfs_program,
     "sssp": sssp_program,
     "pagerank": pagerank_program,
+    "ppr": ppr_program,
     "wcc": wcc_program,
     "spmv": spmv_program,
     "degree": degree_program,

@@ -98,6 +98,51 @@ class DirectionPolicy:
 
 
 @dataclasses.dataclass(frozen=True)
+class AdmissionPolicy:
+    """Serving-plane admission knobs (paper §V-C2's runtime scheduler,
+    lifted from per-superstep direction choice to per-query batching).
+
+    The serving plane (:mod:`repro.serve.graph_serve`) keeps one fixed
+    ``slots``-lane batch per compiled program and continuously admits
+    queued queries into converged lanes between slices of
+    ``slice_supersteps`` supersteps — the graph analogue of continuous
+    batching over a decode slot pool (``serve/decode.py``).
+
+    * ``slots`` — lanes per batched program (the vmap width).  More slots
+      raise throughput on bursty streams but each slice pays every lane's
+      superstep cost (vmap executes frozen lanes as selects).
+    * ``slice_supersteps`` — supersteps per slice between admission
+      points.  Smaller slices free converged lanes sooner (lower queue
+      latency) at the cost of more host round-trips; convergence is
+      checked once per slice, never mid-slice.
+    * ``max_queue`` — queue bound; ``submit`` raises when full (0 =
+      unbounded).  Back-pressure, not silent drops.
+    * ``coalesce`` — identical in-flight queries (same program identity,
+      same root) share one lane and one answer instead of burning a slot
+      each.
+    """
+
+    slots: int = 8               # lanes per batched program
+    slice_supersteps: int = 4    # supersteps between admission points
+    max_queue: int = 0           # submit() bound; 0 = unbounded
+    coalesce: bool = True        # duplicate queries share a lane
+
+    def __post_init__(self):
+        if self.slots < 1:
+            raise ValueError("slots must be >= 1")
+        if self.slice_supersteps < 1:
+            raise ValueError("slice_supersteps must be >= 1")
+        if self.max_queue < 0:
+            raise ValueError("max_queue must be >= 0 (0 = unbounded)")
+
+    def describe(self) -> str:
+        """One-line summary for reports and benchmark payloads."""
+        q = self.max_queue or "unbounded"
+        return (f"slots={self.slots} slice={self.slice_supersteps} "
+                f"queue={q} coalesce={self.coalesce}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ScheduleConfig:
     """Paper Algorithm 1, line 5: ``Set Pipeline = 8, PE = 1``."""
 

@@ -70,6 +70,7 @@ import collections
 import dataclasses
 import functools
 import time
+import typing
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -90,7 +91,7 @@ from .scheduler import (DirectionPolicy, ScheduleConfig, SchedulePlan, plan,
                         pull_block_capacities, push_capacity_tiers)
 
 __all__ = ["classify_gather", "TranslationReport", "CompiledGraphProgram",
-           "translate"]
+           "BatchLaneState", "translate"]
 
 P = jax.sharding.PartitionSpec
 
@@ -103,6 +104,42 @@ _COLLECTIVES = {"psum": jax.lax.psum, "pmin": jax.lax.pmin,
 # ---------------------------------------------------------------------------
 # Compiled artifact
 # ---------------------------------------------------------------------------
+
+
+class BatchLaneState(typing.NamedTuple):
+    """Resumable per-lane state of a batched run — the continuation hook.
+
+    Mirrors the staged while-loop's carry exactly (values, frontier,
+    iteration counter, the direction register, and every stats counter),
+    with a leading lane axis on each field, so a run can stop after any
+    superstep and resume bit-exactly: the direction register and the
+    measured pull-cost register are part of the state, so an ``'auto'``
+    lane resumed mid-run makes the same per-superstep direction choices a
+    sequential :meth:`CompiledGraphProgram.run` would have made.
+
+    Produced by :meth:`CompiledGraphProgram.batch_init`, advanced by
+    :meth:`CompiledGraphProgram.run_batch_slice`, recycled lane-by-lane by
+    :meth:`CompiledGraphProgram.lane_admit` — the primitive the serving
+    plane (:mod:`repro.serve.graph_serve`) builds continuous batching on:
+    converged lanes free their slots for waiting queries without
+    restarting (or perturbing) the still-running lanes.
+    """
+
+    values: jax.Array        # (k, V) per-lane vertex tables
+    active: jax.Array        # (k, V) bool frontiers
+    iters: jax.Array         # (k,) supersteps executed per lane
+    direction: jax.Array     # (k,) direction register (0=pull, 1=push)
+    pushes: jax.Array        # (k,) push supersteps
+    compact: jax.Array       # (k,) compacted push supersteps
+    switches: jax.Array      # (k,) direction switches
+    pe_hi: jax.Array         # (k,) push edge counter, high 16-bit words
+    pe_lo: jax.Array         # (k,) push edge counter, low words
+    pe_rows: jax.Array       # (k, pes) live fwd-ELL rows per PE
+    pl_hi: jax.Array         # (k,) pull swept-edge counter, high words
+    pl_lo: jax.Array         # (k,) pull swept-edge counter, low words
+    bl_swept: jax.Array      # (k,) pull blocks swept (bitmap plane)
+    bl_skip: jax.Array       # (k,) pull blocks skipped
+    pull_cost: jax.Array     # (k,) measured pull-cost register
 
 
 @dataclasses.dataclass
@@ -250,6 +287,36 @@ class CompiledGraphProgram:
         """
         if mode in self._loop_cache:
             return self._loop_cache[mode]
+        cond, body = self._loop_fns(mode)
+        E = self._num_edges
+        n_pe = self._push_stat_pes
+
+        @jax.jit
+        def loop(values, active):
+            z = jnp.asarray(0, jnp.int32)
+            state = (values, active, z, z, z, z, z, z, z,
+                     jnp.zeros((n_pe,), jnp.int32), z, z, z, z,
+                     jnp.asarray(E, jnp.int32))
+            values, active, iters, _, pushes, compact, switches, \
+                pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, \
+                pull_cost = jax.lax.while_loop(cond, body, state)
+            return values, iters, (pushes, compact, switches, pe_hi, pe_lo,
+                                   pe_rows, pl_hi, pl_lo, bl_swept, bl_skip,
+                                   pull_cost)
+
+        self._loop_cache[mode] = loop
+        return loop
+
+    def _loop_fns(self, mode: str):
+        """The staged loop's ``(cond, body)`` over the 15-field lane state.
+
+        Shared by :meth:`_staged_loop` (run-to-convergence) and the
+        budgeted slice loop behind :meth:`run_batch_slice` — one body
+        means a sliced run steps through the *identical* superstep
+        sequence a monolithic run would, so continuation is bit-exact by
+        construction.  The state tuple field order is exactly
+        :class:`BatchLaneState` (without the lane axis).
+        """
         pull, push = self._superstep, self._push_superstep
         policy = self._direction
         V, E = self._num_vertices, self._num_edges
@@ -351,21 +418,7 @@ class CompiledGraphProgram:
                 switches, pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, \
                 bl_skip, pull_cost
 
-        @jax.jit
-        def loop(values, active):
-            z = jnp.asarray(0, jnp.int32)
-            state = (values, active, z, z, z, z, z, z, z,
-                     jnp.zeros((n_pe,), jnp.int32), z, z, z, z,
-                     jnp.asarray(E, jnp.int32))
-            values, active, iters, _, pushes, compact, switches, \
-                pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, \
-                pull_cost = jax.lax.while_loop(cond, body, state)
-            return values, iters, (pushes, compact, switches, pe_hi, pe_lo,
-                                   pe_rows, pl_hi, pl_lo, bl_swept, bl_skip,
-                                   pull_cost)
-
-        self._loop_cache[mode] = loop
-        return loop
+        return cond, body
 
     def run(self, roots=None, values=None):
         """Paper Algorithm 1's while-loop, as a device-side while_loop.
@@ -480,33 +533,9 @@ class CompiledGraphProgram:
                         pl_hi, pl_lo, bl_swept, bl_skip, _) = \
             jax.vmap(one)(roots)
         iters_np = np.asarray(iters)
-        pushes_np = np.asarray(pushes)
-        pulls_np = iters_np - pushes_np
-        push_edges = (np.asarray(pe_hi).astype(np.int64) << 16) \
-            + np.asarray(pe_lo)
-        pull_edges = (np.asarray(pl_hi).astype(np.int64) << 16) \
-            + np.asarray(pl_lo)
-        exchanges_np = {"pull": pulls_np, "push": np.asarray(compact)}.get(
-            self._exchange_plane, np.zeros_like(pulls_np))
-        stats = {
-            "batch_size": int(roots.shape[0]),
-            "push_supersteps": pushes_np.tolist(),
-            "push_compacted_supersteps": np.asarray(compact).tolist(),
-            "push_fallback_supersteps": (pushes_np
-                                         - np.asarray(compact)).tolist(),
-            "pull_supersteps": pulls_np.tolist(),
-            "direction_switches": np.asarray(switches).tolist(),
-            "edges_traversed": (pull_edges + push_edges).tolist(),
-            "pes": self.report.pes,
-            "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
-            "pull_blocks_swept": np.asarray(bl_swept).tolist(),
-            "pull_blocks_skipped": np.asarray(bl_skip).tolist(),
-            # per-lane *logical* counts (the algorithmic cost model);
-            # physical accounting differs under vmap — see below
-            "exchange_supersteps": exchanges_np.tolist(),
-            "exchange_bytes": (exchanges_np.astype(np.int64)
-                               * self._collective_bytes).tolist(),
-        }
+        stats = self._batch_stats(iters, pushes, compact, switches, pe_hi,
+                                  pe_lo, pe_rows, pl_hi, pl_lo, bl_swept,
+                                  bl_skip)
         if self._comm is not None and self._exchange_plane is not None:
             # physical traffic: vmap lowers the direction/tier conds to
             # execute-both-branches selects and converged lanes keep
@@ -520,6 +549,157 @@ class CompiledGraphProgram:
         self.last_run_stats = stats
         self.report.run_stats = stats
         return values, iters
+
+    def _batch_stats(self, iters, pushes, compact, switches, pe_hi, pe_lo,
+                     pe_rows, pl_hi, pl_lo, bl_swept, bl_skip) -> dict:
+        """Per-lane stats lists from device counters (one host transfer).
+
+        Shared by :meth:`run_batch` (counters straight off the vmapped
+        loop) and :meth:`lane_stats` (counters off a
+        :class:`BatchLaneState`) so both surfaces report identically.
+        """
+        (iters_np, pushes_np, compact_np, switches_np, pe_hi_np, pe_lo_np,
+         pe_rows_np, pl_hi_np, pl_lo_np, bl_swept_np, bl_skip_np) = \
+            (np.asarray(a) for a in jax.device_get(
+                (iters, pushes, compact, switches, pe_hi, pe_lo, pe_rows,
+                 pl_hi, pl_lo, bl_swept, bl_skip)))
+        pulls_np = iters_np - pushes_np
+        push_edges = (pe_hi_np.astype(np.int64) << 16) + pe_lo_np
+        pull_edges = (pl_hi_np.astype(np.int64) << 16) + pl_lo_np
+        exchanges_np = {"pull": pulls_np, "push": compact_np}.get(
+            self._exchange_plane, np.zeros_like(pulls_np))
+        return {
+            "batch_size": int(iters_np.shape[0]),
+            "push_supersteps": pushes_np.tolist(),
+            "push_compacted_supersteps": compact_np.tolist(),
+            "push_fallback_supersteps": (pushes_np - compact_np).tolist(),
+            "pull_supersteps": pulls_np.tolist(),
+            "direction_switches": switches_np.tolist(),
+            "edges_traversed": (pull_edges + push_edges).tolist(),
+            "pes": self.report.pes,
+            "push_live_rows_per_pe": pe_rows_np.tolist(),
+            "pull_blocks_swept": bl_swept_np.tolist(),
+            "pull_blocks_skipped": bl_skip_np.tolist(),
+            # per-lane *logical* counts (the algorithmic cost model);
+            # physical accounting differs under vmap — see run_batch
+            "exchange_supersteps": exchanges_np.tolist(),
+            "exchange_bytes": (exchanges_np.astype(np.int64)
+                               * self._collective_bytes).tolist(),
+        }
+
+    # -- lane-level continuation: resumable batched runs (serving plane) ---
+
+    def _fresh_lane(self, root) -> BatchLaneState:
+        """One lane's freshly-rooted full loop state (no lane axis)."""
+        values, active = self._init_state(roots=root)
+        z = jnp.asarray(0, jnp.int32)
+        return BatchLaneState(
+            values=values, active=active, iters=z, direction=z, pushes=z,
+            compact=z, switches=z, pe_hi=z, pe_lo=z,
+            pe_rows=jnp.zeros((self._push_stat_pes,), jnp.int32),
+            pl_hi=z, pl_lo=z, bl_swept=z, bl_skip=z,
+            pull_cost=jnp.asarray(self._num_edges, jnp.int32))
+
+    def batch_init(self, roots) -> BatchLaneState:
+        """Root a k-lane :class:`BatchLaneState` without running any steps.
+
+        Each lane carries the *complete* staged-loop carry, so slicing the
+        batch with :meth:`run_batch_slice` replays the exact superstep
+        sequence ``run``/``run_batch`` would execute — answers are
+        bit-exact against the sequential oracle by construction.
+        """
+        key = ("batch_init",)
+        fn = self._loop_cache.get(key)
+        if fn is None:
+            fn = jax.jit(jax.vmap(self._fresh_lane))
+            self._loop_cache[key] = fn
+        return fn(jnp.asarray(roots))
+
+    def batch_idle(self, slots: int) -> BatchLaneState:
+        """An all-idle k-lane state: every lane converged, awaiting admit.
+
+        Idle lanes have an empty frontier, so the slice loop's per-lane
+        convergence guard freezes them for free — they cost selects, not
+        extra supersteps, until :meth:`lane_admit` roots a query into
+        them.
+        """
+        state = self.batch_init(jnp.zeros((slots,), jnp.int32))
+        return state._replace(active=jnp.zeros_like(state.active))
+
+    def lane_admit(self, state: BatchLaneState, lane,
+                   root) -> BatchLaneState:
+        """Overwrite one lane with a freshly-rooted query, others frozen.
+
+        ``lane`` and ``root`` are traced scalars, so admitting into any
+        slot reuses one compiled executable.
+        """
+        key = ("lane_admit",)
+        fn = self._loop_cache.get(key)
+        if fn is None:
+            fresh_lane = self._fresh_lane
+
+            @jax.jit
+            def admit(state, lane, root):
+                fresh = fresh_lane(root)
+                return jax.tree.map(
+                    lambda full, one: full.at[lane].set(one), state, fresh)
+
+            fn = admit
+            self._loop_cache[key] = fn
+        return fn(state, jnp.asarray(lane, jnp.int32),
+                  jnp.asarray(root, jnp.int32))
+
+    def run_batch_slice(self, state: BatchLaneState,
+                        budget) -> BatchLaneState:
+        """Advance every live lane by at most ``budget`` supersteps.
+
+        The slice loop is the run-to-convergence loop plus a step budget:
+        same cond/body (direction decisions, counters, freeze guards all
+        identical), so N slices concatenated partition the exact
+        superstep sequence a single ``run_batch`` executes — resuming is
+        bit-exact, including per-lane ``'auto'`` direction choices (the
+        carried ``direction``/``pull_cost`` registers see the same values
+        they would mid-run).  Converged lanes freeze inside the slice;
+        the serving plane harvests them (:meth:`lane_done`), frees their
+        slots, and admits queued queries without restarting slow lanes.
+
+        ``budget`` is a traced scalar — one compiled executable serves
+        every slice length.  Unlike :meth:`run_batch`, slices record no
+        physical comm traffic on the translation-time comm manager (the
+        serving plane accounts per-harvest via :meth:`lane_stats`).
+        """
+        key = ("slice", self._mode)
+        fn = self._loop_cache.get(key)
+        if fn is None:
+            cond, body = self._loop_fns(self._mode)
+
+            def one(state, budget):
+                def scond(s):
+                    return jnp.logical_and(cond(s[:-1]), s[-1] < budget)
+
+                def sbody(s):
+                    return (*body(s[:-1]), s[-1] + 1)
+
+                out = jax.lax.while_loop(
+                    scond, sbody, (*state, jnp.asarray(0, jnp.int32)))
+                return BatchLaneState(*out[:-1])
+
+            fn = jax.jit(jax.vmap(one, in_axes=(0, None)))
+            self._loop_cache[key] = fn
+        return fn(state, jnp.asarray(budget, jnp.int32))
+
+    def lane_done(self, state: BatchLaneState) -> np.ndarray:
+        """Host bool (k,): lane converged (empty frontier or max_iters)."""
+        return np.asarray(jnp.logical_or(
+            ~jnp.any(state.active, axis=1),
+            state.iters >= self.max_iters))
+
+    def lane_stats(self, state: BatchLaneState) -> dict:
+        """Per-lane run stats for a sliced batch (same keys as run_batch)."""
+        return self._batch_stats(
+            state.iters, state.pushes, state.compact, state.switches,
+            state.pe_hi, state.pe_lo, state.pe_rows, state.pl_hi,
+            state.pl_lo, state.bl_swept, state.bl_skip)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,486 @@
+"""Graph-query serving plane: continuous-batched multi-source traversal.
+
+The paper's third pillar is a host-side *runtime scheduler + communication
+manager* sitting above the generated accelerator modules.  The engine core
+(IR → passes → push/pull/auto kernels → multi-PE comm) translates and runs
+single programs; this module is the product surface that *serves* them: a
+request queue accepts ``(program, root, kind)`` queries (bfs / sssp / ppr),
+coalesces compatible requests into fixed-slot batches, and runs them with
+per-lane freeze/continuation so converged lanes free their slots for
+waiting queries without restarting slow lanes — continuous batching, the
+graph analogue of the decode slot pool in :mod:`repro.serve.decode`.
+
+Structure::
+
+    submit ──► queue ──► _BatchGroup (one per compiled program)
+                           │  lane_admit into idle lanes
+                           │  run_batch_slice(budget)      ← AdmissionPolicy
+                           │  lane_done → harvest → free slot
+                           ▼
+                         done (answers bit-exact vs sequential run())
+
+Correctness is *by construction*, not by re-derivation: a lane's
+:class:`~repro.core.translator.BatchLaneState` carries the complete staged
+while-loop state (including the direction register and the measured
+pull-cost register), so slicing partitions the exact superstep sequence a
+sequential ``run(roots=root)`` would execute.  The differential harness
+(``tests/test_graph_serve.py``) pins every served answer against that
+oracle across templates × directions × arrival orders.
+
+Point-to-point distance queries (``kind='dist'``) are answered from a
+precomputed :class:`LandmarkTable` — SSSP from k landmark roots gives
+triangle-inequality bounds; when lower == upper the answer is served
+without touching the engine, otherwise an exact SSSP falls back through
+the same batch plane.
+
+Compiled programs are cached per program object — the same identity the
+translator's staging cache keys on (memoized DSL templates return the
+*same* ``VertexProgram`` per parameter tuple), so a server never holds two
+executables for one logical query shape, and the cache here pins the
+entries even if the translator's bounded LRU evicts them.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from ..core import dsl
+from ..core import graph as G
+from ..core.comm import CommManager
+from ..core.scheduler import AdmissionPolicy, ScheduleConfig
+from ..core.translator import CompiledGraphProgram, translate
+
+__all__ = ["GraphQuery", "GraphServer", "LandmarkTable",
+           "build_landmark_table"]
+
+
+# ---------------------------------------------------------------------------
+# Queries
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GraphQuery:
+    """One serving-plane request and, once served, its answer.
+
+    ``kind`` picks the template: ``'bfs'`` / ``'sssp'`` return the full
+    (V,) level/distance vector from ``root``; ``'ppr'`` the personalized
+    PageRank vector (fixed-iteration truncation, per-root program);
+    ``'dist'`` the scalar ``d(root → target)``.  ``result`` is a host
+    numpy array (or float for ``'dist'``); ``served_by`` records the path
+    that produced it: ``'batch'`` (ran in a lane), ``'coalesced'`` (shared
+    an identical in-flight query's lane), ``'landmark'`` (bounds pinned),
+    ``'exact'`` (landmark fallback through the batch plane).
+    """
+
+    qid: int
+    kind: str
+    root: int
+    target: int | None = None
+    program: Any = None
+    status: str = "queued"            # 'queued' | 'running' | 'done'
+    result: Any = None
+    iters: int | None = None
+    stats: dict | None = None
+    served_by: str | None = None
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+    followers: list = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.status == "done"
+
+
+# ---------------------------------------------------------------------------
+# Landmark distance table (dist queries)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LandmarkTable:
+    """Triangle-inequality distance bounds from k landmark SSSP sweeps.
+
+    For landmarks L (directed graph, non-negative weights) the table holds
+    ``d_out[L, v] = d(L → v)`` (SSSP on g) and ``d_in[L, v] = d(v → L)``
+    (SSSP on the transposed graph).  For a query ``s → t``:
+
+    * upper bound: ``min_L d_in[L, s] + d_out[L, t]`` — the best two-leg
+      path s → L → t (∞ + anything stays ∞);
+    * lower bound, from ``d(L,t) ≤ d(L,s) + d(s,t)`` and
+      ``d(s,L) ≤ d(s,t) + d(t,L)``:
+      ``max_L max(d_out[L,t] − d_out[L,s], d_in[L,s] − d_in[L,t], 0)``
+      over finite pairs — and when ``d_out[L,s]`` is finite but
+      ``d_out[L,t]`` is ∞ (or ``d_in[L,t]`` finite but ``d_in[L,s]`` ∞),
+      t is unreachable from s outright: L reaches s (resp. t reaches L),
+      so a finite s→t path would make the ∞ entry finite too.
+
+    The bounds *pin* the answer when lower == upper (including ∞ == ∞,
+    i.e. proven-unreachable) or s == t; otherwise the server falls back to
+    an exact SSSP through the batch plane.
+    """
+
+    landmarks: np.ndarray          # (k,) int32 vertex ids
+    d_out: np.ndarray              # (k, V) float32, d(L -> v)
+    d_in: np.ndarray               # (k, V) float32, d(v -> L)
+
+    def bounds(self, s: int, t: int) -> tuple[float, float]:
+        """(lower, upper) on ``d(s → t)``; equal means pinned."""
+        if s == t:
+            return 0.0, 0.0
+        ls, lt = self.d_in[:, s], self.d_out[:, t]          # s→L, L→t
+        upper = float(np.min(ls + lt)) if ls.size else np.inf
+
+        os_, ot = self.d_out[:, s], self.d_out[:, t]        # L→s, L→t
+        ts, tt = self.d_in[:, s], self.d_in[:, t]           # s→L, t→L
+        # unreachability certificates (see class docstring)
+        if np.any(np.isfinite(os_) & np.isinf(ot)) \
+                or np.any(np.isinf(ts) & np.isfinite(tt)):
+            return np.inf, np.inf if np.isinf(upper) else upper
+        lower = 0.0
+        fin = np.isfinite(os_) & np.isfinite(ot)
+        if np.any(fin):
+            lower = max(lower, float(np.max(ot[fin] - os_[fin])))
+        fin = np.isfinite(ts) & np.isfinite(tt)
+        if np.any(fin):
+            lower = max(lower, float(np.max(ts[fin] - tt[fin])))
+        return lower, upper
+
+    def pinned(self, s: int, t: int) -> bool:
+        lo, up = self.bounds(s, t)
+        return lo == up or (np.isinf(lo) and np.isinf(up))
+
+
+def choose_landmarks(g: G.Graph, k: int) -> np.ndarray:
+    """Deterministic landmark pick: top-k by total degree, ties by id.
+
+    High-degree vertices sit on many shortest paths, so their SSSP sweeps
+    pin the most queries; the sort is stable on vertex id, so rebuilds of
+    the same graph choose the same landmarks.
+    """
+    out_deg = np.asarray(g.out_degrees)
+    in_deg = np.bincount(np.asarray(g.edges_dst),
+                         minlength=g.num_vertices)[:g.num_vertices]
+    total = out_deg + in_deg
+    order = np.lexsort((np.arange(g.num_vertices), -total))
+    return order[:min(k, g.num_vertices)].astype(np.int32)
+
+
+def build_landmark_table(g: G.Graph, k: int, *,
+                         schedule: ScheduleConfig | None = None,
+                         use_pallas: bool | None = None) -> LandmarkTable:
+    """SSSP from k landmarks on g and its transpose, batched per sweep.
+
+    Both sweeps run through the same translate/run_batch plane the server
+    uses, so table entries are bit-identical to served SSSP answers —
+    the bound-sanity tests rely on that.  Deterministic: landmark choice
+    is degree-ranked (stable) and the engine is bit-exact across modes.
+    """
+    lm = choose_landmarks(g, k)
+    prog = dsl.sssp_program()
+    fwd = translate(prog, g, schedule, use_pallas=use_pallas)
+    d_out, _ = fwd.run_batch(lm)
+    bwd = translate(prog, G.reverse(g), schedule, use_pallas=use_pallas)
+    d_in, _ = bwd.run_batch(lm)
+    return LandmarkTable(landmarks=lm,
+                         d_out=np.asarray(d_out, np.float32),
+                         d_in=np.asarray(d_in, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Batch groups: one fixed slot pool per compiled program
+# ---------------------------------------------------------------------------
+
+
+class _BatchGroup:
+    """A fixed ``slots``-lane batch over one compiled program.
+
+    Mirrors :class:`repro.serve.decode.BatchScheduler`'s slot pool:
+    ``occupants[lane]`` is the query running in that lane (None = idle),
+    ``waiting`` holds admitted-but-unslotted queries.  The lane state is
+    the translator's :class:`BatchLaneState`; admission writes one lane
+    (`lane_admit`), slices advance every live lane, harvest frees lanes
+    whose query converged.
+    """
+
+    def __init__(self, compiled: CompiledGraphProgram, slots: int):
+        self.compiled = compiled
+        self.slots = slots
+        self.state = compiled.batch_idle(slots)
+        self.occupants: list[GraphQuery | None] = [None] * slots
+        self.waiting: collections.deque[GraphQuery] = collections.deque()
+        self.supersteps = 0            # sliced supersteps executed (max lane)
+
+    @property
+    def idle(self) -> bool:
+        return not self.waiting and all(q is None for q in self.occupants)
+
+    def admit(self) -> int:
+        """Fill idle lanes from the waiting queue; returns admits done."""
+        n = 0
+        for lane, occ in enumerate(self.occupants):
+            if occ is None and self.waiting:
+                q = self.waiting.popleft()
+                self.state = self.compiled.lane_admit(self.state, lane,
+                                                      q.root)
+                self.occupants[lane] = q
+                q.status = "running"
+                n += 1
+        return n
+
+    def slice(self, budget: int) -> None:
+        """Advance live lanes by ≤ budget supersteps (no-op when idle)."""
+        if all(q is None for q in self.occupants):
+            return
+        before = int(np.max(np.asarray(self.state.iters)))
+        self.state = self.compiled.run_batch_slice(self.state, budget)
+        self.supersteps += int(np.max(np.asarray(self.state.iters))) - before
+
+    def harvest(self, now: float) -> list[GraphQuery]:
+        """Complete queries in converged lanes; free their slots."""
+        done_lanes = self.compiled.lane_done(self.state)
+        finished: list[GraphQuery] = []
+        lanes = [i for i, q in enumerate(self.occupants)
+                 if q is not None and done_lanes[i]]
+        if not lanes:
+            return finished
+        stats = self.compiled.lane_stats(self.state)
+        values = np.asarray(self.state.values)
+        iters = np.asarray(self.state.iters)
+        for lane in lanes:
+            q = self.occupants[lane]
+            q.result = values[lane].copy()
+            q.iters = int(iters[lane])
+            q.stats = {k: (v[lane] if isinstance(v, list) else v)
+                       for k, v in stats.items() if k != "batch_size"}
+            q.status = "done"
+            q.served_by = q.served_by or "batch"
+            q.finished_s = now
+            for f in q.followers:
+                f.result = q.result
+                f.iters = q.iters
+                f.stats = q.stats
+                f.status = "done"
+                f.served_by = "coalesced"
+                f.finished_s = now
+                finished.append(f)
+            q.followers = []
+            self.occupants[lane] = None
+            finished.append(q)
+        return finished
+
+
+# ---------------------------------------------------------------------------
+# The server
+# ---------------------------------------------------------------------------
+
+
+class GraphServer:
+    """Continuous-batched graph-query server over one graph.
+
+    >>> server = GraphServer(g, landmarks=4)
+    >>> q1 = server.submit("bfs", root=0)
+    >>> q2 = server.submit("dist", root=3, target=17)
+    >>> server.run()
+    >>> q1.result        # (V,) levels, bit-exact vs translate(...).run()
+    >>> q2.result        # float distance (landmark-pinned or exact)
+
+    One :class:`_BatchGroup` (fixed slot pool, ``AdmissionPolicy.slots``
+    lanes) exists per compiled program; per-root programs like ppr get
+    single-lane groups, since their lanes can't be root-batched.  ``step``
+    is the serving loop body: route queue → admit → slice → harvest;
+    ``run`` drains everything.  All compiled programs are held on the
+    server (same identity the translator's staging cache keys on), so
+    repeat queries never re-stage.
+    """
+
+    KINDS = ("bfs", "sssp", "ppr", "dist")
+
+    def __init__(self, g: G.Graph, *,
+                 schedule: ScheduleConfig | None = None,
+                 admission: AdmissionPolicy | None = None,
+                 landmarks: int = 0,
+                 comm: CommManager | None = None,
+                 use_pallas: bool | None = None,
+                 ppr_damping: float = 0.85, ppr_iters: int = 20):
+        self.graph = g
+        self.schedule = schedule or ScheduleConfig()
+        self.admission = admission or AdmissionPolicy()
+        self._comm = comm
+        self._use_pallas = use_pallas
+        self._ppr_damping = ppr_damping
+        self._ppr_iters = ppr_iters
+        self._programs: dict[Any, CompiledGraphProgram] = {}
+        self._groups: dict[Any, _BatchGroup] = {}
+        self._queue: collections.deque[GraphQuery] = collections.deque()
+        self._inflight: dict[tuple, GraphQuery] = {}
+        self._parked: list[tuple[GraphQuery, GraphQuery]] = []
+        self.done: list[GraphQuery] = []
+        self._next_qid = 0
+        self.table: LandmarkTable | None = (
+            build_landmark_table(g, landmarks, schedule=self.schedule,
+                                 use_pallas=use_pallas)
+            if landmarks > 0 else None)
+
+    # -- submission --------------------------------------------------------
+
+    def _program_for(self, kind: str, root: int):
+        if kind == "bfs":
+            return dsl.bfs_program()
+        if kind in ("sssp", "dist"):
+            return dsl.sssp_program()
+        if kind == "ppr":
+            return dsl.ppr_program(root, damping=self._ppr_damping,
+                                   iters=self._ppr_iters)
+        raise ValueError(f"unsupported query kind: {kind!r} "
+                         f"(one of {self.KINDS})")
+
+    def submit(self, kind: str, root: int, *, target: int | None = None,
+               program=None) -> GraphQuery:
+        """Enqueue a query; returns the (not yet answered) handle.
+
+        ``kind='dist'`` requires ``target`` and may complete immediately
+        when the landmark bounds pin the answer.  ``program`` overrides
+        the template (custom :class:`VertexProgram`); it must be rooted
+        the way bfs/sssp are (``init_state(roots=root)`` semantics).
+        """
+        V = self.graph.num_vertices
+        if not 0 <= int(root) < V:
+            raise ValueError(f"root {root} out of range [0, {V})")
+        if kind == "dist":
+            if target is None:
+                raise ValueError("dist queries need target=")
+            if not 0 <= int(target) < V:
+                raise ValueError(f"target {target} out of range [0, {V})")
+        elif target is not None:
+            raise ValueError(f"target= is only for dist queries, not {kind}")
+        if self.admission.max_queue and \
+                self.pending >= self.admission.max_queue:
+            raise RuntimeError(
+                f"queue full ({self.admission.max_queue}); drain with "
+                "step()/run() before submitting more")
+        q = GraphQuery(qid=self._next_qid, kind=kind, root=int(root),
+                       target=None if target is None else int(target),
+                       program=program or self._program_for(kind, int(root)),
+                       submitted_s=time.perf_counter())
+        self._next_qid += 1
+        if kind == "dist" and self.table is not None:
+            lo, up = self.table.bounds(q.root, q.target)
+            if lo == up or (np.isinf(lo) and np.isinf(up)):
+                q.result = float(up)
+                q.status = "done"
+                q.served_by = "landmark"
+                q.finished_s = time.perf_counter()
+                self.done.append(q)
+                return q
+        self._queue.append(q)
+        return q
+
+    # -- serving loop ------------------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        """Queries accepted but not yet answered."""
+        n = len(self._queue) + len(self._parked)
+        for grp in self._groups.values():
+            n += len(grp.waiting)
+            n += sum(q is not None for q in grp.occupants)
+        n += sum(len(q.followers) for key, q in self._inflight.items())
+        return n
+
+    def _group_for(self, program) -> _BatchGroup:
+        grp = self._groups.get(program)
+        if grp is None:
+            compiled = self._programs.get(program)
+            if compiled is None:
+                compiled = translate(program, self.graph, self.schedule,
+                                     self._comm,
+                                     use_pallas=self._use_pallas)
+                self._programs[program] = compiled
+            # per-root programs (ppr) can't share lanes across roots —
+            # their group is single-lane and distinct per root, relying on
+            # coalescing to fold duplicates into one lane
+            slots = 1 if getattr(program, "name", "") == "ppr" \
+                else self.admission.slots
+            grp = _BatchGroup(compiled, slots)
+            self._groups[program] = grp
+        return grp
+
+    def _route(self) -> None:
+        """Drain the front queue into per-program groups (+ coalescing)."""
+        while self._queue:
+            q = self._queue.popleft()
+            if q.kind == "dist":
+                # exact fallback: ride a full sssp from root through the
+                # batch plane (coalescing with any in-flight sssp from the
+                # same root), then read off values[target] when it lands
+                inner = GraphQuery(qid=-q.qid - 1, kind="sssp",
+                                   root=q.root, program=q.program,
+                                   submitted_s=q.submitted_s)
+                self._parked.append((q, inner))
+                q.status = "running"
+                self._enqueue(inner)
+            else:
+                self._enqueue(q)
+
+    def _enqueue(self, q: GraphQuery) -> None:
+        """Coalesce onto an identical in-flight query or take a lane."""
+        key = (q.program, q.root)
+        if self.admission.coalesce:
+            leader = self._inflight.get(key)
+            if leader is not None and not leader.done:
+                leader.followers.append(q)
+                q.status = "running"
+                return
+            self._inflight[key] = q
+        self._group_for(q.program).waiting.append(q)
+
+    def _resolve_parked(self, now: float) -> None:
+        still: list[tuple[GraphQuery, GraphQuery]] = []
+        for q, inner in self._parked:
+            if inner.done:
+                q.result = float(inner.result[q.target])
+                q.iters = inner.iters
+                q.stats = inner.stats
+                q.status = "done"
+                q.served_by = "exact"
+                q.finished_s = now
+                self.done.append(q)
+            else:
+                still.append((q, inner))
+        self._parked = still
+
+    def step(self) -> bool:
+        """One serving iteration: route → admit → slice → harvest.
+
+        Returns True while the server still holds unanswered queries.
+        """
+        self._route()
+        budget = self.admission.slice_supersteps
+        progressed = False
+        for program, grp in list(self._groups.items()):
+            if grp.idle:
+                continue
+            progressed = True
+            grp.admit()
+            grp.slice(budget)
+            now = time.perf_counter()
+            for q in grp.harvest(now):
+                key = (q.program, q.root)
+                if self._inflight.get(key) is q:
+                    del self._inflight[key]
+                if q.qid >= 0:
+                    self.done.append(q)
+        self._resolve_parked(time.perf_counter())
+        return progressed or bool(self._queue) or bool(self._parked)
+
+    def run(self) -> list[GraphQuery]:
+        """Drain every pending query; returns them in completion order."""
+        while self.pending:
+            if not self.step():
+                break
+        return self.done
