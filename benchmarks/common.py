@@ -14,9 +14,38 @@ import os
 import subprocess
 import time
 
-BENCH_SCHEMA = 2          # bump when any BENCH_*.json payload shape changes
+BENCH_SCHEMA = 3          # bump when any BENCH_*.json payload shape changes
 HISTORY_DIR = os.path.join("reports", "graphs")
 HISTORY_PATH = os.path.join(HISTORY_DIR, "history.jsonl")
+
+
+def memory_snapshot() -> dict:
+    """Peak host RSS plus device memory where the backend exposes it.
+
+    ``peak_host_rss_bytes`` is ``ru_maxrss`` (kilobytes on Linux,
+    already bytes on macOS — normalized to bytes).  Device stats come
+    from ``jax.local_devices()[0].memory_stats()`` when the backend
+    implements it (TPU/GPU; CPU returns None) — the scale sweep's
+    memory column, recorded per payload so the trajectory shows what a
+    scale point *costs*, not just how fast it runs.
+    """
+    import resource
+    import sys
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    if sys.platform != "darwin":
+        rss *= 1024
+    snap: dict = {"peak_host_rss_bytes": int(rss)}
+    try:
+        import jax
+        stats = jax.local_devices()[0].memory_stats()
+        if stats:
+            snap["device_bytes_in_use"] = int(stats.get("bytes_in_use", 0))
+            peak = stats.get("peak_bytes_in_use")
+            if peak is not None:
+                snap["device_peak_bytes_in_use"] = int(peak)
+    except Exception:
+        pass
+    return snap
 
 
 def commit() -> str:

@@ -22,6 +22,15 @@ bytes and supersteps recorded by the run loop, and the interval balance.
 ``--pes`` is a separate invocation from ``--json`` (enforced): forced
 host devices change XLA:CPU scheduling, so the single-PE acceptance
 sweep must never run under them.
+
+``--scale`` runs the out-of-core scale sweep (``benchmarks.scale``:
+partitioned BFS/SSSP over 500k/5M/20M-edge R-MAT containers under a
+partition budget smaller than the edge stream) and merges the payload
+under ``scale_sweep`` — per scale: MTEPS, bytes streamed h2d, partitions
+skipped, transfer/compute overlap efficiency, and a peak-memory
+snapshot.  Each scale point also appends its own history record carrying
+a ``scale`` field, so the trajectory file distinguishes the resident
+acceptance sweep (``scale: "50k/500k"``) from the streamed points.
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ import json
 import os
 import sys
 
-from .common import BENCH_SCHEMA, append_history, stamp as _stamp  # noqa: F401
+from .common import (BENCH_SCHEMA, append_history, memory_snapshot,  # noqa: F401
+                     stamp as _stamp)
 
 
 def _append_history(payload: dict) -> str:
@@ -50,6 +60,9 @@ def _append_history(payload: dict) -> str:
             payload.get("crossover", {}).get(
                 "traversal_reduction_auto_vs_pull"),
         "pull_plane": payload.get("pull_plane"),
+        # every history record names its scale so the streamed scale-sweep
+        # points and this resident acceptance sweep stay distinguishable
+        "scale": "50k/500k",
     }
     return append_history(entry, stamped=payload)
 
@@ -75,7 +88,9 @@ def _run_csv(only: list[str]) -> None:
 
 def _run_json(path: str) -> None:
     from . import direction
-    data = _stamp(direction.collect_sweep())
+    data = direction.collect_sweep()
+    data["memory"] = memory_snapshot()
+    _stamp(data)
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     hist = _append_history(data)
@@ -125,6 +140,45 @@ def _run_pes(max_pes: int, path: str) -> None:
               f"{d['exchange_bytes']} B")
 
 
+def _run_scale(path: str) -> None:
+    from . import scale
+    data = scale.collect_scale_sweep()
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["scale_sweep"] = data
+    _stamp(payload)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"merged scale_sweep into {path}")
+    for label, s in data["scales"].items():
+        b = s["bfs"]
+        append_history({
+            "scale": label,
+            "mteps": {"bfs": b["mteps"]},
+            "wall_s": {"bfs": b["wall_s"]},
+            "partition_bytes_h2d": b["partition_bytes_h2d"],
+            "partitions_skipped": b["partitions_skipped"],
+            "overlap_efficiency": b["overlap_efficiency"],
+            "peak_host_rss_bytes": s["memory"]["peak_host_rss_bytes"],
+        }, stamped=payload)
+        check = s.get("resident_crosscheck_bitexact")
+        extra = "" if check is None else f", resident cross-check={check}"
+        print(f"  scale {label} (V={s['num_vertices']}): "
+              f"bfs {b['mteps']:.1f} MTEPS in {b['wall_s']:.2f}s, "
+              f"{b['partition_bytes_h2d'] / 1e6:.1f} MB h2d, "
+              f"{b['partitions_skipped']}/{b['partitions_swept']} "
+              f"parts skipped/swept, "
+              f"overlap {b['overlap_efficiency']:.2f}{extra}")
+        if "sssp" in s:
+            ss = s["sssp"]
+            print(f"  scale {label}: sssp {ss['mteps']:.1f} MTEPS in "
+                  f"{ss['wall_s']:.2f}s, "
+                  f"{ss['partition_bytes_h2d'] / 1e6:.1f} MB h2d")
+    print(f"  appended {len(data['scales'])} scale records to history")
+
+
 def main() -> None:
     argv = sys.argv[1:]
     max_pes = None
@@ -172,7 +226,20 @@ def main() -> None:
                   "(run --json first, then --pes N to merge pe_sweep)",
                   file=sys.stderr)
             raise SystemExit(2)
+        if "--scale" in argv:
+            print("error: --json and --scale are separate runs "
+                  "(run --json first, then --scale to merge scale_sweep)",
+                  file=sys.stderr)
+            raise SystemExit(2)
         _run_json(argv[0] if argv else "BENCH_graph.json")
+        return
+    if "--scale" in argv:
+        argv.remove("--scale")
+        if max_pes is not None:
+            print("error: --pes and --scale are separate runs",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        _run_scale(argv[0] if argv else "BENCH_graph.json")
         return
     if max_pes is not None:
         _run_pes(max_pes, argv[0] if argv else "BENCH_graph.json")

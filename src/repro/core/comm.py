@@ -45,6 +45,18 @@ class TransferStats:
     collective_supersteps: int = 0
     collective_bytes_total: int = 0
     placements: int = 0
+    # out-of-core partition streaming plane (repro.core.stream): bytes the
+    # double-buffered interval stream actually shipped host→device, how
+    # many partition sweeps that covered, and how many sweeps the bitmap
+    # frontier skipped *before* any transfer.  The wall/prefetch/compute
+    # triple measures transfer↔compute overlap: with perfect overlap
+    # wall ≈ max(prefetch, compute); with none, wall ≈ prefetch + compute.
+    partition_bytes_h2d: int = 0
+    partitions_transferred: int = 0
+    partitions_skipped: int = 0
+    partition_prefetch_s: float = 0.0
+    partition_compute_s: float = 0.0
+    partition_wall_s: float = 0.0
 
     def record_h2d(self, nbytes: int):
         self.host_to_device_bytes += int(nbytes)
@@ -52,6 +64,36 @@ class TransferStats:
 
     def record_d2h(self, nbytes: int):
         self.device_to_host_bytes += int(nbytes)
+
+    def record_partition_h2d(self, nbytes: int, seconds: float = 0.0):
+        """One partition's arrays entered the stream (device_put issued)."""
+        self.partition_bytes_h2d += int(nbytes)
+        self.partitions_transferred += 1
+        self.partition_prefetch_s += float(seconds)
+
+    def record_partition_skip(self, n: int = 1):
+        """Partition sweeps the frontier summary killed before transfer."""
+        self.partitions_skipped += int(n)
+
+    def record_partition_superstep(self, wall_s: float, compute_s: float):
+        """One streamed superstep's wall clock and pure-compute time."""
+        self.partition_wall_s += float(wall_s)
+        self.partition_compute_s += float(compute_s)
+
+    def overlap_efficiency(self) -> float:
+        """Measured transfer/compute overlap of the partition stream, 0..1.
+
+        ``(prefetch + compute − wall) / min(prefetch, compute)``: the
+        fraction of the *overlappable* time (the shorter of the two
+        phases) actually hidden.  1.0 = wall is max(phases); 0.0 = the
+        phases fully serialized (or nothing streamed).
+        """
+        shorter = min(self.partition_prefetch_s, self.partition_compute_s)
+        if shorter <= 0.0 or self.partition_wall_s <= 0.0:
+            return 0.0
+        hidden = (self.partition_prefetch_s + self.partition_compute_s
+                  - self.partition_wall_s)
+        return float(np.clip(hidden / shorter, 0.0, 1.0))
 
     def record_collective(self, nbytes_per_superstep: int, supersteps: int):
         """Accumulate one run's executed exchanges (run-loop wiring).
@@ -246,4 +288,5 @@ class CommManager:
 
     def report(self) -> dict:
         """Stats + status snapshot: per-superstep estimate *and* run totals."""
-        return dataclasses.asdict(self.stats) | self.status()
+        return dataclasses.asdict(self.stats) | self.status() | {
+            "overlap_efficiency": self.stats.overlap_efficiency()}

@@ -126,6 +126,80 @@ def bitmap_select(words: jax.Array, capacity: int,
     return jnp.where(ok, idx, 0), ok
 
 
+def interval_live_counts(words: jax.Array, cuts: jax.Array) -> jax.Array:
+    """Per-interval set-bit counts of a packed bitmap (device-side).
+
+    ``cuts`` is a ``(P+1,)`` int32 array of vertex cut points
+    (``0 = cuts[0] <= ... <= cuts[P] <= 32*len(words)``); the result is the
+    ``(P,)`` count of set bits in each ``[cuts[i], cuts[i+1])`` interval —
+    the cross-partition frontier summary of the out-of-core engine: one
+    popcount cumsum over the words plus a masked partial popcount at each
+    (possibly mid-word) cut, so partitions with no live source vertices
+    are identified in O(V/32 + P) without unpacking the frontier.
+    """
+    nw = words.shape[0]
+    cum = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                           jnp.cumsum(popcount_words(words))])
+
+    def below(n):
+        # set bits among bit positions [0, n)
+        w = n // BITMAP_BITS
+        rem = (n - w * BITMAP_BITS).astype(jnp.uint32)
+        wsafe = jnp.minimum(w, nw - 1)
+        mask = jnp.where(rem > 0,
+                         (jnp.uint32(1) << rem) - jnp.uint32(1),
+                         jnp.uint32(0))
+        partial = jax.lax.population_count(words[wsafe] & mask)
+        return cum[jnp.minimum(w, nw)] \
+            + jnp.where(w < nw, partial, 0).astype(jnp.int32)
+
+    b = jax.vmap(below)(cuts.astype(jnp.int32))
+    return b[1:] - b[:-1]
+
+
+def edge_interval_cuts(out_degrees: np.ndarray, parts: int) -> np.ndarray:
+    """Edge-balanced contiguous vertex cut points (host-side numpy).
+
+    Returns a ``(parts+1,)`` int64 array ``cuts`` with ``cuts[0] == 0``,
+    ``cuts[-1] == V``, monotone non-decreasing, where interval ``i`` owns
+    the out-edges of vertices ``[cuts[i], cuts[i+1])``.  Cut points are
+    chosen on the cumulative out-degree (searchsorted at equal fractions
+    of E) — the same degree-balanced idiom as :func:`shard_forward_ell`'s
+    per-PE row intervals, but on raw vertices so any layout (forward ELL,
+    reversed ELL, COO) can be built per interval.  Intervals may be empty
+    on extreme skew (a hub owning more than E/parts edges).
+    """
+    if parts < 1:
+        raise ValueError(f"parts must be >= 1, got {parts}")
+    deg = np.asarray(out_degrees, np.int64)
+    v = len(deg)
+    cum = np.zeros(v + 1, np.int64)
+    np.cumsum(deg, out=cum[1:])
+    targets = cum[-1] * np.arange(1, parts, dtype=np.float64) / parts
+    inner = np.searchsorted(cum[1:], targets, side="left") + 1
+    cuts = np.concatenate([[0], np.clip(inner, 0, v), [v]])
+    return np.maximum.accumulate(cuts).astype(np.int64)
+
+
+def partition_coo(g: "Graph", lo: int, hi: int
+                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """One source-vertex interval's edges as host COO ``(src, dst, wgt)``.
+
+    The resident-graph slice behind the partitioned engine's lazy layout
+    builds: CSR groups edges by source, so interval ``[lo, hi)`` is the
+    contiguous edge range ``offsets[lo]:offsets[hi]`` — no scan over E.
+    Vertex ids stay global (the per-partition partial tables are
+    full-width and combine across partitions).
+    """
+    offsets = np.asarray(g.edge_offsets).astype(np.int64)
+    e0, e1 = int(offsets[lo]), int(offsets[hi])
+    deg = offsets[lo + 1:hi + 1] - offsets[lo:hi]
+    src = np.repeat(np.arange(lo, hi, dtype=np.int32), deg)
+    dst = np.asarray(g.edges_dst)[e0:e1]
+    wgt = np.asarray(g.edge_weights)[e0:e1]
+    return src, dst.astype(np.int32), wgt
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Graph:

@@ -166,11 +166,53 @@ class GraphLayouts:
                 lambda: G.shard_forward_ell(fe, pes))
         return self._forward_ell_shards[key]
 
+    def nbytes(self) -> int:
+        """Bytes resident in the *derived* products (base graph excluded).
+
+        Products can share buffers (a shard view aliasing its flat ELL
+        counts once per holder), so this is an upper bound — the right
+        direction for a budget.
+        """
+        products = [self._reverse, self._reverse_bucketed, self._reverse_coo,
+                    *self._forward_ell.values(),
+                    *self._forward_ell_shards.values(),
+                    *self._pull_plan.values()]
+        return sum(_product_nbytes(p) for p in products if p is not None)
+
+    def stats(self) -> dict:
+        """Per-entry report: resident bytes + what was built and for how long."""
+        return {"resident_bytes": self.nbytes(),
+                "products": sorted(self.build_times_s),
+                "build_times_s": dict(self.build_times_s)}
+
+
+def _product_nbytes(obj) -> int:
+    """Total array bytes reachable from a layout product.
+
+    Arrays (numpy or jax) report ``nbytes``; dataclasses, tuples, lists
+    and dicts are walked.  Scalars and unknown leaves count zero.
+    """
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return 0
+    nb = getattr(obj, "nbytes", None)
+    if isinstance(nb, (int, np.integer)):
+        return int(nb)
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        return sum(_product_nbytes(getattr(obj, f.name))
+                   for f in dataclasses.fields(obj))
+    if isinstance(obj, dict):
+        return sum(_product_nbytes(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(_product_nbytes(v) for v in obj)
+    return 0
+
 
 _LAYOUT_CACHE: collections.OrderedDict = collections.OrderedDict()
 _LAYOUT_CACHE_MAX = 8
+_LAYOUT_CACHE_MAX_BYTES: int | None = None
 _layout_cache_hits = 0
 _layout_cache_misses = 0
+_layout_cache_evictions = 0
 
 
 def _layout_key(g: G.Graph) -> tuple:
@@ -196,20 +238,75 @@ def layouts_for(g: G.Graph) -> GraphLayouts:
             and hit.graph.edge_weights is g.edge_weights:
         _LAYOUT_CACHE.move_to_end(key)
         _layout_cache_hits += 1
+        # entries grow lazily after insertion — re-check the byte budget
+        _enforce_layout_budget(keep=key)
         return hit
     entry = GraphLayouts(graph=g)
     _LAYOUT_CACHE[key] = entry
     _LAYOUT_CACHE.move_to_end(key)
-    while len(_LAYOUT_CACHE) > _LAYOUT_CACHE_MAX:
-        _LAYOUT_CACHE.popitem(last=False)
+    _enforce_layout_budget(keep=key)
     _layout_cache_misses += 1
     return entry
 
 
+def _enforce_layout_budget(keep: tuple | None = None) -> None:
+    """Evict LRU entries past the entry cap or the byte budget.
+
+    ``keep`` (the entry just inserted or hit) is never evicted, so a
+    single graph larger than the budget still translates — the budget
+    bounds what is *retained across* graphs, not one graph's floor.
+    """
+    global _layout_cache_evictions
+
+    def over() -> bool:
+        if len(_LAYOUT_CACHE) > _LAYOUT_CACHE_MAX:
+            return True
+        return (_LAYOUT_CACHE_MAX_BYTES is not None
+                and layout_cache_resident_bytes() > _LAYOUT_CACHE_MAX_BYTES)
+
+    while over():
+        victim = next((k for k in _LAYOUT_CACHE if k != keep), None)
+        if victim is None:
+            break
+        del _LAYOUT_CACHE[victim]
+        _layout_cache_evictions += 1
+
+
+def set_layout_cache_limit(max_bytes: int | None, *,
+                           max_entries: int | None = None) -> None:
+    """Set the layout-cache byte budget (``None`` = unbounded).
+
+    ``max_entries`` optionally re-caps the entry count as well.  The new
+    limits are enforced immediately against whatever is resident.
+    """
+    global _LAYOUT_CACHE_MAX, _LAYOUT_CACHE_MAX_BYTES
+    if max_bytes is not None and max_bytes < 0:
+        raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+    _LAYOUT_CACHE_MAX_BYTES = max_bytes
+    if max_entries is not None:
+        if max_entries < 1:
+            raise ValueError(f"max_entries must be >= 1, got {max_entries}")
+        _LAYOUT_CACHE_MAX = max_entries
+    _enforce_layout_budget()
+
+
+def layout_cache_resident_bytes() -> int:
+    """Derived-product bytes currently held across all cached layouts."""
+    return sum(e.nbytes() for e in _LAYOUT_CACHE.values())
+
+
 def layout_cache_info() -> dict:
-    """Cache observability for tests/benchmarks: hits, misses, size."""
+    """Cache observability for tests/benchmarks.
+
+    Hits/misses/size as before, plus the byte-budget view: resident
+    derived-product bytes, the configured ``max_bytes`` (``None`` when
+    unbounded), and how many entries the budget has evicted.
+    """
     return {"hits": _layout_cache_hits, "misses": _layout_cache_misses,
-            "size": len(_LAYOUT_CACHE)}
+            "size": len(_LAYOUT_CACHE),
+            "resident_bytes": layout_cache_resident_bytes(),
+            "max_bytes": _LAYOUT_CACHE_MAX_BYTES,
+            "evictions": _layout_cache_evictions}
 
 
 def layout_cache_clear() -> None:
@@ -219,10 +316,187 @@ def layout_cache_clear() -> None:
     release layout memory call
     ``repro.core.translator.staging_cache_clear()`` first.
     """
-    global _layout_cache_hits, _layout_cache_misses
+    global _layout_cache_hits, _layout_cache_misses, _layout_cache_evictions
     _LAYOUT_CACHE.clear()
     _layout_cache_hits = 0
     _layout_cache_misses = 0
+    _layout_cache_evictions = 0
+
+
+# ---------------------------------------------------------------------------
+# 2c) PartitionStore — byte-budgeted per-partition streamed layouts
+# ---------------------------------------------------------------------------
+
+
+def _ell_pack(keys: np.ndarray, slots: np.ndarray, wgt: np.ndarray, *,
+              width: int, rows: int, num_vertices: int) -> dict:
+    """Pack grouped COO into a fixed-shape width-``width`` ELL.
+
+    ``keys`` must be sorted ascending (the group id per edge — source for
+    the push plane, destination/owner for pull); each group's edges fill
+    ``ceil(count/width)`` rows.  Output arrays are padded to exactly
+    ``rows`` rows so every partition of a plane shares one shape (one jit
+    trace streams them all): pad key/slot = ``num_vertices`` (the safe
+    index into a ``(V+1,)`` partial table), pad weight = 0.
+    """
+    keys = np.asarray(keys)
+    n = len(keys)
+    row_key = np.full(rows, num_vertices, np.int32)
+    slot = np.full((rows, width), num_vertices, np.int32)
+    w = np.zeros((rows, width), np.float32)
+    if n:
+        uniq, counts = np.unique(keys, return_counts=True)
+        rows_per = -(-counts // width)
+        starts = np.zeros(len(uniq), np.int64)
+        np.cumsum(counts[:-1], out=starts[1:])
+        row0 = np.zeros(len(uniq), np.int64)
+        np.cumsum(rows_per[:-1], out=row0[1:])
+        within = np.arange(n) - np.repeat(starts, counts)
+        r = np.repeat(row0, counts) + within // width
+        c = within % width
+        used = int(rows_per.sum())
+        if used > rows:
+            raise ValueError(f"ELL needs {used} rows, given {rows}")
+        row_key[:used] = np.repeat(uniq, rows_per).astype(np.int32)
+        slot[r, c] = np.asarray(slots, np.int32)
+        w[r, c] = np.asarray(wgt, np.float32)
+    return {"key": row_key, "slot": slot, "wgt": w}
+
+
+class PartitionStore:
+    """Byte-budgeted LRU of per-partition streamed ELL layouts.
+
+    The out-of-core engine's host-side data plane: partitions are
+    contiguous source-vertex intervals (``cuts``), and each has two lazy
+    layouts keyed ``(p, plane)`` —
+
+    * ``push``: forward ELL, rows grouped by **source** (``key`` = global
+      src id, ``slot`` = destinations);
+    * ``pull``: reversed ELL, rows grouped by **destination/owner**
+      (``key`` = global dst id, ``slot`` = senders).
+
+    All partitions of a plane are padded to that plane's max row count,
+    so the streamed superstep kernel traces once and every partition's
+    arrays are donatable jit *arguments*, not baked constants.  Layouts
+    build lazily from one partition's COO (``Graph`` slice or
+    ``PartitionContainer`` member) and evict LRU past ``max_bytes`` —
+    but never below two entries, the double-buffer floor.
+    """
+
+    def __init__(self, source, cuts, *, width: int = 8,
+                 max_bytes: int | None = None):
+        self.source = source
+        self.cuts = np.asarray(cuts, np.int64)
+        self.partitions = len(self.cuts) - 1
+        self.width = int(width)
+        self.max_bytes = max_bytes
+        self.num_vertices = int(source.num_vertices)
+        deg = np.asarray(source.out_degrees, np.int64)
+        cum = np.zeros(self.num_vertices + 1, np.int64)
+        np.cumsum(deg, out=cum[1:])
+        self.edges_per_partition = cum[self.cuts[1:]] - cum[self.cuts[:-1]]
+        push = np.asarray([
+            int((-(-deg[self.cuts[p]:self.cuts[p + 1]] // self.width)).sum())
+            for p in range(self.partitions)], np.int64)
+        self.push_rows_max = max(int(push.max(initial=0)), 1)
+        self.pull_rows_max = max(int(self._pull_rows().max(initial=0)), 1)
+        self._entry_bytes = {
+            plane: rows * (4 + 8 * self.width)
+            for plane, rows in (("push", self.push_rows_max),
+                                ("pull", self.pull_rows_max))}
+        self._cache: collections.OrderedDict = collections.OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.builds = 0
+        self.build_s = 0.0
+
+    def _pull_rows(self) -> np.ndarray:
+        """Exact per-partition pull (dst-grouped) row counts.
+
+        Containers precompute these at build time for the matching width;
+        otherwise one pass over each partition's destinations counts them
+        (for a resident ``Graph`` that is a cheap slice + bincount).
+        """
+        pr = getattr(self.source, "pull_rows", None)
+        if pr is not None and getattr(self.source, "width", None) == self.width:
+            return np.asarray(pr, np.int64)
+        rows = np.zeros(self.partitions, np.int64)
+        for p in range(self.partitions):
+            _, dst, _ = self._coo(p)
+            if len(dst):
+                cnt = np.bincount(dst)
+                rows[p] = int((-(-cnt // self.width)).sum())
+        return rows
+
+    def _coo(self, p: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        if hasattr(self.source, "partition_coo"):
+            return self.source.partition_coo(p)
+        return G.partition_coo(self.source, int(self.cuts[p]),
+                               int(self.cuts[p + 1]))
+
+    def push_arrays(self, p: int) -> dict:
+        """Partition ``p``'s forward (src-grouped) streamed ELL."""
+        return self._get(p, "push")
+
+    def pull_arrays(self, p: int) -> dict:
+        """Partition ``p``'s reversed (dst-grouped) streamed ELL."""
+        return self._get(p, "pull")
+
+    def _get(self, p: int, plane: str) -> dict:
+        key = (p, plane)
+        hit = self._cache.get(key)
+        if hit is not None:
+            self._cache.move_to_end(key)
+            self.hits += 1
+            return hit
+        self.misses += 1
+        self.builds += 1
+        t0 = time.perf_counter()
+        src, dst, wgt = self._coo(p)
+        if plane == "push":
+            order = np.argsort(src, kind="stable")
+            entry = _ell_pack(src[order], dst[order], wgt[order],
+                              width=self.width, rows=self.push_rows_max,
+                              num_vertices=self.num_vertices)
+        else:
+            order = np.argsort(dst, kind="stable")
+            entry = _ell_pack(dst[order], src[order], wgt[order],
+                              width=self.width, rows=self.pull_rows_max,
+                              num_vertices=self.num_vertices)
+        self.build_s += time.perf_counter() - t0
+        self._cache[key] = entry
+        self._evict(keep=key)
+        return entry
+
+    def _evict(self, keep: tuple) -> None:
+        if self.max_bytes is None:
+            return
+        while (self.resident_bytes() > self.max_bytes
+               and len(self._cache) > 2):
+            victim = next((k for k in self._cache if k != keep), None)
+            if victim is None:
+                break
+            del self._cache[victim]
+            self.evictions += 1
+
+    def resident_bytes(self) -> int:
+        return sum(self._entry_bytes[plane] for _, plane in self._cache)
+
+    def stats(self) -> dict:
+        """Store observability, merged into partitioned run stats."""
+        return {"partitions": self.partitions,
+                "width": self.width,
+                "resident_bytes": self.resident_bytes(),
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "builds": self.builds,
+                "build_s": self.build_s,
+                "push_rows": self.push_rows_max,
+                "pull_rows": self.pull_rows_max,
+                "entry_bytes": dict(self._entry_bytes)}
 
 
 # ---------------------------------------------------------------------------

@@ -167,6 +167,17 @@ class ScheduleConfig:
     # measured block liveness only tracks row liveness below ~8 rows per
     # block, and the flat width-8 view keeps per-block bookkeeping cheap
     pull_block_slots: int = 64
+    # out-of-core partitioned execution: split the edge set into
+    # ``partitions`` contiguous source-vertex intervals and stream each
+    # partition's layouts host→device per superstep (double-buffered),
+    # skipping partitions whose interval holds no live source vertex.
+    # ``partition_budget_bytes`` instead derives the partition count from
+    # a device-memory budget for the streamed edge arrays
+    # (:func:`estimate_stream_bytes`); when both are set the larger
+    # resolved count wins.  ``partitions == 1`` (and no budget) keeps the
+    # resident engine.
+    partitions: int = 1
+    partition_budget_bytes: int | None = None
 
     def __post_init__(self):
         if self.backend not in ("auto", "dense", "sparse"):
@@ -182,6 +193,11 @@ class ScheduleConfig:
                              "multiple of 8")
         if not isinstance(self.direction, DirectionPolicy):
             raise TypeError("direction must be a DirectionPolicy")
+        if self.partitions < 1:
+            raise ValueError("partitions must be >= 1")
+        if self.partition_budget_bytes is not None \
+                and self.partition_budget_bytes < 1:
+            raise ValueError("partition_budget_bytes must be >= 1 (or None)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,6 +218,12 @@ class SchedulePlan:
     chunk_size: int              # edges per chunk (padded, >=1)
     mesh: jax.sharding.Mesh | None   # None → single device
     direction: DirectionPolicy = DirectionPolicy()  # carried from config
+    # out-of-core axis: resolved interval-partition count (1 = resident)
+    # and the byte budget that resolved it (None when count-pinned).  The
+    # plan owns this arithmetic like it owns chunks/PEs — the translator
+    # dispatches to the partitioned engine iff ``num_partitions > 1``.
+    num_partitions: int = 1
+    partition_budget_bytes: int | None = None
 
     @property
     def pes(self) -> int:
@@ -210,10 +232,15 @@ class SchedulePlan:
 
     def describe(self) -> str:
         """One-line summary for IR/pass dumps (backend-selection pass)."""
+        parts = ""
+        if self.num_partitions > 1:
+            budget = self.partition_budget_bytes
+            parts = (f" partitions={self.num_partitions}"
+                     + (f"(budget={budget}B)" if budget else ""))
         return (f"backend={self.backend} pipelines={self.num_chunks} "
                 f"chunk_size={self.chunk_size} pes={self.pes} "
                 f"direction={self.direction.describe()} "
-                f"pull_sweep={self.config.pull_sweep}")
+                f"pull_sweep={self.config.pull_sweep}{parts}")
 
 
 def push_capacity_tiers(num_rows: int) -> tuple[int, int]:
@@ -270,6 +297,24 @@ def pull_block_capacities(num_blocks: int) -> tuple:
                  for f in PULL_BLOCK_TIERS)
 
 
+# Streamed bytes per edge of one partition plane (width-8 ELL view): 8
+# bytes of dst+weight slots x ~1.3 measured padding on power-law graphs,
+# plus the per-row owner id (4 bytes / width slots).  Deliberately a planning
+# *estimate* (the real per-partition layouts aren't built yet at plan time);
+# the partitioned engine's store reports exact resident bytes at run time.
+STREAM_BYTES_PER_EDGE = 11
+
+
+def estimate_stream_bytes(num_edges: int, width: int = 8) -> int:
+    """Planning estimate of one streamed plane's total edge-array bytes.
+
+    What :func:`plan` divides by ``partition_budget_bytes`` to resolve the
+    interval-partition count: ``ceil(estimate / budget)`` partitions keep
+    each partition's streamed pull (or push) arrays under the budget.
+    """
+    return int(num_edges * STREAM_BYTES_PER_EDGE)
+
+
 def choose_backend(cfg: ScheduleConfig, *, num_vertices: int,
                    num_edges: int, avg_degree: float) -> str:
     """Module selection heuristic (paper: translator picks the module).
@@ -284,10 +329,32 @@ def choose_backend(cfg: ScheduleConfig, *, num_vertices: int,
 
 
 def plan(cfg: ScheduleConfig, *, num_vertices: int, num_edges: int,
-         devices: list | None = None) -> SchedulePlan:
+         devices: list | None = None,
+         fixed_partitions: int | None = None) -> SchedulePlan:
     avg_degree = num_edges / max(num_vertices, 1)
     backend = choose_backend(cfg, num_vertices=num_vertices,
                              num_edges=num_edges, avg_degree=avg_degree)
+    # ---- out-of-core axis: resolve the interval-partition count ---------
+    # ``fixed_partitions`` pins it (a pre-partitioned .npz container's
+    # physical cut count is an input to planning, not something the budget
+    # can re-derive); otherwise the explicit count and the budget-derived
+    # count compete and the larger wins.  Clamped to [1, V] — intervals
+    # cut on vertices.
+    if fixed_partitions is not None:
+        num_partitions = max(1, int(fixed_partitions))
+    else:
+        num_partitions = max(1, cfg.partitions)
+        if cfg.partition_budget_bytes is not None:
+            est = estimate_stream_bytes(num_edges, cfg.push_ell_width)
+            num_partitions = max(
+                num_partitions,
+                -(-est // cfg.partition_budget_bytes))
+    num_partitions = min(num_partitions, max(num_vertices, 1))
+    if num_partitions > 1 and cfg.pes > 1:
+        raise ValueError(
+            "partitioned execution is single-PE: the streamed partitions "
+            f"already tile the edge set (got partitions={num_partitions}, "
+            f"pes={cfg.pes})")
     mesh = None
     pes = 1
     if cfg.pes > 1:
@@ -310,7 +377,9 @@ def plan(cfg: ScheduleConfig, *, num_vertices: int, num_edges: int,
     chunk_size = max(1, math.ceil(num_edges / num_chunks))
     return SchedulePlan(config=cfg, backend=backend, num_chunks=num_chunks,
                         chunk_size=chunk_size, mesh=mesh,
-                        direction=cfg.direction)
+                        direction=cfg.direction,
+                        num_partitions=num_partitions,
+                        partition_budget_bytes=cfg.partition_budget_bytes)
 
 
 def plan_for_devices(cfg: ScheduleConfig, num_devices: int, **graph_meta) -> SchedulePlan:

@@ -1,0 +1,685 @@
+"""Out-of-core partitioned execution: double-buffered interval streaming.
+
+The translator's resident planes assume the whole graph lives on the
+device.  This module is the execution mode for graphs that don't fit: the
+edge set splits into contiguous source-vertex interval partitions
+(:func:`repro.core.graph.edge_interval_cuts`, planned by
+``scheduler.plan()``'s ``partitions`` axis), per-partition streamed ELL
+layouts live in a byte-budgeted host-side
+:class:`~repro.core.preprocess.PartitionStore`, and each superstep runs as
+a stream:
+
+1. **skip before transfer** — the packed uint32 bitmap frontier (PR 5) is
+   reduced per interval (:func:`repro.core.graph.interval_live_counts`);
+   a partition with no live source vertex contributes only the reduce
+   identity, so its arrays never move (legal exactly when the program
+   masks inactive sources — ``mask_inactive=False`` programs stream every
+   non-empty partition);
+2. **double-buffered transfer** — while partition *i* is being swept,
+   partition *i+1*'s arrays are already in flight via ``jax.device_put``;
+   the wait-at-consume plus issue time is the measured transfer phase,
+   the blocked partial-kernel time the compute phase, and the
+   :class:`~repro.core.comm.CommManager` accounts both (bytes moved,
+   partitions skipped, overlap efficiency);
+3. **partial-table combine** — each partition's sweep produces a
+   ``(V+1,)`` partial vertex table (pad row ``V`` swallows ELL padding);
+   partials combine with the reduce-matched elementwise op in ascending
+   partition order, exactly the multi-PE plane's combine shape.
+
+Bit-exactness: the finish step mirrors the resident translator's
+``make_superstep`` case-for-case (dead frontier, touched-free fused apply,
+take-if-touched), and min/max/int-add combines are associative, so BFS /
+SSSP / WCC answers are bit-identical to the resident path on graphs that
+fit both modes.  Float-add programs (pagerank) combine partials in a
+fixed ascending partition order — deterministic, but reassociated
+relative to the resident single-table reduction, the same caveat the
+multi-PE exchange documents.
+
+Both planes stream: **pull** sweeps the partition's reversed (dst-grouped)
+ELL, **push** its forward (src-grouped) ELL.  A single run under an
+``'auto'`` policy replays the Beamer hysteresis on the host (the loop is
+host-driven, so the registers live here); batched runs pin pull — the
+plane is global to the stream while resident lanes switch independently —
+with values bit-exact regardless, as both planes compute the identical
+superstep function.
+"""
+from __future__ import annotations
+
+import time
+import typing
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import graph as G
+from . import preprocess
+from .comm import CommManager
+from .dsl import VertexProgram, reduce_identity
+from .ir import (ApplyOp, FrontierUpdateOp, FusedGatherReduceOp,
+                 FusedSuperstepOp, PushScatterOp, lower_program)
+from .passes import PassContext, default_pipeline
+from .scheduler import SchedulePlan
+
+__all__ = ["PartitionedLaneState", "PartitionedGraphProgram",
+           "translate_partitioned"]
+
+_SEGMENT_OPS = {"add": jax.ops.segment_sum, "min": jax.ops.segment_min,
+                "max": jax.ops.segment_max}
+_COMBINE_OPS = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
+class PartitionedLaneState(typing.NamedTuple):
+    """Resumable per-lane state of a partitioned batched run.
+
+    The device half (``values``/``active``) is the superstep carry; the
+    counters are host numpy — legal because the streamed loop is
+    host-driven (there is no device while_loop to carry them through),
+    and what lets :meth:`PartitionedGraphProgram.lane_stats` report
+    without a device sync.  Treat the numpy fields as immutable: slices
+    replace them wholesale, so old states stay valid snapshots.
+    """
+
+    values: jax.Array        # (k, V) per-lane vertex tables
+    active: jax.Array        # (k, V) bool frontiers
+    iters: np.ndarray        # (k,) supersteps executed per lane
+    direction: np.ndarray    # (k,) direction register (0=pull, 1=push)
+    pushes: np.ndarray       # (k,) push supersteps
+    switches: np.ndarray     # (k,) direction switches
+    edges: np.ndarray        # (k,) logical edges traversed (int64)
+    parts_swept: np.ndarray  # (k,) partition sweeps executed for the lane
+    parts_skipped: np.ndarray  # (k,) partition sweeps the frontier killed
+    pull_cost: np.ndarray    # (k,) measured pull-cost register (int64)
+
+
+class PartitionedGraphProgram:
+    """The streamed executable — the out-of-core twin of
+    :class:`~repro.core.translator.CompiledGraphProgram`.
+
+    Same run surface (``init_state`` / ``superstep`` / ``run`` /
+    ``run_batch`` / the lane-level continuation API), different data
+    plane: partitions stream from the host store through a double
+    buffer, with the bitmap frontier deciding per superstep which
+    partitions move at all.
+    """
+
+    def __init__(self, program: VertexProgram, store: preprocess.PartitionStore,
+                 report, max_iters: int, *, ir, fstep, fused, apply_op,
+                 frontier_op, push_legal: bool, splan: SchedulePlan,
+                 comm: CommManager, out_degrees: np.ndarray):
+        self.program = program
+        self.store = store
+        self.report = report
+        self.max_iters = max_iters
+        self.last_run_stats: dict | None = None
+        self._splan = splan
+        self._comm = comm
+        self._policy = splan.direction
+        self._push_legal = push_legal
+        V = store.num_vertices
+        self._num_vertices = V
+        self._num_edges = int(store.edges_per_partition.sum())
+        self._dtype = ir.value_dtype
+        self._ident = reduce_identity(fused.reduce.op, self._dtype)
+        self._gather = fused.gather.fn
+        self._apply = apply_op.fn
+        self._frontier_mode = frontier_op.mode
+        self._frontier_dead = frontier_op.dead
+        self._touched_free = fstep.touched_free if fstep is not None else False
+        self._mask_inactive = bool(program.mask_inactive)
+        self._segment = _SEGMENT_OPS[fused.reduce.op]
+        self._combine = _COMBINE_OPS[fused.reduce.op]
+        self._deg = jnp.asarray(out_degrees, jnp.int32)
+        self._deg_pad = jnp.concatenate(
+            [self._deg, jnp.ones((1,), jnp.int32)])
+        self._cuts_dev = jnp.asarray(store.cuts, jnp.int32)
+        self._edges_per_part = np.asarray(store.edges_per_partition, np.int64)
+        self._base_values = program.materialize_init(V)
+        self._partial = {"pull": self._make_partial("pull"),
+                         "push": self._make_partial("push")}
+        self._finish = self._make_finish()
+        self._liveness = self._make_liveness()
+        self._acc_init = jax.jit(self._acc_init_fn)
+        self._rooted = jax.jit(self._rooted_fn)
+        self._admit = jax.jit(self._admit_fn)
+
+    # -- staged device functions (traced once per plane / batch size) ------
+
+    def _make_partial(self, plane: str):
+        """One partition's sweep folded into the running ``(V+1,)`` partials.
+
+        Uniform partition shapes (the store pads every partition of a
+        plane to its max row count) mean one trace streams them all, and
+        the arrays arrive as jit *arguments* — streamable buffers, never
+        baked constants.  Pad keys/slots index row ``V`` of the padded
+        tables, so padding needs no masks beyond the liveness one.
+        """
+        V = self._num_vertices
+        gather, ident, dtype = self._gather, self._ident, self._dtype
+        segment, combine = self._segment, self._combine
+        mask_inactive = self._mask_inactive
+        deg_pad = self._deg_pad
+
+        @jax.jit
+        def partial(values, active, key, slot, wgt, acc_red, acc_got):
+            pad_v = jnp.full((values.shape[0], 1), ident, dtype)
+            vpad = jnp.concatenate([values.astype(dtype), pad_v], axis=1)
+            apad = jnp.concatenate(
+                [active, jnp.zeros((values.shape[0], 1), bool)], axis=1)
+
+            def one(v1, a1, red0, got0):
+                valid = slot < V
+                if plane == "push":
+                    # rows grouped by source: one sender per row, its
+                    # messages fan out along the slot destinations
+                    sv = jnp.broadcast_to(v1[key][:, None], slot.shape)
+                    sd = jnp.broadcast_to(deg_pad[key][:, None], slot.shape)
+                    sa = jnp.broadcast_to(a1[key][:, None], slot.shape)
+                    seg = slot
+                else:
+                    # rows grouped by destination/owner: slots are senders
+                    sv = v1[slot]
+                    sd = deg_pad[slot]
+                    sa = a1[slot]
+                    seg = jnp.broadcast_to(key[:, None], slot.shape)
+                live = valid & sa if mask_inactive else valid
+                msg = jnp.asarray(gather(sv, wgt, sd), dtype)
+                msg = jnp.where(live, msg, ident)
+                red = segment(msg.ravel(), seg.ravel(), num_segments=V + 1)
+                got = jax.ops.segment_max(
+                    live.ravel().astype(jnp.int32), seg.ravel(),
+                    num_segments=V + 1) > 0
+                red = jnp.where(got, red, ident)
+                return combine(red0, red), got0 | got
+
+            red, got = jax.vmap(one)(vpad, apad, acc_red, acc_got)
+            return red, got
+
+        return partial
+
+    def _acc_init_fn(self, values):
+        k = values.shape[0]
+        return (jnp.full((k, self._num_vertices + 1), self._ident,
+                         self._dtype),
+                jnp.zeros((k, self._num_vertices + 1), bool))
+
+    def _make_finish(self):
+        """Apply + frontier from the combined partials — the exact
+        resident ``make_superstep`` finish, per lane, with a freeze guard
+        for converged lanes."""
+        V = self._num_vertices
+        apply_fn = self._apply
+        frontier_dead, touched_free = self._frontier_dead, self._touched_free
+        mode = self._frontier_mode
+
+        @jax.jit
+        def finish(values, active, acc_red, acc_got, alive):
+            def one(v, a, red, got):
+                new = apply_fn(v, red[:V])
+                if frontier_dead:
+                    return new, jnp.ones_like(a)
+                if touched_free and mode == "changed":
+                    changed = new != v
+                    return new, changed
+                take = got[:V] if mode == "changed" \
+                    else jnp.ones_like(got[:V])
+                new = jnp.where(take, new, v)
+                changed = new != v
+                nxt = changed if mode == "changed" else jnp.ones_like(changed)
+                return new, nxt
+
+            new, nxt = jax.vmap(one)(values, active, acc_red, acc_got)
+            new = jnp.where(alive[:, None], new, values)
+            nxt = jnp.where(alive[:, None], nxt, active)
+            return new, nxt
+
+        return finish
+
+    def _make_liveness(self):
+        """One device round-trip per superstep: the bitmap frontier packed
+        and popcounted per interval, plus the occupancy the direction
+        policy reads (``n_f``, ``m_f``)."""
+        cuts = self._cuts_dev
+        deg = self._deg
+
+        @jax.jit
+        def liveness(active):
+            words = jax.vmap(G.pack_bits)(active)
+            counts = jax.vmap(
+                lambda w: G.interval_live_counts(w, cuts))(words)
+            n_f = jnp.sum(active, axis=1)
+            m_f = jnp.sum(jnp.where(active, deg, 0), axis=1)
+            return counts, n_f, m_f
+
+        return liveness
+
+    def _rooted_fn(self, values, roots):
+        values = values.at[roots].set(jnp.asarray(0, self._dtype))
+        active = jnp.zeros((self._num_vertices,), bool).at[roots].set(True)
+        return values, active
+
+    def _admit_fn(self, values, active, lane, fresh_v, fresh_a):
+        return (values.at[lane].set(fresh_v), active.at[lane].set(fresh_a))
+
+    # -- resident-compatible surface ---------------------------------------
+
+    def init_state(self, roots=None, values=None):
+        if values is None:
+            values = self._base_values
+        if roots is not None:
+            return self._rooted(values, jnp.asarray(roots))
+        return values, jnp.ones((self._num_vertices,), bool)
+
+    def superstep(self, values, active):
+        """One full (no-skip) pull-plane superstep over all partitions."""
+        v = values[None, :]
+        a = active[None, :]
+        acc = self._acc_init(v)
+        for p in range(self.store.partitions):
+            arr = jax.device_put(self.store.pull_arrays(p))
+            acc = self._partial["pull"](v, a, arr["key"], arr["slot"],
+                                        arr["wgt"], *acc)
+        new, nxt = self._finish(v, a, *acc, jnp.ones((1,), bool))
+        return new[0], nxt[0]
+
+    # -- the streamed superstep --------------------------------------------
+
+    def _live_partitions(self, counts: np.ndarray,
+                         alive: np.ndarray) -> list[int]:
+        """Skip-before-transfer: the partitions this superstep must move.
+
+        With ``mask_inactive`` the bitmap interval counts are exact — a
+        partition with zero live sources across the alive lanes yields an
+        all-identity partial, so it is skipped before any transfer.
+        Without it, inactive sources still send, so every partition with
+        edges streams (empty intervals stay skippable either way).
+        """
+        has_edges = self._edges_per_part > 0
+        if self._mask_inactive:
+            live = counts[alive].sum(axis=0) > 0 if alive.any() \
+                else np.zeros_like(has_edges)
+            return [int(p) for p in np.nonzero(live & has_edges)[0]]
+        return [int(p) for p in np.nonzero(has_edges)[0]]
+
+    def _stream_superstep(self, values, active, alive: np.ndarray,
+                          live_parts: list[int], plane: str):
+        """Sweep ``live_parts`` through the double buffer, then finish.
+
+        Partition *i+1*'s ``device_put`` is issued *before* partition
+        *i*'s partial blocks, so transfer rides under compute; the comm
+        manager records issue+wait as the transfer phase and the blocked
+        kernel time as compute, which is what the overlap-efficiency
+        figure is computed from.
+        """
+        t_wall = time.perf_counter()
+        arrays_fn = self.store.push_arrays if plane == "push" \
+            else self.store.pull_arrays
+        partial = self._partial[plane]
+        acc = self._acc_init(values)
+        compute_s = 0.0
+        pending = None
+        for i, p in enumerate(live_parts):
+            if pending is None:
+                t0 = time.perf_counter()
+                host = arrays_fn(p)
+                dev = jax.device_put(host)
+                pending = (dev, sum(a.nbytes for a in host.values()),
+                           time.perf_counter() - t0)
+            dev, nbytes, issue_s = pending
+            pending = None
+            if i + 1 < len(live_parts):
+                t0 = time.perf_counter()
+                nxt_host = arrays_fn(live_parts[i + 1])
+                nxt_dev = jax.device_put(nxt_host)
+                pending = (nxt_dev,
+                           sum(a.nbytes for a in nxt_host.values()),
+                           time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(dev)
+            self._comm.stats.record_partition_h2d(
+                nbytes, issue_s + time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            acc = partial(values, active, dev["key"], dev["slot"],
+                          dev["wgt"], *acc)
+            jax.block_until_ready(acc)
+            compute_s += time.perf_counter() - t0
+        values, active = self._finish(values, active, *acc,
+                                      jnp.asarray(alive))
+        self._comm.stats.record_partition_skip(
+            self.store.partitions - len(live_parts))
+        self._comm.stats.record_partition_superstep(
+            time.perf_counter() - t_wall, compute_s)
+        return values, active
+
+    def _choose_direction(self, state: PartitionedLaneState,
+                          n_f: np.ndarray, m_f: np.ndarray,
+                          alive: np.ndarray) -> int:
+        """The plane for this streamed superstep (0=pull, 1=push).
+
+        Single-lane ``'auto'`` replays the resident Beamer hysteresis on
+        the host: enter push while the frontier is small
+        (``n_f·beta < V``), stay while its out-edge mass undercuts the
+        *measured* pull cost (``m_f·alpha < pull_cost``, the live-
+        partition edge sum of the last pull sweep).  The plane is global
+        to the stream, so batched ``'auto'`` pins pull — per-lane
+        switching would stream both planes; values are bit-exact on
+        either plane, only the cost model differs.
+        """
+        if not self._push_legal or self._policy.mode == "pull":
+            return 0
+        if self._policy.mode == "push":
+            return 1
+        k = len(alive)
+        if k != 1:
+            return 0
+        lane = 0
+        if not alive[lane]:
+            return int(state.direction[lane])
+        if state.direction[lane] == 1:
+            stay = m_f[lane] * self._policy.alpha < state.pull_cost[lane]
+            return 1 if stay else 0
+        enter = n_f[lane] * self._policy.beta < self._num_vertices
+        return 1 if enter else 0
+
+    def _advance(self, state: PartitionedLaneState,
+                 budget: int | None) -> PartitionedLaneState:
+        """Run up to ``budget`` streamed supersteps (None = to convergence)."""
+        steps = 0
+        while budget is None or steps < budget:
+            done = self.lane_done(state)
+            alive = ~done
+            if not alive.any():
+                break
+            counts, n_f, m_f = (np.asarray(a) for a in jax.device_get(
+                self._liveness(state.active)))
+            direction = self._choose_direction(state, n_f, m_f, alive)
+            plane = "push" if direction == 1 else "pull"
+            live_parts = self._live_partitions(counts, alive)
+            values, active = self._stream_superstep(
+                state.values, state.active, alive, live_parts, plane)
+            # host counter roll-forward (copy: old states stay snapshots)
+            iters = state.iters + alive
+            pushes = state.pushes + (alive if direction == 1 else 0)
+            switches = state.switches + \
+                (alive & (state.direction != direction) & (state.iters > 0))
+            # logical per-lane cost, mirroring the resident stats: a push
+            # superstep traverses the lane's frontier out-edges (m_f), a
+            # pull sweep the edges of the lane's own live partitions
+            lane_live = counts > 0 if self._mask_inactive \
+                else np.ones_like(counts, bool)
+            lane_pull_edges = (lane_live
+                               * self._edges_per_part[None, :]).sum(axis=1)
+            edges = state.edges + np.where(
+                alive, m_f if direction == 1 else lane_pull_edges, 0)
+            pull_cost = np.where(alive & (direction == 0), lane_pull_edges,
+                                 state.pull_cost)
+            parts_swept = state.parts_swept + np.where(
+                alive, len(live_parts), 0)
+            parts_skipped = state.parts_skipped + np.where(
+                alive, self.store.partitions - len(live_parts), 0)
+            state = PartitionedLaneState(
+                values=values, active=active, iters=iters,
+                direction=np.where(alive, direction, state.direction),
+                pushes=pushes, switches=switches, edges=edges,
+                parts_swept=parts_swept, parts_skipped=parts_skipped,
+                pull_cost=pull_cost)
+            steps += 1
+        return state
+
+    # -- run / run_batch ----------------------------------------------------
+
+    def _fresh_state(self, roots) -> PartitionedLaneState:
+        roots = np.atleast_1d(np.asarray(roots, np.int32))
+        k = len(roots)
+        pairs = [self._rooted(self._base_values, jnp.asarray(int(r)))
+                 for r in roots]
+        values = jnp.stack([p[0] for p in pairs])
+        active = jnp.stack([p[1] for p in pairs])
+        z = np.zeros(k, np.int64)
+        return PartitionedLaneState(
+            values=values, active=active, iters=z.copy(),
+            direction=np.zeros(k, np.int32), pushes=z.copy(),
+            switches=z.copy(), edges=z.copy(), parts_swept=z.copy(),
+            parts_skipped=z.copy(),
+            pull_cost=np.full(k, self._num_edges, np.int64))
+
+    def _unrooted_state(self) -> PartitionedLaneState:
+        values, active = self.init_state()
+        z = np.zeros(1, np.int64)
+        return PartitionedLaneState(
+            values=values[None, :], active=active[None, :], iters=z.copy(),
+            direction=np.zeros(1, np.int32), pushes=z.copy(),
+            switches=z.copy(), edges=z.copy(), parts_swept=z.copy(),
+            parts_skipped=z.copy(),
+            pull_cost=np.full(1, self._num_edges, np.int64))
+
+    def run(self, roots=None, values=None):
+        """Algorithm 1 over the partition stream; resident-compatible.
+
+        Returns ``(values (V,), iters)``; ``last_run_stats`` carries the
+        resident keys plus the partition plane: partitions swept/skipped,
+        bytes streamed, transfer/compute seconds, measured overlap
+        efficiency, and the store's cache report.
+        """
+        if values is not None:
+            v0, a0 = self.init_state(roots=roots, values=values)
+            state = self._unrooted_state()._replace(
+                values=v0[None, :], active=a0[None, :])
+        elif roots is not None:
+            state = self._fresh_state(roots)
+            if state.values.shape[0] != 1:
+                raise ValueError("run() takes a single root; use run_batch")
+        else:
+            state = self._unrooted_state()
+        s = self._comm.stats
+        base = (s.partition_bytes_h2d, s.partitions_transferred,
+                s.partitions_skipped, s.partition_prefetch_s,
+                s.partition_compute_s, s.partition_wall_s)
+        state = self._advance(state, None)
+        stats = self._run_stats(state, lane=0, base=base)
+        self.last_run_stats = stats
+        self.report.run_stats = stats
+        return state.values[0], int(state.iters[0])
+
+    def run_batch(self, roots):
+        """Batched Algorithm 1 over the stream: k lanes share the sweep.
+
+        Lanes share each superstep's union of live partitions — correct
+        because a partition dead for one lane contributes only the
+        identity to that lane's partial.  Per-lane stats stay logical
+        (the lane's own live partitions), mirroring the resident
+        ``run_batch`` contract; ``'auto'`` pins pull (see
+        :meth:`_choose_direction`), values bit-exact regardless.
+        """
+        state = self._advance(self._fresh_state(roots), None)
+        stats = self._batch_stats(state)
+        self.last_run_stats = stats
+        self.report.run_stats = stats
+        return state.values, jnp.asarray(state.iters)
+
+    def _run_stats(self, state: PartitionedLaneState, lane: int,
+                   base: tuple) -> dict:
+        s = self._comm.stats
+        d_bytes = s.partition_bytes_h2d - base[0]
+        d_moved = s.partitions_transferred - base[1]
+        d_skip = s.partitions_skipped - base[2]
+        prefetch_s = s.partition_prefetch_s - base[3]
+        compute_s = s.partition_compute_s - base[4]
+        wall_s = s.partition_wall_s - base[5]
+        shorter = min(prefetch_s, compute_s)
+        overlap = 0.0 if shorter <= 0 or wall_s <= 0 else float(
+            np.clip((prefetch_s + compute_s - wall_s) / shorter, 0.0, 1.0))
+        pushes = int(state.pushes[lane])
+        return {
+            "push_supersteps": pushes,
+            "push_compacted_supersteps": pushes,
+            "push_fallback_supersteps": 0,
+            "pull_supersteps": int(state.iters[lane]) - pushes,
+            "direction_switches": int(state.switches[lane]),
+            "edges_traversed": int(state.edges[lane]),
+            "pes": 1,
+            "push_live_rows_per_pe": [0],
+            "pull_blocks_swept": 0,
+            "pull_blocks_skipped": 0,
+            "pull_cost_model": int(state.pull_cost[lane]),
+            "exchange_supersteps": 0,
+            "exchange_bytes": 0,
+            "partitions": self.store.partitions,
+            "partitions_swept": int(state.parts_swept[lane]),
+            "partitions_skipped": int(state.parts_skipped[lane]),
+            "partition_bytes_h2d": int(d_bytes),
+            "partitions_transferred": int(d_moved),
+            "partition_transfer_s": prefetch_s,
+            "partition_compute_s": compute_s,
+            "partition_wall_s": wall_s,
+            "overlap_efficiency": overlap,
+            "partition_store": self.store.stats(),
+        }
+
+    def _batch_stats(self, state: PartitionedLaneState) -> dict:
+        pushes = state.pushes.astype(np.int64)
+        return {
+            "batch_size": int(state.iters.shape[0]),
+            "push_supersteps": pushes.tolist(),
+            "pull_supersteps": (state.iters - pushes).tolist(),
+            "direction_switches": state.switches.tolist(),
+            "edges_traversed": state.edges.tolist(),
+            "pes": 1,
+            "partitions": self.store.partitions,
+            "partitions_swept": state.parts_swept.tolist(),
+            "partitions_skipped": state.parts_skipped.tolist(),
+            "partition_store": self.store.stats(),
+        }
+
+    # -- lane-level continuation (serving plane) ----------------------------
+
+    def batch_init(self, roots) -> PartitionedLaneState:
+        """Root a k-lane state without running any supersteps."""
+        return self._fresh_state(np.asarray(roots))
+
+    def batch_idle(self, slots: int) -> PartitionedLaneState:
+        """All-idle k-lane state: empty frontiers, awaiting admits."""
+        state = self._fresh_state(np.zeros(slots, np.int32))
+        return state._replace(active=jnp.zeros_like(state.active))
+
+    def lane_admit(self, state: PartitionedLaneState, lane,
+                   root) -> PartitionedLaneState:
+        """Overwrite one lane with a freshly-rooted query, others frozen."""
+        lane = int(lane)
+        fresh_v, fresh_a = self._rooted(self._base_values,
+                                        jnp.asarray(int(root)))
+        values, active = self._admit(state.values, state.active,
+                                     jnp.asarray(lane, jnp.int32),
+                                     fresh_v, fresh_a)
+
+        def reset(a, fill=0):
+            out = a.copy()
+            out[lane] = fill
+            return out
+
+        return PartitionedLaneState(
+            values=values, active=active, iters=reset(state.iters),
+            direction=reset(state.direction), pushes=reset(state.pushes),
+            switches=reset(state.switches), edges=reset(state.edges),
+            parts_swept=reset(state.parts_swept),
+            parts_skipped=reset(state.parts_skipped),
+            pull_cost=reset(state.pull_cost, self._num_edges))
+
+    def run_batch_slice(self, state: PartitionedLaneState,
+                        budget) -> PartitionedLaneState:
+        """Advance every live lane by at most ``budget`` supersteps.
+
+        Slices partition the exact superstep sequence :meth:`run_batch`
+        executes (same liveness, plane, and freeze decisions), so a lane
+        that converges mid-partition-stream harvests the same answer a
+        straight-through run produces.
+        """
+        return self._advance(state, int(budget))
+
+    def lane_done(self, state: PartitionedLaneState) -> np.ndarray:
+        """Host bool (k,): lane converged (empty frontier or max_iters)."""
+        return np.asarray(
+            ~np.asarray(jnp.any(state.active, axis=1))
+            | (state.iters >= self.max_iters))
+
+    def lane_stats(self, state: PartitionedLaneState) -> dict:
+        """Per-lane stats lists (harvested by the serving plane)."""
+        return self._batch_stats(state)
+
+
+def translate_partitioned(program: VertexProgram, source, schedule,
+                          splan: SchedulePlan, comm: CommManager, *,
+                          use_pallas: bool = False,
+                          dump_passes: bool = False
+                          ) -> PartitionedGraphProgram:
+    """Stage a DSL program onto the partition stream.
+
+    ``source`` is a resident :class:`~repro.core.graph.Graph` (partitioned
+    by the plan's interval cuts) or a duck-typed partition container (a
+    ``partition_coo(p)``/``cuts``/``out_degrees`` provider, e.g.
+    :class:`repro.data.graphs.PartitionContainer`) whose cut geometry pins
+    the plan.  Runs the same IR lowering + pass pipeline as the resident
+    translator, then builds the streamed executable instead of emitting
+    resident supersteps.
+    """
+    t0 = time.perf_counter()
+    from .translator import TranslationReport  # circular-at-import-time
+
+    V = int(source.num_vertices)
+    E = int(source.num_edges)
+    ctx = PassContext(schedule=schedule, plan=splan, use_pallas=use_pallas,
+                      num_vertices=V, num_edges=E)
+    ir, pipeline_report = default_pipeline().run(
+        lower_program(program), ctx, dump=dump_passes)
+
+    fstep = ir.find(FusedSuperstepOp)
+    if fstep is not None:
+        fused, apply_op, frontier_op = fstep.fused, fstep.apply, fstep.frontier
+    else:
+        fused = ir.find(FusedGatherReduceOp)
+        apply_op = ir.find(ApplyOp)
+        frontier_op = ir.find(FrontierUpdateOp)
+    assert fused is not None and apply_op is not None \
+        and frontier_op is not None, "pass pipeline left the IR incomplete"
+    push_op = ir.find(PushScatterOp)
+    policy = splan.direction
+    push_legal = push_op is not None and policy.mode != "pull"
+
+    out_deg = np.asarray(source.out_degrees, np.int64)
+    if hasattr(source, "partition_coo"):          # container pins its cuts
+        cuts = np.asarray(source.cuts, np.int64)
+    else:
+        cuts = G.edge_interval_cuts(out_deg, splan.num_partitions)
+    store = preprocess.PartitionStore(
+        source, cuts, width=schedule.push_ell_width,
+        max_bytes=splan.partition_budget_bytes)
+
+    tt = time.perf_counter() - t0
+    dtype = ir.value_dtype
+    report = TranslationReport(
+        program=program.name,
+        backend=ir.backend,
+        gather_module=fused.gather.module,
+        reduce_module=fused.reduce.op,
+        pipelines=splan.num_chunks,
+        pes=1,
+        translate_time_s=tt,
+        est_flops_per_superstep=2.0 * E,
+        est_bytes_per_superstep=float(E * (4 + 4 + dtype.itemsize)),
+        est_collective_bytes=0,
+        pass_report=pipeline_report.render() if dump_passes else None,
+        ir_dump=ir.dump(),
+        direction_policy=policy.describe(),
+        directions=("pull", "push") if push_legal else ("pull",),
+        translate_breakdown={"passes_s": tt, "total_s": tt},
+        pull_sweep="bitmap" if (fstep is not None
+                                and fstep.pull_sweep == "bitmap")
+        else "dense",
+        num_partitions=store.partitions,
+        partition_budget_bytes=splan.partition_budget_bytes,
+    )
+    max_iters = program.max_iters if program.max_iters is not None else V
+    return PartitionedGraphProgram(
+        program, store, report, max_iters, ir=ir, fstep=fstep, fused=fused,
+        apply_op=apply_op, frontier_op=frontier_op, push_legal=push_legal,
+        splan=splan, comm=comm, out_degrees=out_deg)

@@ -180,6 +180,10 @@ class TranslationReport:
     pull_block_tiers: tuple | None = None  # total live-block caps per tier
     pull_blocks_total: int | None = None   # skippable blocks (bitmap plane)
     est_frontier_bytes: int = 0         # mask-exchange bytes per superstep
+    # out-of-core partition stream (repro.core.stream): interval count and
+    # the store's byte budget; 1/None on resident translations
+    num_partitions: int = 1
+    partition_budget_bytes: int | None = None
 
 
 class CompiledGraphProgram:
@@ -1431,9 +1435,20 @@ def translate(
     schedule = schedule or ScheduleConfig()
     comm = comm or CommManager()
     splan: SchedulePlan = plan(schedule, num_vertices=g.num_vertices,
-                               num_edges=g.num_edges)
+                               num_edges=g.num_edges,
+                               fixed_partitions=getattr(g, "partitions", None))
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
+
+    # out-of-core dispatch: a multi-partition plan, or a graph source that
+    # is not resident (a partition container), stages onto the streamed
+    # engine — translate-time and run-time data placement diverge there,
+    # so none of the resident emit paths below apply
+    if splan.num_partitions > 1 or not isinstance(g, G.Graph):
+        from . import stream
+        return stream.translate_partitioned(
+            program, g, schedule, splan, comm, use_pallas=use_pallas,
+            dump_passes=dump_passes)
 
     # ---- stages 1+2: lower to IR, run the pass pipeline -----------------
     # (always re-run: the pipeline costs ~ms and keeps reports/dumps fresh)

@@ -1,0 +1,285 @@
+"""Scale-sweep graph data: chunked R-MAT synthesis + .npz partition containers.
+
+The out-of-core engine (``repro.core.stream``) streams contiguous
+source-vertex interval partitions past a resident frontier; this module is
+its data plane at SNAP scale:
+
+* :func:`rmat_edge_chunks` generates a 10M-100M edge R-MAT as a stream of
+  bounded edge chunks (deterministic per ``(seed, chunk)``, so a second
+  pass regenerates the identical stream) — the edge set never has to exist
+  as one array on the generator side;
+* :func:`build_partition_container` runs the two-pass container build:
+  pass 1 accumulates out-degrees per chunk and picks edge-balanced vertex
+  cuts (:func:`repro.core.graph.edge_interval_cuts`), pass 2 regenerates
+  the stream and deals each edge into its partition's pre-counted buffer.
+  Each partition stores a *rebased* CSR (offsets over its vertex interval
+  + global destination ids) under its own ``.npz`` members;
+* :class:`PartitionContainer` opens a container lazily — ``np.load`` reads
+  one member per access, so a partitioned run touches one partition's
+  arrays at a time and a SNAP-scale graph is never materialized whole on
+  the loader side.
+
+Containers also build from a resident graph (:func:`container_from_graph`)
+so tests can pin container-loaded runs bit-exact against the in-memory
+oracle on graphs that fit both modes.
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterator
+
+import numpy as np
+
+from ..core import graph as G
+
+CONTAINER_VERSION = 1
+_DEFAULT_CHUNK_EDGES = 2_000_000
+
+
+def rmat_edge_chunks(
+    num_vertices: int,
+    num_edges: int,
+    *,
+    seed: int = 0,
+    chunk_edges: int = _DEFAULT_CHUNK_EDGES,
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield an R-MAT edge set as bounded ``(src, dst)`` chunks.
+
+    Chunk ``i`` is :func:`repro.core.graph.rmat_edges` at seed
+    ``seed * 1_000_003 + i`` — a pure function of ``(seed, i)``, which is
+    what makes the container's two-pass build possible without spilling
+    the stream: pass 2 just regenerates it.  The union of chunks has
+    exactly ``num_edges`` edges (the final chunk is short).
+    """
+    if chunk_edges < 1:
+        raise ValueError("chunk_edges must be >= 1")
+    done = 0
+    i = 0
+    while done < num_edges:
+        n = min(chunk_edges, num_edges - done)
+        yield G.rmat_edges(num_vertices, n, seed=seed * 1_000_003 + i)
+        done += n
+        i += 1
+
+
+def _partition_rows(cuts: np.ndarray, out_degrees: np.ndarray,
+                    in_deg_per_part: list[np.ndarray],
+                    width: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exact per-partition width-``width`` ELL row counts (push, pull).
+
+    Push rows over interval ``p`` are ``sum(ceil(out_deg[lo:hi] / width))``
+    (a partition owns its interval vertices' *full* out-adjacency); pull
+    rows are ``sum(ceil(in_deg_p / width))`` over the partition's per-
+    destination edge counts.  Stored in the container meta so the
+    partitioned engine can size its uniform streamed buffers without
+    building any layout first.
+    """
+    parts = len(cuts) - 1
+    deg = np.asarray(out_degrees, np.int64)
+    push = np.asarray([
+        int((-(-deg[cuts[p]:cuts[p + 1]] // width)).sum())
+        for p in range(parts)], np.int64)
+    pull = np.asarray([
+        int((-(-np.asarray(d, np.int64) // width)).sum())
+        for d in in_deg_per_part], np.int64)
+    return push, pull
+
+
+def _finalize_container(path: str, num_vertices: int, *,
+                        cuts: np.ndarray, out_degrees: np.ndarray,
+                        part_src: list[np.ndarray],
+                        part_dst: list[np.ndarray],
+                        part_wgt: list[np.ndarray] | None,
+                        seed: int, width: int = 8) -> str:
+    """Sort each partition by source, rebase offsets, write the .npz."""
+    parts = len(cuts) - 1
+    members: dict[str, np.ndarray] = {}
+    edges_per_part = np.zeros(parts, np.int64)
+    in_deg_per_part = []
+    for p in range(parts):
+        lo, hi = int(cuts[p]), int(cuts[p + 1])
+        src, dst = part_src[p], part_dst[p]
+        order = np.argsort(src, kind="stable")
+        src, dst = src[order], dst[order]
+        off = np.zeros(hi - lo + 1, np.int64)
+        np.cumsum(np.bincount(src - lo, minlength=hi - lo), out=off[1:])
+        members[f"p{p}_offsets"] = off
+        members[f"p{p}_dst"] = dst.astype(np.int32)
+        if part_wgt is not None:
+            members[f"p{p}_wgt"] = part_wgt[p][order]
+        edges_per_part[p] = len(dst)
+        in_deg_per_part.append(np.bincount(dst, minlength=num_vertices))
+    push_rows, pull_rows = _partition_rows(cuts, out_degrees,
+                                           in_deg_per_part, width)
+    total_edges = int(edges_per_part.sum())
+    members.update(
+        meta=np.asarray([CONTAINER_VERSION, num_vertices, total_edges,
+                         parts, seed, width,
+                         1 if part_wgt is not None else 0], np.int64),
+        cuts=np.asarray(cuts, np.int64),
+        out_degrees=np.asarray(out_degrees, np.int64),
+        edges_per_partition=edges_per_part,
+        push_rows=push_rows,
+        pull_rows=pull_rows,
+    )
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    np.savez(path, **members)
+    return path
+
+
+def build_partition_container(
+    path: str,
+    num_vertices: int,
+    num_edges: int,
+    *,
+    partitions: int,
+    seed: int = 0,
+    chunk_edges: int = _DEFAULT_CHUNK_EDGES,
+) -> str:
+    """Two-pass chunked build of an R-MAT partition container.
+
+    Pass 1 streams :func:`rmat_edge_chunks` once to accumulate out-degrees
+    (one V-length bincount per chunk) and derives edge-balanced vertex
+    cuts; pass 2 regenerates the identical stream and scatters each chunk
+    into per-partition buffers pre-sized from the interval degree sums.
+    Peak memory is one chunk plus the per-partition buffers — no single
+    E-length array is ever allocated, and the loader side
+    (:class:`PartitionContainer`) only ever touches one partition.
+    Unweighted (weights are implicit all-ones, like ``rmat_edges``).
+    """
+    if partitions < 1:
+        raise ValueError("partitions must be >= 1")
+    deg = np.zeros(num_vertices, np.int64)
+    for src, _ in rmat_edge_chunks(num_vertices, num_edges, seed=seed,
+                                   chunk_edges=chunk_edges):
+        deg += np.bincount(src, minlength=num_vertices)
+    cuts = G.edge_interval_cuts(deg, partitions)
+    cum = np.zeros(num_vertices + 1, np.int64)
+    np.cumsum(deg, out=cum[1:])
+    counts = cum[cuts[1:]] - cum[cuts[:-1]]        # edges per partition
+    part_src = [np.empty(int(n), np.int32) for n in counts]
+    part_dst = [np.empty(int(n), np.int32) for n in counts]
+    cursor = np.zeros(partitions, np.int64)
+    for src, dst in rmat_edge_chunks(num_vertices, num_edges, seed=seed,
+                                     chunk_edges=chunk_edges):
+        pid = np.searchsorted(cuts[1:], src, side="right")
+        for p in np.unique(pid):
+            m = pid == p
+            n = int(m.sum())
+            c = int(cursor[p])
+            part_src[p][c:c + n] = src[m]
+            part_dst[p][c:c + n] = dst[m]
+            cursor[p] += n
+    assert (cursor == counts).all(), "pass 2 diverged from pass 1 degrees"
+    return _finalize_container(path, num_vertices, cuts=cuts,
+                               out_degrees=deg, part_src=part_src,
+                               part_dst=part_dst, part_wgt=None, seed=seed)
+
+
+def container_from_graph(path: str, g: G.Graph, partitions: int) -> str:
+    """Write a resident :class:`~repro.core.graph.Graph` as a container.
+
+    The bit-exactness bridge: the container holds the *same* edge set, so
+    a container-loaded partitioned run must reproduce the resident oracle
+    exactly on graphs that fit both modes.
+    """
+    deg = np.asarray(g.out_degrees, np.int64)
+    cuts = G.edge_interval_cuts(deg, partitions)
+    part_src, part_dst, part_wgt = [], [], []
+    for p in range(len(cuts) - 1):
+        src, dst, wgt = G.partition_coo(g, int(cuts[p]), int(cuts[p + 1]))
+        part_src.append(src)
+        part_dst.append(dst)
+        part_wgt.append(wgt)
+    return _finalize_container(path, g.num_vertices, cuts=cuts,
+                               out_degrees=deg, part_src=part_src,
+                               part_dst=part_dst, part_wgt=part_wgt, seed=-1)
+
+
+class PartitionContainer:
+    """Lazy view over a partition-container ``.npz``.
+
+    Quacks like a graph for planning (``num_vertices`` / ``num_edges`` /
+    ``out_degrees``) and serves one partition's COO at a time
+    (:meth:`partition_coo`) for the store's lazy layout builds — the
+    underlying ``NpzFile`` decompresses members on access, so opening a
+    container costs metadata only and a run's working set is the
+    partitions it actually streams.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._z = np.load(path)
+        meta = self._z["meta"]
+        if int(meta[0]) != CONTAINER_VERSION:
+            raise ValueError(f"container version {int(meta[0])} != "
+                             f"{CONTAINER_VERSION} ({path})")
+        self.num_vertices = int(meta[1])
+        self.num_edges = int(meta[2])
+        self.partitions = int(meta[3])
+        self.seed = int(meta[4])
+        self.width = int(meta[5])
+        self.weighted = bool(meta[6])
+        self.cuts = self._z["cuts"]
+        self.edges_per_partition = self._z["edges_per_partition"]
+        self.push_rows = self._z["push_rows"]
+        self.pull_rows = self._z["pull_rows"]
+
+    @property
+    def out_degrees(self) -> np.ndarray:
+        return self._z["out_degrees"]
+
+    def partition_coo(self, p: int
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Partition ``p``'s edges as global-id COO ``(src, dst, wgt)``."""
+        lo, hi = int(self.cuts[p]), int(self.cuts[p + 1])
+        off = self._z[f"p{p}_offsets"]
+        dst = self._z[f"p{p}_dst"]
+        src = np.repeat(np.arange(lo, hi, dtype=np.int32), np.diff(off))
+        wgt = self._z[f"p{p}_wgt"] if self.weighted \
+            else np.ones(len(dst), np.float32)
+        return src, dst, wgt
+
+    def to_graph(self) -> G.Graph:
+        """Materialize the whole container as a resident graph.
+
+        Only for graphs that fit (tests, the resident half of bit-exact
+        cross-checks) — this concatenates every partition.
+        """
+        srcs, dsts, wgts = zip(*(self.partition_coo(p)
+                                 for p in range(self.partitions)))
+        return G.from_edge_list(
+            np.concatenate(srcs), np.concatenate(dsts),
+            num_vertices=self.num_vertices,
+            weights=np.concatenate(wgts), sort=False)
+
+    def close(self) -> None:
+        self._z.close()
+
+
+def load_partition_container(path: str) -> PartitionContainer:
+    """Open a partition container lazily (metadata read, members deferred)."""
+    return PartitionContainer(path)
+
+
+def main(argv: list[str] | None = None) -> None:
+    """CLI: ``python -m repro.data.graphs OUT.npz V E PARTITIONS [SEED]``."""
+    import sys
+    args = sys.argv[1:] if argv is None else argv
+    if len(args) not in (4, 5):
+        print("usage: python -m repro.data.graphs OUT.npz "
+              "NUM_VERTICES NUM_EDGES PARTITIONS [SEED]", file=sys.stderr)
+        raise SystemExit(2)
+    out, v, e, p = args[0], int(args[1]), int(args[2]), int(args[3])
+    seed = int(args[4]) if len(args) == 5 else 0
+    path = build_partition_container(out, v, e, partitions=p, seed=seed)
+    c = load_partition_container(path)
+    print(f"wrote {path}: |V|={c.num_vertices} |E|={c.num_edges} "
+          f"partitions={c.partitions} "
+          f"edges/part={c.edges_per_partition.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,382 @@
+"""Out-of-core partitioned execution: differential harness + unit coverage.
+
+The contract under test: a partitioned run (any interval count, any
+plane, resident graph or .npz container, straight-through or sliced) is
+bit-exact against the resident oracle for min/max/int reduces and
+float-tolerant for float-add (partials combine in ascending partition
+order — deterministic, but reassociated).  Plus the primitives: interval
+cuts, bitmap interval popcounts, per-partition COO, the byte-budgeted
+PartitionStore, the layout-cache byte budget, the plan's partition axis,
+and skip-before-transfer actually skipping on late supersteps.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core import preprocess
+from repro.core.comm import CommManager
+from repro.core.scheduler import (DirectionPolicy, ScheduleConfig,
+                                  estimate_stream_bytes, plan)
+from repro.core.translator import translate
+from repro.data import graphs as D
+from repro.serve.graph_serve import GraphServer
+
+
+@pytest.fixture(scope="module")
+def g():
+    src, dst = G.rmat_edges(2000, 16000, seed=7)
+    return G.from_edge_list(src, dst, num_vertices=2000)
+
+
+@pytest.fixture(scope="module")
+def wg():
+    rng = np.random.default_rng(3)
+    src, dst = G.rmat_edges(600, 5000, seed=11)
+    w = rng.uniform(0.5, 2.0, size=src.shape[0]).astype(np.float32)
+    return G.from_edge_list(src, dst, weights=w, num_vertices=600)
+
+
+def _parts_cfg(parts, mode="pull", budget=None):
+    return ScheduleConfig(partitions=parts, partition_budget_bytes=budget,
+                          direction=DirectionPolicy(mode=mode))
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+
+def test_edge_interval_cuts_invariants():
+    deg = np.array([5, 0, 3, 7, 1, 0, 2, 4], np.int64)
+    for parts in (1, 2, 3, 8, 20):
+        cuts = G.edge_interval_cuts(deg, parts)
+        assert cuts[0] == 0 and cuts[-1] == len(deg)
+        assert len(cuts) == parts + 1
+        assert (np.diff(cuts) >= 0).all()
+    with pytest.raises(ValueError):
+        G.edge_interval_cuts(deg, 0)
+
+
+def test_edge_interval_cuts_balance():
+    rng = np.random.default_rng(0)
+    deg = rng.integers(0, 40, size=5000).astype(np.int64)
+    cuts = G.edge_interval_cuts(deg, 8)
+    cum = np.concatenate([[0], np.cumsum(deg)])
+    per_part = cum[cuts[1:]] - cum[cuts[:-1]]
+    assert per_part.sum() == deg.sum()
+    # edge-balanced to within one vertex's degree of the ideal share
+    assert per_part.max() <= deg.sum() / 8 + deg.max()
+
+
+@pytest.mark.parametrize("cut_list", [
+    [0, 199], [0, 32, 64, 199], [0, 17, 33, 100, 150, 199],
+    [0, 0, 199, 199], [0, 199, 199]])
+def test_interval_live_counts_matches_numpy(cut_list):
+    bits = np.random.default_rng(0).integers(0, 2, 199).astype(bool)
+    words = G.pack_bits(jnp.asarray(bits))
+    got = np.asarray(G.interval_live_counts(
+        words, jnp.asarray(cut_list, jnp.int32)))
+    exp = np.array([bits[a:b].sum()
+                    for a, b in zip(cut_list[:-1], cut_list[1:])])
+    assert np.array_equal(got, exp)
+
+
+def test_partition_coo_union_is_full_edge_set(g):
+    cuts = G.edge_interval_cuts(np.asarray(g.out_degrees), 5)
+    srcs, dsts = [], []
+    for p in range(5):
+        s, d, _ = G.partition_coo(g, int(cuts[p]), int(cuts[p + 1]))
+        assert len(s) == len(d)
+        if len(s):
+            assert s.min() >= cuts[p] and s.max() < cuts[p + 1]
+        srcs.append(s)
+        dsts.append(d)
+    src, dst = np.concatenate(srcs), np.concatenate(dsts)
+    g2 = G.from_edge_list(src, dst, num_vertices=g.num_vertices, sort=False)
+    assert np.array_equal(np.asarray(g.edge_offsets),
+                          np.asarray(g2.edge_offsets))
+    assert np.array_equal(np.asarray(g.edges_dst), np.asarray(g2.edges_dst))
+
+
+# ---------------------------------------------------------------------------
+# plan: the partition axis
+# ---------------------------------------------------------------------------
+
+
+def test_plan_budget_resolves_partition_count():
+    total = estimate_stream_bytes(16000)
+    sp = plan(ScheduleConfig(partition_budget_bytes=total // 4 + 1),
+              num_vertices=2000, num_edges=16000)
+    assert sp.num_partitions == 4
+    # explicit count and budget: the larger resolved count wins
+    sp = plan(ScheduleConfig(partitions=8,
+                             partition_budget_bytes=total // 4 + 1),
+              num_vertices=2000, num_edges=16000)
+    assert sp.num_partitions == 8
+    assert "partitions=8" in sp.describe()
+
+
+def test_plan_partitions_single_pe_only():
+    with pytest.raises(ValueError, match="single-PE"):
+        plan(ScheduleConfig(partitions=2, pes=2),
+             num_vertices=2000, num_edges=16000)
+
+
+def test_plan_fixed_partitions_pins_count():
+    sp = plan(ScheduleConfig(partitions=2), num_vertices=100,
+              num_edges=1000, fixed_partitions=6)
+    assert sp.num_partitions == 6
+
+
+# ---------------------------------------------------------------------------
+# differential: partitioned vs resident
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("parts", [2, 3, 5])
+@pytest.mark.parametrize("mode", ["pull", "push", "auto"])
+def test_bfs_partitioned_bitexact(g, parts, mode):
+    ref, it_ref = translate(dsl.bfs_program(), g, ScheduleConfig()).run(
+        roots=0)
+    pp = translate(dsl.bfs_program(), g, _parts_cfg(parts, mode))
+    assert pp.report.num_partitions == parts
+    v, it = pp.run(roots=0)
+    assert int(it) == int(it_ref)
+    assert np.array_equal(np.asarray(ref), np.asarray(v))
+
+
+@pytest.mark.parametrize("parts", [2, 4])
+def test_sssp_partitioned_bitexact(wg, parts):
+    ref, _ = translate(dsl.sssp_program(), wg, ScheduleConfig()).run(roots=0)
+    v, _ = translate(dsl.sssp_program(), wg, _parts_cfg(parts)).run(roots=0)
+    assert np.array_equal(np.asarray(ref), np.asarray(v))
+
+
+def test_wcc_partitioned_bitexact(g):
+    ref, _ = translate(dsl.wcc_program(), g, ScheduleConfig()).run()
+    v, _ = translate(dsl.wcc_program(), g, _parts_cfg(3)).run()
+    assert np.array_equal(np.asarray(ref), np.asarray(v))
+
+
+def test_pagerank_partitioned_allclose(g):
+    # float add: partials combine in ascending partition order —
+    # deterministic, but reassociated vs the resident single-table sum
+    ref, _ = translate(dsl.pagerank_program(), g, ScheduleConfig()).run()
+    v, _ = translate(dsl.pagerank_program(), g, _parts_cfg(4)).run()
+    assert np.allclose(np.asarray(ref), np.asarray(v), rtol=1e-4, atol=1e-6)
+    # and the partitioned run is itself deterministic across repeats
+    v2, _ = translate(dsl.pagerank_program(), g, _parts_cfg(4)).run()
+    assert np.array_equal(np.asarray(v), np.asarray(v2))
+
+
+def test_partitions_skipped_on_late_supersteps(g):
+    pp = translate(dsl.bfs_program(), g, _parts_cfg(5))
+    pp.run(roots=0)
+    st = pp.last_run_stats
+    assert st["partitions_skipped"] >= 1
+    assert st["partitions_swept"] + st["partitions_skipped"] == \
+        st["partitions"] * (st["pull_supersteps"] + st["push_supersteps"])
+    assert st["partition_bytes_h2d"] > 0
+    assert st["partition_store"]["partitions"] == 5
+
+
+def test_partitioned_run_batch_matches_sequential(g):
+    roots = [0, 5, 17, 123]
+    cp = translate(dsl.bfs_program(), g, ScheduleConfig())
+    pp = translate(dsl.bfs_program(), g, _parts_cfg(3))
+    vb, ib = pp.run_batch(roots)
+    for i, r in enumerate(roots):
+        ref, it = cp.run(roots=r)
+        assert int(np.asarray(ib)[i]) == int(it)
+        assert np.array_equal(np.asarray(ref), np.asarray(vb[i]))
+
+
+def test_run_batch_slices_match_full_run(g):
+    roots = [0, 5, 17]
+    pp = translate(dsl.bfs_program(), g, _parts_cfg(3))
+    full_v, full_i = pp.run_batch(roots)
+    state = pp.batch_init(roots)
+    while not pp.lane_done(state).all():
+        state = pp.run_batch_slice(state, 2)
+    assert np.array_equal(np.asarray(full_v), np.asarray(state.values))
+    assert np.array_equal(np.asarray(full_i), state.iters)
+
+
+def test_lane_converges_mid_stream_harvests_correctly(g):
+    # lane 0 (root 0) converges in fewer supersteps than an isolated
+    # low-degree root's lane; harvest it mid-flight and check both
+    cp = translate(dsl.bfs_program(), g, ScheduleConfig())
+    pp = translate(dsl.bfs_program(), g, _parts_cfg(4))
+    deg = np.asarray(g.out_degrees)
+    slow_root = int(np.nonzero(deg > 0)[0][-1])
+    state = pp.batch_idle(2)
+    state = pp.lane_admit(state, 0, 0)
+    state = pp.lane_admit(state, 1, slow_root)
+    harvested = {}
+    for _ in range(pp.max_iters):
+        state = pp.run_batch_slice(state, 1)
+        done = pp.lane_done(state)
+        for lane in np.nonzero(done)[0]:
+            if int(lane) not in harvested:
+                harvested[int(lane)] = np.asarray(state.values[lane]).copy()
+        if done.all():
+            break
+    for lane, root in ((0, 0), (1, slow_root)):
+        ref, _ = cp.run(roots=root)
+        assert np.array_equal(np.asarray(ref), harvested[lane])
+
+
+# ---------------------------------------------------------------------------
+# PartitionStore + layout-cache budgets
+# ---------------------------------------------------------------------------
+
+
+def test_partition_store_budget_evicts_lru(g):
+    cuts = G.edge_interval_cuts(np.asarray(g.out_degrees), 6)
+    store = preprocess.PartitionStore(g, cuts, max_bytes=1)
+    for p in range(6):
+        store.pull_arrays(p)
+    st = store.stats()
+    assert st["evictions"] >= 3
+    # the double-buffer floor: never evicted below two entries
+    assert len(store._cache) == 2
+    store.pull_arrays(5)
+    assert store.stats()["hits"] == 1
+    unbounded = preprocess.PartitionStore(g, cuts)
+    for p in range(6):
+        unbounded.pull_arrays(p)
+        unbounded.push_arrays(p)
+    assert unbounded.stats()["evictions"] == 0
+    assert unbounded.stats()["resident_bytes"] == \
+        6 * (unbounded._entry_bytes["pull"] + unbounded._entry_bytes["push"])
+
+
+def test_partition_store_layouts_cover_edges(g):
+    cuts = G.edge_interval_cuts(np.asarray(g.out_degrees), 3)
+    store = preprocess.PartitionStore(g, cuts)
+    total_push = total_pull = 0
+    for p in range(3):
+        push = store.push_arrays(p)
+        pull = store.pull_arrays(p)
+        assert push["slot"].shape == (store.push_rows_max, store.width)
+        assert pull["slot"].shape == (store.pull_rows_max, store.width)
+        total_push += int((push["slot"] < g.num_vertices).sum())
+        total_pull += int((pull["slot"] < g.num_vertices).sum())
+    assert total_push == g.num_edges
+    assert total_pull == g.num_edges
+
+
+def test_layout_cache_byte_budget():
+    from repro.core import translator
+    translator.staging_cache_clear()
+    preprocess.layout_cache_clear()
+    try:
+        preprocess.set_layout_cache_limit(1)   # evict everything but newest
+        graphs = []
+        for seed in range(3):
+            src, dst = G.rmat_edges(200, 1500, seed=seed)
+            gg = G.from_edge_list(src, dst, num_vertices=200)
+            graphs.append(gg)
+            lay = preprocess.layouts_for(gg)
+            lay.reverse()                      # grow the entry past 1 byte
+            assert lay.nbytes() > 0
+            assert "reverse" in lay.stats()["build_times_s"]
+        info = preprocess.layout_cache_info()
+        assert info["evictions"] >= 2
+        assert info["size"] == 1
+        assert info["max_bytes"] == 1
+    finally:
+        preprocess.set_layout_cache_limit(None)
+        preprocess.layout_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# containers
+# ---------------------------------------------------------------------------
+
+
+def test_container_roundtrip_from_graph(tmp_path, g):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 4)
+    c = D.load_partition_container(path)
+    assert (c.num_vertices, c.num_edges, c.partitions) == \
+        (g.num_vertices, g.num_edges, 4)
+    g2 = c.to_graph()
+    assert np.array_equal(np.asarray(g.edge_offsets),
+                          np.asarray(g2.edge_offsets))
+    assert np.array_equal(np.asarray(g.edges_dst), np.asarray(g2.edges_dst))
+    assert np.allclose(np.asarray(g.edge_weights),
+                       np.asarray(g2.edge_weights))
+
+
+def test_chunked_builder_matches_single_shot(tmp_path):
+    path = D.build_partition_container(str(tmp_path / "r.npz"), 300, 5000,
+                                       partitions=4, seed=1, chunk_edges=700)
+    c = D.load_partition_container(path)
+    srcs, dsts = zip(*D.rmat_edge_chunks(300, 5000, seed=1, chunk_edges=700))
+    ref = G.from_edge_list(np.concatenate(srcs), np.concatenate(dsts),
+                           num_vertices=300)
+    got = c.to_graph()
+    assert np.array_equal(np.asarray(ref.edge_offsets),
+                          np.asarray(got.edge_offsets))
+    assert np.array_equal(np.asarray(ref.edges_dst),
+                          np.asarray(got.edges_dst))
+
+
+def test_container_run_matches_resident(tmp_path, g):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 4)
+    c = D.load_partition_container(path)
+    ref, it_ref = translate(dsl.bfs_program(), g, ScheduleConfig()).run(
+        roots=0)
+    pc = translate(dsl.bfs_program(), c, ScheduleConfig())
+    assert pc.report.num_partitions == 4    # container cuts pin the plan
+    v, it = pc.run(roots=0)
+    assert int(it) == int(it_ref)
+    assert np.array_equal(np.asarray(ref), np.asarray(v))
+    # under a byte budget smaller than the streamed layouts, still exact
+    pc2 = translate(dsl.bfs_program(), c,
+                    ScheduleConfig(partition_budget_bytes=200_000))
+    v2, _ = pc2.run(roots=0)
+    assert np.array_equal(np.asarray(ref), np.asarray(v2))
+    assert pc2.last_run_stats["partition_store"]["max_bytes"] == 200_000
+
+
+def test_container_cli(tmp_path, capsys):
+    out = str(tmp_path / "cli.npz")
+    D.main([out, "100", "800", "3", "2"])
+    assert os.path.exists(out)
+    assert "partitions=3" in capsys.readouterr().out
+    c = D.load_partition_container(out)
+    assert c.num_edges == 800 and c.seed == 2
+
+
+# ---------------------------------------------------------------------------
+# serving over a partitioned graph
+# ---------------------------------------------------------------------------
+
+
+def test_serving_partitioned_bitexact_vs_resident_oracle(g):
+    srv = GraphServer(g, schedule=_parts_cfg(3))
+    roots = [0, 5, 17, 123, 250]
+    queries = [srv.submit("bfs", root=r) for r in roots]
+    srv.run()
+    cp = translate(dsl.bfs_program(), g, ScheduleConfig())
+    for q, r in zip(queries, roots):
+        assert q.status == "done"
+        ref, _ = cp.run(roots=r)
+        assert np.array_equal(np.asarray(ref), np.asarray(q.result))
+
+
+def test_serving_partitioned_comm_accounts_transfers(g):
+    comm = CommManager()
+    srv = GraphServer(g, schedule=_parts_cfg(3), comm=comm)
+    srv.submit("bfs", root=0)
+    srv.run()
+    assert comm.stats.partition_bytes_h2d > 0
+    assert comm.stats.partitions_transferred > 0
+    rep = comm.report()
+    assert "overlap_efficiency" in rep
+    assert 0.0 <= rep["overlap_efficiency"] <= 1.0
