@@ -12,9 +12,12 @@ from __future__ import annotations
 import json
 import os
 import subprocess
+import sys
 import time
 
-BENCH_SCHEMA = 3          # bump when any BENCH_*.json payload shape changes
+# schema 4: run stats gained 'terminated' plus partition_retries /
+# partition_corruptions counters (fault-tolerant execution layer)
+BENCH_SCHEMA = 4          # bump when any BENCH_*.json payload shape changes
 HISTORY_DIR = os.path.join("reports", "graphs")
 HISTORY_PATH = os.path.join(HISTORY_DIR, "history.jsonl")
 
@@ -30,7 +33,6 @@ def memory_snapshot() -> dict:
     scale point *costs*, not just how fast it runs.
     """
     import resource
-    import sys
     rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
     if sys.platform != "darwin":
         rss *= 1024
@@ -38,13 +40,15 @@ def memory_snapshot() -> dict:
     try:
         import jax
         stats = jax.local_devices()[0].memory_stats()
-        if stats:
-            snap["device_bytes_in_use"] = int(stats.get("bytes_in_use", 0))
-            peak = stats.get("peak_bytes_in_use")
-            if peak is not None:
-                snap["device_peak_bytes_in_use"] = int(peak)
-    except Exception:
-        pass
+    except (ImportError, NotImplementedError, RuntimeError) as e:
+        print(f"[bench] device memory stats unavailable: {e}",
+              file=sys.stderr)
+        return snap
+    if stats:
+        snap["device_bytes_in_use"] = int(stats.get("bytes_in_use", 0))
+        peak = stats.get("peak_bytes_in_use")
+        if peak is not None:
+            snap["device_peak_bytes_in_use"] = int(peak)
     return snap
 
 
@@ -55,7 +59,8 @@ def commit() -> str:
             ["git", "rev-parse", "--short", "HEAD"],
             capture_output=True, text=True, timeout=10,
         ).stdout.strip() or "unknown"
-    except Exception:
+    except (OSError, subprocess.SubprocessError) as e:
+        print(f"[bench] git commit lookup failed: {e}", file=sys.stderr)
         return "unknown"
 
 

@@ -68,6 +68,9 @@ def _run_one(program, container, budget: int, root: int) -> dict:
         "partition_transfer_s": st["partition_transfer_s"],
         "partition_compute_s": st["partition_compute_s"],
         "overlap_efficiency": st["overlap_efficiency"],
+        "terminated": st["terminated"],
+        "partition_retries": st["partition_retries"],
+        "partition_corruptions": st["partition_corruptions"],
         "store": {k: st["partition_store"][k]
                   for k in ("resident_bytes", "max_bytes", "hits", "misses",
                             "evictions", "builds", "build_s")},

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import faults
+
 
 @dataclasses.dataclass
 class TransferStats:
@@ -57,6 +59,13 @@ class TransferStats:
     partition_prefetch_s: float = 0.0
     partition_compute_s: float = 0.0
     partition_wall_s: float = 0.0
+    # fault-tolerance counters (repro.core.stream retry path): transient
+    # fetch/transfer failures that were retried with backoff, and
+    # checksum mismatches that forced an evict + re-read from the
+    # container.  Non-zero corruptions with a completed run means the
+    # stream *recovered* — the answer is still bit-exact.
+    partition_retries: int = 0
+    partition_corruptions: int = 0
 
     def record_h2d(self, nbytes: int):
         self.host_to_device_bytes += int(nbytes)
@@ -95,6 +104,14 @@ class TransferStats:
                   - self.partition_wall_s)
         return float(np.clip(hidden / shorter, 0.0, 1.0))
 
+    def record_partition_retry(self, n: int = 1):
+        """A transient partition fetch/transfer failure was retried."""
+        self.partition_retries += int(n)
+
+    def record_partition_corruption(self, n: int = 1):
+        """A checksum mismatch forced an evict + re-read of a partition."""
+        self.partition_corruptions += int(n)
+
     def record_collective(self, nbytes_per_superstep: int, supersteps: int):
         """Accumulate one run's executed exchanges (run-loop wiring).
 
@@ -102,7 +119,13 @@ class TransferStats:
         stays what :meth:`CommManager.estimate_collective_bytes` set (a
         batched run's per-superstep volume is batch-multiplied and would
         silently redefine that documented field).
+
+        This is also the ``comm.collective`` fault-injection point: the
+        registry hook fires when a run records an executed exchange, so a
+        chaos test can prove a poisoned collective surfaces as a typed
+        error instead of a silent wrong answer.
         """
+        faults.trip("comm.collective")
         self.collective_supersteps += int(supersteps)
         self.collective_bytes_total += int(nbytes_per_superstep) * int(supersteps)
 

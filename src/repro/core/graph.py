@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..errors import GraphValidationError
+
 # Sentinel for padded edge slots (points at a dummy vertex appended at n).
 PAD = jnp.iinfo(jnp.int32).max
 
@@ -412,6 +414,61 @@ def shard_forward_ell(fe: ForwardELL, pes: int) -> ShardedForwardELL:
         num_vertices=fe.num_vertices, num_edges=fe.num_edges)
 
 
+def validate_graph(g: Graph, *, reduce: str | None = None) -> None:
+    """Structural + integrity checks; raises :class:`GraphValidationError`.
+
+    Checks (all host-side, a few O(V)/O(E) passes):
+
+    * ``edge_offsets`` has length V+1, starts at 0, is monotone
+      non-decreasing, and ends at ``num_edges``;
+    * ``edges_dst`` has length E and every destination is in ``[0, V)``;
+    * ``edge_weights`` has length E and every weight is finite;
+    * weight-domain per reduce: ``reduce='min'`` (shortest-path semantics)
+      additionally requires non-negative weights — Dijkstra/Beamer-style
+      frontier reasoning is unsound under negative edges.
+
+    Opt-in (the ``validate=`` knob on :func:`from_edge_list` and
+    ``translate``): the checks cost a few linear passes, which matters at
+    the 20M-edge streaming scale.
+    """
+    v, e = g.num_vertices, g.num_edges
+    off = np.asarray(g.edge_offsets)
+    if off.shape != (v + 1,):
+        raise GraphValidationError(
+            f"edge_offsets has shape {off.shape}, expected ({v + 1},)")
+    if v >= 0 and (off.size == 0 or off[0] != 0):
+        raise GraphValidationError("edge_offsets must start at 0")
+    if np.any(np.diff(off) < 0):
+        bad = int(np.nonzero(np.diff(off) < 0)[0][0])
+        raise GraphValidationError(
+            f"edge_offsets not monotone at vertex {bad}: "
+            f"{int(off[bad])} > {int(off[bad + 1])}")
+    if int(off[-1]) != e:
+        raise GraphValidationError(
+            f"edge_offsets ends at {int(off[-1])}, expected num_edges={e}")
+    dst = np.asarray(g.edges_dst)
+    if dst.shape != (e,):
+        raise GraphValidationError(
+            f"edges_dst has shape {dst.shape}, expected ({e},)")
+    if e and (int(dst.min()) < 0 or int(dst.max()) >= v):
+        bad = int(np.nonzero((dst < 0) | (dst >= v))[0][0])
+        raise GraphValidationError(
+            f"edges_dst[{bad}] = {int(dst[bad])} out of range [0, {v})")
+    wgt = np.asarray(g.edge_weights)
+    if wgt.shape != (e,):
+        raise GraphValidationError(
+            f"edge_weights has shape {wgt.shape}, expected ({e},)")
+    if e and not np.all(np.isfinite(wgt)):
+        bad = int(np.nonzero(~np.isfinite(wgt))[0][0])
+        raise GraphValidationError(
+            f"edge_weights[{bad}] = {wgt[bad]} is not finite")
+    if reduce == "min" and e and float(wgt.min()) < 0:
+        bad = int(np.nonzero(wgt < 0)[0][0])
+        raise GraphValidationError(
+            f"reduce='min' (distance semantics) requires non-negative "
+            f"weights; edge_weights[{bad}] = {wgt[bad]}")
+
+
 def from_edge_list(
     src: np.ndarray,
     dst: np.ndarray,
@@ -420,12 +477,24 @@ def from_edge_list(
     weights: np.ndarray | None = None,
     vertex_values: np.ndarray | None = None,
     sort: bool = True,
+    validate: bool = False,
 ) -> Graph:
-    """Build a CSR :class:`Graph` from COO edge lists (host-side)."""
+    """Build a CSR :class:`Graph` from COO edge lists (host-side).
+
+    ``validate=True`` additionally rejects out-of-range sources up front
+    and runs :func:`validate_graph` on the result — an out-of-range ``src``
+    would otherwise crash obscurely inside the bincount/cumsum below.
+    """
     src = np.asarray(src, np.int32)
     dst = np.asarray(dst, np.int32)
     if num_vertices is None:
         num_vertices = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    if validate and len(src) and (
+            int(src.min()) < 0 or int(src.max()) >= num_vertices):
+        bad = int(np.nonzero((src < 0) | (src >= num_vertices))[0][0])
+        raise GraphValidationError(
+            f"src[{bad}] = {int(src[bad])} out of range "
+            f"[0, {num_vertices})")
     e = len(src)
     if weights is None:
         weights = np.ones(e, np.float32)
@@ -437,7 +506,7 @@ def from_edge_list(
     np.cumsum(counts, out=offsets[1:])
     if vertex_values is None:
         vertex_values = np.zeros(num_vertices, np.float32)
-    return Graph(
+    g = Graph(
         vertex_values=jnp.asarray(vertex_values),
         edge_offsets=jnp.asarray(offsets, jnp.int32),
         edges_dst=jnp.asarray(dst, jnp.int32),
@@ -445,6 +514,9 @@ def from_edge_list(
         num_vertices=num_vertices,
         num_edges=e,
     )
+    if validate:
+        validate_graph(g)
+    return g
 
 
 def to_coo(g: Graph) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -469,6 +469,21 @@ class PartitionStore:
         self._evict(keep=key)
         return entry
 
+    def evict_partition(self, p: int) -> int:
+        """Drop both plane entries for partition ``p``; returns the count.
+
+        The checksum-recovery hook: on a fetch-side
+        :class:`~repro.errors.ChecksumError` the stream evicts whatever
+        this partition cached and rebuilds from the container once —
+        a poisoned cache entry must not survive the retry.
+        """
+        dropped = 0
+        for plane in ("push", "pull"):
+            if self._cache.pop((p, plane), None) is not None:
+                dropped += 1
+                self.evictions += 1
+        return dropped
+
     def _evict(self, keep: tuple) -> None:
         if self.max_bytes is None:
             return

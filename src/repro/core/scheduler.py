@@ -178,6 +178,20 @@ class ScheduleConfig:
     # resident engine.
     partitions: int = 1
     partition_budget_bytes: int | None = None
+    # fault tolerance: hard superstep budget staged into the run loop's
+    # cond.  ``None`` resolves to V+1 (the diameter bound — no simple
+    # traversal needs more), so an adversarial non-converging program
+    # terminates with partial values and ``terminated='budget'`` in
+    # ``run_stats`` instead of hanging the device loop.  A program's own
+    # ``max_iters`` still applies; the effective budget is the smaller.
+    max_supersteps: int | None = None
+    # opt-in NaN probe between supersteps (float-valued programs): when a
+    # superstep produces a NaN the frontier is frozen, the loop exits,
+    # and ``run_stats['terminated']`` reads 'diverged'.  NaN-only on
+    # purpose — +/-inf are reduce identities (SSSP's unreached vertices
+    # stay +inf), not divergence.  Off by default — the probe costs an
+    # O(V) reduction per superstep.
+    probe_divergence: bool = False
 
     def __post_init__(self):
         if self.backend not in ("auto", "dense", "sparse"):
@@ -198,6 +212,24 @@ class ScheduleConfig:
         if self.partition_budget_bytes is not None \
                 and self.partition_budget_bytes < 1:
             raise ValueError("partition_budget_bytes must be >= 1 (or None)")
+        if self.max_supersteps is not None and self.max_supersteps < 1:
+            raise ValueError("max_supersteps must be >= 1 (or None)")
+
+    def superstep_budget(self, program_max_iters: int | None,
+                         num_vertices: int) -> int:
+        """Effective superstep bound for the staged ``while_loop`` cond.
+
+        The smaller of the program's own ``max_iters`` (fixed-iteration
+        programs like PageRank) and this schedule's ``max_supersteps``;
+        the latter defaults to ``V + 1``, the diameter bound — a budget a
+        converging traversal can never hit, so the knob only bites on
+        runaway programs.
+        """
+        cap = (self.max_supersteps if self.max_supersteps is not None
+               else num_vertices + 1)
+        if program_max_iters is not None:
+            cap = min(cap, program_max_iters)
+        return max(1, cap)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -52,6 +52,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..errors import ChecksumError, StreamRetryError, TransientFault
+from . import faults
 from . import graph as G
 from . import preprocess
 from .comm import CommManager
@@ -106,11 +108,22 @@ class PartitionedGraphProgram:
     def __init__(self, program: VertexProgram, store: preprocess.PartitionStore,
                  report, max_iters: int, *, ir, fstep, fused, apply_op,
                  frontier_op, push_legal: bool, splan: SchedulePlan,
-                 comm: CommManager, out_degrees: np.ndarray):
+                 comm: CommManager, out_degrees: np.ndarray,
+                 probe_divergence: bool = False,
+                 max_retries: int = 3, retry_base_s: float = 0.01):
         self.program = program
         self.store = store
         self.report = report
         self.max_iters = max_iters
+        # NaN probe (ScheduleConfig.probe_divergence): mirrors the
+        # resident engine — a lane whose values pick up a NaN has its
+        # frontier zeroed and reports terminated='diverged'
+        self._probe = bool(probe_divergence)
+        # bounded exponential backoff for transient fetch/transfer
+        # failures: max_retries extra attempts, sleeping retry_base_s,
+        # 2·retry_base_s, 4·retry_base_s, ... between them
+        self._max_retries = int(max_retries)
+        self._retry_base_s = float(retry_base_s)
         self.last_run_stats: dict | None = None
         self._splan = splan
         self._comm = comm
@@ -276,7 +289,7 @@ class PartitionedGraphProgram:
         a = active[None, :]
         acc = self._acc_init(v)
         for p in range(self.store.partitions):
-            arr = jax.device_put(self.store.pull_arrays(p))
+            arr, _, _ = self._fetch_partition(self.store.pull_arrays, p)
             acc = self._partial["pull"](v, a, arr["key"], arr["slot"],
                                         arr["wgt"], *acc)
         new, nxt = self._finish(v, a, *acc, jnp.ones((1,), bool))
@@ -301,6 +314,52 @@ class PartitionedGraphProgram:
             return [int(p) for p in np.nonzero(live & has_edges)[0]]
         return [int(p) for p in np.nonzero(has_edges)[0]]
 
+    def _fetch_partition(self, arrays_fn, p: int):
+        """Build + transfer one partition with bounded-backoff retry.
+
+        Two recovery ladders, both observable on the comm stats:
+
+        * :class:`~repro.errors.ChecksumError` (the container's CRC32
+          caught a corrupt read) → evict whatever partition ``p`` cached,
+          re-read from the container **once** — transient corruption (a
+          torn read, a poisoned cache entry) heals, persistent corruption
+          raises on the second mismatch.  Counted as a corruption event.
+        * Transient failures (:class:`~repro.errors.TransientFault`, which
+          includes injected faults, or a backend ``RuntimeError`` from
+          ``device_put``) → retry up to ``max_retries`` times with
+          exponential backoff, then raise
+          :class:`~repro.errors.StreamRetryError` chaining the cause.
+          Each retry is counted.
+
+        Returns ``(dev, nbytes, seconds)`` like the inline fetch it
+        replaced, so the double-buffer accounting is unchanged.
+        """
+        t0 = time.perf_counter()
+        rebuilt = False
+        attempt = 0
+        while True:
+            try:
+                faults.trip("prefetch.device_put")
+                host = arrays_fn(p)
+                dev = jax.device_put(host)
+                nbytes = sum(a.nbytes for a in host.values())
+                return dev, nbytes, time.perf_counter() - t0
+            except ChecksumError:
+                if rebuilt:
+                    raise
+                rebuilt = True
+                self._comm.stats.record_partition_corruption()
+                self.store.evict_partition(p)
+            except (TransientFault, RuntimeError) as e:
+                if attempt >= self._max_retries:
+                    raise StreamRetryError(
+                        f"partition {p} fetch failed after "
+                        f"{attempt + 1} attempts: {e}",
+                        partition=p, attempts=attempt + 1) from e
+                self._comm.stats.record_partition_retry()
+                time.sleep(self._retry_base_s * (2 ** attempt))
+                attempt += 1
+
     def _stream_superstep(self, values, active, alive: np.ndarray,
                           live_parts: list[int], plane: str):
         """Sweep ``live_parts`` through the double buffer, then finish.
@@ -320,20 +379,12 @@ class PartitionedGraphProgram:
         pending = None
         for i, p in enumerate(live_parts):
             if pending is None:
-                t0 = time.perf_counter()
-                host = arrays_fn(p)
-                dev = jax.device_put(host)
-                pending = (dev, sum(a.nbytes for a in host.values()),
-                           time.perf_counter() - t0)
+                pending = self._fetch_partition(arrays_fn, p)
             dev, nbytes, issue_s = pending
             pending = None
             if i + 1 < len(live_parts):
-                t0 = time.perf_counter()
-                nxt_host = arrays_fn(live_parts[i + 1])
-                nxt_dev = jax.device_put(nxt_host)
-                pending = (nxt_dev,
-                           sum(a.nbytes for a in nxt_host.values()),
-                           time.perf_counter() - t0)
+                pending = self._fetch_partition(arrays_fn,
+                                                live_parts[i + 1])
             t0 = time.perf_counter()
             jax.block_until_ready(dev)
             self._comm.stats.record_partition_h2d(
@@ -390,6 +441,7 @@ class PartitionedGraphProgram:
             alive = ~done
             if not alive.any():
                 break
+            faults.trip("lane.superstep")
             counts, n_f, m_f = (np.asarray(a) for a in jax.device_get(
                 self._liveness(state.active)))
             direction = self._choose_direction(state, n_f, m_f, alive)
@@ -397,6 +449,12 @@ class PartitionedGraphProgram:
             live_parts = self._live_partitions(counts, alive)
             values, active = self._stream_superstep(
                 state.values, state.active, alive, live_parts, plane)
+            if self._probe and np.issubdtype(self._dtype, np.floating):
+                # divergence probe: zero the frontier of any lane whose
+                # table picked up a NaN — it freezes (partial values
+                # kept) and its stats report terminated='diverged'
+                nan_lane = jnp.any(jnp.isnan(values), axis=1)
+                active = jnp.where(nan_lane[:, None], False, active)
             # host counter roll-forward (copy: old states stay snapshots)
             iters = state.iters + alive
             pushes = state.pushes + (alive if direction == 1 else 0)
@@ -474,7 +532,8 @@ class PartitionedGraphProgram:
         s = self._comm.stats
         base = (s.partition_bytes_h2d, s.partitions_transferred,
                 s.partitions_skipped, s.partition_prefetch_s,
-                s.partition_compute_s, s.partition_wall_s)
+                s.partition_compute_s, s.partition_wall_s,
+                s.partition_retries, s.partition_corruptions)
         state = self._advance(state, None)
         stats = self._run_stats(state, lane=0, base=base)
         self.last_run_stats = stats
@@ -496,6 +555,26 @@ class PartitionedGraphProgram:
         self.last_run_stats = stats
         self.report.run_stats = stats
         return state.values, jnp.asarray(state.iters)
+
+    def _terminated(self, state: PartitionedLaneState) -> list[str]:
+        """Per-lane exit classification (mirrors the resident engine)."""
+        live = np.asarray(jax.device_get(jnp.any(state.active, axis=1)))
+        if self._probe and np.issubdtype(self._dtype, np.floating):
+            nan = np.asarray(jax.device_get(
+                jnp.any(jnp.isnan(state.values), axis=1)))
+        else:
+            nan = np.zeros_like(live)
+        out = []
+        for i in range(len(live)):
+            if nan[i]:
+                out.append("diverged")
+            elif not live[i]:
+                out.append("converged")
+            elif int(state.iters[i]) >= self.max_iters:
+                out.append("budget")
+            else:
+                out.append("running")
+        return out
 
     def _run_stats(self, state: PartitionedLaneState, lane: int,
                    base: tuple) -> dict:
@@ -533,6 +612,12 @@ class PartitionedGraphProgram:
             "partition_compute_s": compute_s,
             "partition_wall_s": wall_s,
             "overlap_efficiency": overlap,
+            # fault-tolerance counters for this run (deltas): transient
+            # fetch retries and checksum-recovery events the stream
+            # absorbed while still producing a bit-exact answer
+            "partition_retries": int(s.partition_retries - base[6]),
+            "partition_corruptions": int(s.partition_corruptions - base[7]),
+            "terminated": self._terminated(state)[lane],
             "partition_store": self.store.stats(),
         }
 
@@ -548,6 +633,7 @@ class PartitionedGraphProgram:
             "partitions": self.store.partitions,
             "partitions_swept": state.parts_swept.tolist(),
             "partitions_skipped": state.parts_skipped.tolist(),
+            "terminated": self._terminated(state),
             "partition_store": self.store.stats(),
         }
 
@@ -678,8 +764,9 @@ def translate_partitioned(program: VertexProgram, source, schedule,
         num_partitions=store.partitions,
         partition_budget_bytes=splan.partition_budget_bytes,
     )
-    max_iters = program.max_iters if program.max_iters is not None else V
+    max_iters = schedule.superstep_budget(program.max_iters, V)
     return PartitionedGraphProgram(
         program, store, report, max_iters, ir=ir, fstep=fstep, fused=fused,
         apply_op=apply_op, frontier_op=frontier_op, push_legal=push_legal,
-        splan=splan, comm=comm, out_degrees=out_deg)
+        splan=splan, comm=comm, out_degrees=out_deg,
+        probe_divergence=schedule.probe_divergence)

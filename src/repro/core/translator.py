@@ -79,6 +79,7 @@ from ..kernels import ops as kops
 from ..kernels import pull_bitmap as pull_bitmap_kernel
 from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
+from . import faults
 from . import graph as G
 from . import preprocess
 from ._jax_compat import pvary, shard_map, shard_map_unchecked
@@ -205,7 +206,8 @@ class CompiledGraphProgram:
                  loop_cache: dict | None = None, push_rf_fn=None,
                  push_stat_pes: int = 1, comm: CommManager | None = None,
                  exchange_plane: str | None = None,
-                 collective_bytes_per_superstep: int = 0):
+                 collective_bytes_per_superstep: int = 0,
+                 probe_divergence: bool = False):
         self._superstep = superstep
         self._push_superstep = push_superstep
         self._init_state = init_state
@@ -235,6 +237,11 @@ class CompiledGraphProgram:
         self._num_edges = num_edges
         self.report = report
         self.max_iters = max_iters
+        # opt-in NaN probe (ScheduleConfig.probe_divergence): a superstep
+        # producing NaN freezes the frontier so the loop exits and the run
+        # reports terminated='diverged'.  NaN only — +inf is a legitimate
+        # min-reduce identity (SSSP's unreached vertices), not divergence.
+        self._probe = bool(probe_divergence)
         self.last_run_stats: dict | None = None
 
     def init_state(self, roots=None, values=None):
@@ -294,6 +301,7 @@ class CompiledGraphProgram:
         cond, body = self._loop_fns(mode)
         E = self._num_edges
         n_pe = self._push_stat_pes
+        probe = self._probe
 
         @jax.jit
         def loop(values, active):
@@ -304,9 +312,17 @@ class CompiledGraphProgram:
             values, active, iters, _, pushes, compact, switches, \
                 pe_hi, pe_lo, pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, \
                 pull_cost = jax.lax.while_loop(cond, body, state)
+            # exit diagnostics for run_stats['terminated']: was the
+            # frontier still live (budget hit) and — probe only — did the
+            # values table pick up a NaN (divergence)?
+            live = jnp.any(active)
+            if probe and jnp.issubdtype(values.dtype, jnp.floating):
+                nanfree = ~jnp.any(jnp.isnan(values))
+            else:
+                nanfree = jnp.asarray(True)
             return values, iters, (pushes, compact, switches, pe_hi, pe_lo,
                                    pe_rows, pl_hi, pl_lo, bl_swept, bl_skip,
-                                   pull_cost)
+                                   pull_cost, live, nanfree)
 
         self._loop_cache[mode] = loop
         return loop
@@ -329,6 +345,7 @@ class CompiledGraphProgram:
         n_pe = self._push_stat_pes
         tiers = self._push_tiers
         max_iters = self.max_iters
+        probe = self._probe
 
         def choose(prev_dir, active, pull_cost):
             # frontier occupancy: n_f vertices, m_f out-edges (≤ E < 2^31)
@@ -392,6 +409,13 @@ class CompiledGraphProgram:
             new_dir, m_f = choose(direction, active, pull_cost)
             rf = live_rows(active)
             new_values, new_active, pstats = step(new_dir, values, active)
+            if probe and jnp.issubdtype(new_values.dtype, jnp.floating):
+                # divergence probe: a NaN anywhere in the new table
+                # freezes the frontier, so the loop exits on the next
+                # cond and run_stats reads terminated='diverged'.  The
+                # poisoned values are kept — they are the evidence.
+                new_active = jnp.logical_and(
+                    new_active, ~jnp.any(jnp.isnan(new_values)))
             inc = alive.astype(jnp.int32)
             values = jnp.where(alive, new_values, values)
             pushes = pushes + new_dir * inc
@@ -458,8 +482,15 @@ class CompiledGraphProgram:
         # one host transfer for the whole counter tuple (a per-scalar
         # int() would pay a device sync each)
         iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows,
-                pl_hi, pl_lo, bl_swept, bl_skip, pull_cost) = \
+                pl_hi, pl_lo, bl_swept, bl_skip, pull_cost, live,
+                nanfree) = \
             jax.device_get((iters, stats_dev))
+        if not bool(nanfree):
+            terminated = "diverged"
+        elif bool(live) and int(iters) >= self.max_iters:
+            terminated = "budget"
+        else:
+            terminated = "converged"
         pull_steps = int(iters) - int(pushes)
         exchanges = {"pull": pull_steps, "push": int(compact)}.get(
             self._exchange_plane, 0)
@@ -485,6 +516,10 @@ class CompiledGraphProgram:
             "pull_cost_model": int(pull_cost),
             "exchange_supersteps": exchanges,
             "exchange_bytes": exchanges * self._collective_bytes,
+            # how the run ended: 'converged' (frontier drained),
+            # 'budget' (superstep budget hit with a live frontier —
+            # values are partial), or 'diverged' (NaN probe fired)
+            "terminated": terminated,
         }
         if self._comm is not None and self._exchange_plane is not None:
             self._comm.stats.record_collective(self._collective_bytes,
@@ -534,12 +569,13 @@ class CompiledGraphProgram:
             return loop(values, active)
 
         values, iters, (pushes, compact, switches, pe_hi, pe_lo, pe_rows,
-                        pl_hi, pl_lo, bl_swept, bl_skip, _) = \
+                        pl_hi, pl_lo, bl_swept, bl_skip, _, live,
+                        nanfree) = \
             jax.vmap(one)(roots)
         iters_np = np.asarray(iters)
         stats = self._batch_stats(iters, pushes, compact, switches, pe_hi,
                                   pe_lo, pe_rows, pl_hi, pl_lo, bl_swept,
-                                  bl_skip)
+                                  bl_skip, live=live, nanfree=nanfree)
         if self._comm is not None and self._exchange_plane is not None:
             # physical traffic: vmap lowers the direction/tier conds to
             # execute-both-branches selects and converged lanes keep
@@ -555,12 +591,17 @@ class CompiledGraphProgram:
         return values, iters
 
     def _batch_stats(self, iters, pushes, compact, switches, pe_hi, pe_lo,
-                     pe_rows, pl_hi, pl_lo, bl_swept, bl_skip) -> dict:
+                     pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, *,
+                     live=None, nanfree=None) -> dict:
         """Per-lane stats lists from device counters (one host transfer).
 
         Shared by :meth:`run_batch` (counters straight off the vmapped
         loop) and :meth:`lane_stats` (counters off a
         :class:`BatchLaneState`) so both surfaces report identically.
+        ``live``/``nanfree`` are the per-lane exit diagnostics (frontier
+        still live / no NaN observed) behind the ``terminated`` list:
+        'converged', 'budget', 'diverged', or 'running' (a sliced lane
+        that has not finished its budgeted run yet).
         """
         (iters_np, pushes_np, compact_np, switches_np, pe_hi_np, pe_lo_np,
          pe_rows_np, pl_hi_np, pl_lo_np, bl_swept_np, bl_skip_np) = \
@@ -572,6 +613,21 @@ class CompiledGraphProgram:
         pull_edges = (pl_hi_np.astype(np.int64) << 16) + pl_lo_np
         exchanges_np = {"pull": pulls_np, "push": compact_np}.get(
             self._exchange_plane, np.zeros_like(pulls_np))
+        k = int(iters_np.shape[0])
+        live_np = (np.asarray(jax.device_get(live)) if live is not None
+                   else np.zeros(k, bool))
+        nanfree_np = (np.asarray(jax.device_get(nanfree))
+                      if nanfree is not None else np.ones(k, bool))
+        terminated = []
+        for i in range(k):
+            if not nanfree_np[i]:
+                terminated.append("diverged")
+            elif not live_np[i]:
+                terminated.append("converged")
+            elif int(iters_np[i]) >= self.max_iters:
+                terminated.append("budget")
+            else:
+                terminated.append("running")
         return {
             "batch_size": int(iters_np.shape[0]),
             "push_supersteps": pushes_np.tolist(),
@@ -589,6 +645,7 @@ class CompiledGraphProgram:
             "exchange_supersteps": exchanges_np.tolist(),
             "exchange_bytes": (exchanges_np.astype(np.int64)
                                * self._collective_bytes).tolist(),
+            "terminated": terminated,
         }
 
     # -- lane-level continuation: resumable batched runs (serving plane) ---
@@ -672,6 +729,7 @@ class CompiledGraphProgram:
         physical comm traffic on the translation-time comm manager (the
         serving plane accounts per-harvest via :meth:`lane_stats`).
         """
+        faults.trip("lane.superstep")
         key = ("slice", self._mode)
         fn = self._loop_cache.get(key)
         if fn is None:
@@ -700,10 +758,16 @@ class CompiledGraphProgram:
 
     def lane_stats(self, state: BatchLaneState) -> dict:
         """Per-lane run stats for a sliced batch (same keys as run_batch)."""
+        live = jnp.any(state.active, axis=1)
+        if self._probe and jnp.issubdtype(state.values.dtype, jnp.floating):
+            nanfree = ~jnp.any(jnp.isnan(state.values), axis=1)
+        else:
+            nanfree = None
         return self._batch_stats(
             state.iters, state.pushes, state.compact, state.switches,
             state.pe_hi, state.pe_lo, state.pe_rows, state.pl_hi,
-            state.pl_lo, state.bl_swept, state.bl_skip)
+            state.pl_lo, state.bl_swept, state.bl_skip,
+            live=live, nanfree=nanfree)
 
 
 # ---------------------------------------------------------------------------
@@ -1414,6 +1478,7 @@ def translate(
     use_pallas: bool | None = None,
     aot_compile: bool = True,
     dump_passes: bool = False,
+    validate: bool = False,
 ) -> CompiledGraphProgram:
     """Stage a DSL program into a specialized executable for graph ``g``.
 
@@ -1434,6 +1499,10 @@ def translate(
     t0 = time.perf_counter()
     schedule = schedule or ScheduleConfig()
     comm = comm or CommManager()
+    if validate and isinstance(g, G.Graph):
+        # opt-in structural validation (containers verify integrity via
+        # their per-partition checksums on every streamed fetch instead)
+        G.validate_graph(g, reduce=program.reduce)
     splan: SchedulePlan = plan(schedule, num_vertices=g.num_vertices,
                                num_edges=g.num_edges,
                                fixed_partitions=getattr(g, "partitions", None))
@@ -1499,7 +1568,7 @@ def translate(
     superstep = staged["superstep"]
     push_superstep = staged["push_superstep"]
     init_state = staged["init_state"]
-    max_iters = program.max_iters if program.max_iters is not None else V
+    max_iters = schedule.superstep_budget(program.max_iters, V)
 
     # AOT compile so translation time includes staging (paper's TT metric).
     # Executing once (rather than .lower().compile()) populates the normal
@@ -1565,7 +1634,8 @@ def translate(
         push_rf_fn=staged["push_rf_fn"],
         push_stat_pes=staged["push_stat_pes"], comm=comm,
         exchange_plane=exchange_plane,
-        collective_bytes_per_superstep=est_collective + est_frontier)
+        collective_bytes_per_superstep=est_collective + est_frontier,
+        probe_divergence=schedule.probe_divergence)
 
 
 def _stage(program, ir, g, lay, schedule, splan, use_pallas, fstep, fused,

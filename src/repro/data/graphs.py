@@ -26,13 +26,19 @@ oracle on graphs that fit both modes.
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Iterator
 
 import numpy as np
 
+from ..core import faults
 from ..core import graph as G
+from ..errors import ChecksumError, GraphValidationError
 
-CONTAINER_VERSION = 1
+# v2 adds per-partition CRC32 checksums (member ``checksums``), verified
+# on every streamed fetch; v1 containers (no checksums) still load —
+# their fetches simply skip verification.
+CONTAINER_VERSION = 2
 _DEFAULT_CHUNK_EDGES = 2_000_000
 
 
@@ -85,6 +91,23 @@ def _partition_rows(cuts: np.ndarray, out_degrees: np.ndarray,
     return push, pull
 
 
+def _partition_crc(off: np.ndarray, dst: np.ndarray,
+                   wgt: np.ndarray | None) -> int:
+    """CRC32 over one partition's stored members, chained in member order.
+
+    Computed over the exact bytes written to (and read back from) the
+    ``.npz`` — offsets, destinations, and weights when present — so a
+    fetch-side mismatch means the payload differs from what the build
+    wrote, whatever the corruption path (disk, decompress, a poisoned
+    cache).
+    """
+    crc = zlib.crc32(np.ascontiguousarray(off).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(dst).tobytes(), crc)
+    if wgt is not None:
+        crc = zlib.crc32(np.ascontiguousarray(wgt).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
 def _finalize_container(path: str, num_vertices: int, *,
                         cuts: np.ndarray, out_degrees: np.ndarray,
                         part_src: list[np.ndarray],
@@ -95,6 +118,7 @@ def _finalize_container(path: str, num_vertices: int, *,
     parts = len(cuts) - 1
     members: dict[str, np.ndarray] = {}
     edges_per_part = np.zeros(parts, np.int64)
+    checksums = np.zeros(parts, np.int64)
     in_deg_per_part = []
     for p in range(parts):
         lo, hi = int(cuts[p]), int(cuts[p + 1])
@@ -105,8 +129,11 @@ def _finalize_container(path: str, num_vertices: int, *,
         np.cumsum(np.bincount(src - lo, minlength=hi - lo), out=off[1:])
         members[f"p{p}_offsets"] = off
         members[f"p{p}_dst"] = dst.astype(np.int32)
+        wgt = None
         if part_wgt is not None:
-            members[f"p{p}_wgt"] = part_wgt[p][order]
+            wgt = part_wgt[p][order]
+            members[f"p{p}_wgt"] = wgt
+        checksums[p] = _partition_crc(off, members[f"p{p}_dst"], wgt)
         edges_per_part[p] = len(dst)
         in_deg_per_part.append(np.bincount(dst, minlength=num_vertices))
     push_rows, pull_rows = _partition_rows(cuts, out_degrees,
@@ -121,6 +148,7 @@ def _finalize_container(path: str, num_vertices: int, *,
         edges_per_partition=edges_per_part,
         push_rows=push_rows,
         pull_rows=pull_rows,
+        checksums=checksums,
     )
     d = os.path.dirname(path)
     if d:
@@ -213,9 +241,10 @@ class PartitionContainer:
         self.path = path
         self._z = np.load(path)
         meta = self._z["meta"]
-        if int(meta[0]) != CONTAINER_VERSION:
-            raise ValueError(f"container version {int(meta[0])} != "
-                             f"{CONTAINER_VERSION} ({path})")
+        if int(meta[0]) not in (1, CONTAINER_VERSION):
+            raise ValueError(f"container version {int(meta[0])} not in "
+                             f"(1, {CONTAINER_VERSION}) ({path})")
+        self.version = int(meta[0])
         self.num_vertices = int(meta[1])
         self.num_edges = int(meta[2])
         self.partitions = int(meta[3])
@@ -226,6 +255,20 @@ class PartitionContainer:
         self.edges_per_partition = self._z["edges_per_partition"]
         self.push_rows = self._z["push_rows"]
         self.pull_rows = self._z["pull_rows"]
+        # v2: per-partition CRC32s, verified on every partition fetch.
+        # v1 containers predate checksums — fetches skip verification.
+        self.checksums = self._z["checksums"] if self.version >= 2 else None
+        # load-time structural validation: the cheap metadata invariants
+        # that would otherwise surface as obscure index errors mid-stream
+        if self.cuts.shape != (self.partitions + 1,):
+            raise GraphValidationError(
+                f"container cuts shape {self.cuts.shape} != "
+                f"({self.partitions + 1},) ({path})")
+        if int(self.edges_per_partition.sum()) != self.num_edges:
+            raise GraphValidationError(
+                f"container partition edge counts sum to "
+                f"{int(self.edges_per_partition.sum())}, meta says "
+                f"{self.num_edges} ({path})")
 
     @property
     def out_degrees(self) -> np.ndarray:
@@ -233,14 +276,44 @@ class PartitionContainer:
 
     def partition_coo(self, p: int
                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Partition ``p``'s edges as global-id COO ``(src, dst, wgt)``."""
+        """Partition ``p``'s edges as global-id COO ``(src, dst, wgt)``.
+
+        Every fetch re-reads the members from the ``.npz`` view and — on
+        v2 containers — verifies their CRC32 against the checksum recorded
+        at build time, raising :class:`repro.errors.ChecksumError` on
+        mismatch (the streaming layer evicts and re-reads once before
+        giving up).  The ``container.read`` fault-injection point sits
+        between the read and the verify, so an injected corruption is
+        caught by the same checksum that guards real corruption.
+        """
         lo, hi = int(self.cuts[p]), int(self.cuts[p + 1])
         off = self._z[f"p{p}_offsets"]
         dst = self._z[f"p{p}_dst"]
+        wgt = self._z[f"p{p}_wgt"] if self.weighted else None
+        got = faults.trip("container.read",
+                          payload={"offsets": off, "dst": dst, "wgt": wgt})
+        off, dst, wgt = got["offsets"], got["dst"], got["wgt"]
+        if self.checksums is not None:
+            crc = _partition_crc(off, dst, wgt)
+            want = int(self.checksums[p]) & 0xFFFFFFFF
+            if crc != want:
+                raise ChecksumError(
+                    f"partition {p} checksum mismatch: computed "
+                    f"{crc:#010x}, container records {want:#010x} "
+                    f"({self.path})", partition=p)
         src = np.repeat(np.arange(lo, hi, dtype=np.int32), np.diff(off))
-        wgt = self._z[f"p{p}_wgt"] if self.weighted \
-            else np.ones(len(dst), np.float32)
+        if wgt is None:
+            wgt = np.ones(len(dst), np.float32)
         return src, dst, wgt
+
+    def verify(self) -> None:
+        """Eagerly checksum every partition (CLI / test hook).
+
+        Reads the whole container; the streaming path instead verifies
+        lazily, partition by partition, as fetches happen.
+        """
+        for p in range(self.partitions):
+            self.partition_coo(p)
 
     def to_graph(self) -> G.Graph:
         """Materialize the whole container as a resident graph.

@@ -53,6 +53,7 @@ from ..core import graph as G
 from ..core.comm import CommManager
 from ..core.scheduler import AdmissionPolicy, ScheduleConfig
 from ..core.translator import CompiledGraphProgram, translate
+from ..errors import InvalidQuery, QueueFull
 
 __all__ = ["GraphQuery", "GraphServer", "LandmarkTable",
            "build_landmark_table"]
@@ -74,7 +75,19 @@ class GraphQuery:
     numpy array (or float for ``'dist'``); ``served_by`` records the path
     that produced it: ``'batch'`` (ran in a lane), ``'coalesced'`` (shared
     an identical in-flight query's lane), ``'landmark'`` (bounds pinned),
-    ``'exact'`` (landmark fallback through the batch plane).
+    ``'exact'`` (landmark fallback through the batch plane),
+    ``'deadline'`` (degraded or truncated by deadline expiry).
+
+    ``deadline_s`` is an *absolute* ``time.perf_counter()`` instant
+    (``submit(deadline_s=...)`` takes relative seconds and converts);
+    past it the server stops spending supersteps on the query and
+    degrades gracefully — see :meth:`GraphServer.step`.
+    ``answer_quality`` records what the result means: ``'exact'`` (bit
+    equal to the sequential oracle), ``'bounded'`` (dist query answered
+    with its landmark upper bound, ``bounds`` holds (lower, upper)),
+    ``'partial'`` (mid-run values harvested from an expired lane — a
+    valid upper bound for min-reduce programs), ``'none'`` (expired
+    before any compute; ``result`` is None).
     """
 
     qid: int
@@ -82,18 +95,40 @@ class GraphQuery:
     root: int
     target: int | None = None
     program: Any = None
-    status: str = "queued"            # 'queued' | 'running' | 'done'
+    status: str = "queued"      # 'queued' | 'running' | 'done' | 'cancelled'
     result: Any = None
     iters: int | None = None
     stats: dict | None = None
     served_by: str | None = None
     submitted_s: float = 0.0
     finished_s: float = 0.0
+    deadline_s: float | None = None
+    answer_quality: str = "exact"
+    bounds: tuple | None = None
     followers: list = dataclasses.field(default_factory=list)
 
     @property
     def done(self) -> bool:
         return self.status == "done"
+
+    def cancel(self) -> bool:
+        """Withdraw the query; False if it already completed.
+
+        Cancellation is observed at the server's next :meth:`~GraphServer.
+        step`: a queued/waiting query is dropped, a running lane is freed
+        (promoting a coalesced follower to lane leader if one is live),
+        and a parked dist query releases its inner SSSP.
+        """
+        if self.status == "done":
+            return False
+        self.status = "cancelled"
+        return True
+
+    def expired(self, now: float) -> bool:
+        """True when a live query is past its deadline."""
+        return (self.deadline_s is not None
+                and self.status in ("queued", "running")
+                and now > self.deadline_s)
 
 
 # ---------------------------------------------------------------------------
@@ -261,6 +296,10 @@ class _BatchGroup:
             q.served_by = q.served_by or "batch"
             q.finished_s = now
             for f in q.followers:
+                if f.status == "cancelled":
+                    f.finished_s = now
+                    finished.append(f)
+                    continue
                 f.result = q.result
                 f.iters = q.iters
                 f.stats = q.stats
@@ -271,6 +310,99 @@ class _BatchGroup:
             q.followers = []
             self.occupants[lane] = None
             finished.append(q)
+        return finished
+
+    def reap(self, now: float) -> list[tuple[GraphQuery, GraphQuery | None]]:
+        """Retire cancelled/deadline-expired queries; free their lanes.
+
+        Returns ``(query, promoted)`` pairs — ``promoted`` is the
+        coalesced follower that inherited a cancelled leader's lane (the
+        server re-points its in-flight table at it), else None.  A lane
+        whose *deadline* expired finalizes leader and followers together
+        with the mid-run values (``answer_quality='partial'``); a
+        *cancelled* leader's computation survives if any follower is
+        still live.  Waiting (never-admitted) queries drop with
+        ``answer_quality='none'``.
+        """
+        finished: list[tuple[GraphQuery, GraphQuery | None]] = []
+        active = None
+        stats = values = iters = None
+        for lane, q in enumerate(self.occupants):
+            if q is None or not (q.status == "cancelled" or q.expired(now)):
+                continue
+            if q.status == "cancelled":
+                live = [f for f in q.followers if f.status != "cancelled"]
+                dead = [f for f in q.followers if f.status == "cancelled"]
+                q.finished_s = now
+                for f in dead:
+                    f.finished_s = now
+                    finished.append((f, None))
+                if live:
+                    leader = live[0]
+                    leader.followers = live[1:]
+                    q.followers = []
+                    self.occupants[lane] = leader
+                    finished.append((q, leader))
+                    continue            # lane keeps running under leader
+                q.followers = []
+                finished.append((q, None))
+            else:                       # deadline expiry: shared fate
+                if values is None:
+                    stats = self.compiled.lane_stats(self.state)
+                    values = np.asarray(self.state.values)
+                    iters = np.asarray(self.state.iters)
+                q.result = values[lane].copy()
+                q.iters = int(iters[lane])
+                q.stats = {k: (v[lane] if isinstance(v, list) else v)
+                           for k, v in stats.items() if k != "batch_size"}
+                q.answer_quality = "partial"
+                q.served_by = "deadline"
+                q.status = "done"
+                q.finished_s = now
+                for f in q.followers:
+                    if f.status != "cancelled":
+                        f.result = q.result
+                        f.iters = q.iters
+                        f.stats = q.stats
+                        f.answer_quality = "partial"
+                        f.served_by = "coalesced"
+                        f.status = "done"
+                    f.finished_s = now
+                    finished.append((f, None))
+                q.followers = []
+                finished.append((q, None))
+            if active is None:
+                active = self.state.active
+            active = active.at[lane].set(False)
+            self.occupants[lane] = None
+        if active is not None:
+            self.state = self.state._replace(active=active)
+        if self.waiting:
+            keep: collections.deque[GraphQuery] = collections.deque()
+            for q in self.waiting:
+                if q.status == "cancelled" or q.expired(now):
+                    if q.status != "cancelled":
+                        q.answer_quality = "none"
+                        q.served_by = "deadline"
+                        q.status = "done"
+                    q.finished_s = now
+                    live = [f for f in q.followers
+                            if f.status != "cancelled"]
+                    for f in q.followers:
+                        if f not in live:
+                            f.finished_s = now
+                            finished.append((f, None))
+                    q.followers = []
+                    if live:        # followers take over the queue slot
+                        leader = live[0]
+                        leader.followers = live[1:]
+                        keep.append(leader)
+                        finished.append((q, leader))
+                    else:
+                        finished.append((q, None))
+                else:
+                    keep.append(q)
+            self.waiting = keep
         return finished
 
 
@@ -336,37 +468,48 @@ class GraphServer:
         if kind == "ppr":
             return dsl.ppr_program(root, damping=self._ppr_damping,
                                    iters=self._ppr_iters)
-        raise ValueError(f"unsupported query kind: {kind!r} "
-                         f"(one of {self.KINDS})")
+        raise InvalidQuery(f"unsupported query kind: {kind!r} "
+                           f"(one of {self.KINDS})")
 
     def submit(self, kind: str, root: int, *, target: int | None = None,
-               program=None) -> GraphQuery:
+               program=None, deadline_s: float | None = None) -> GraphQuery:
         """Enqueue a query; returns the (not yet answered) handle.
 
         ``kind='dist'`` requires ``target`` and may complete immediately
         when the landmark bounds pin the answer.  ``program`` overrides
         the template (custom :class:`VertexProgram`); it must be rooted
         the way bfs/sssp are (``init_state(roots=root)`` semantics).
+        ``deadline_s`` is a *relative* budget in seconds; past it the
+        server degrades the answer instead of finishing the run (see
+        :meth:`step`).  Malformed queries raise
+        :class:`repro.errors.InvalidQuery`; back-pressure raises
+        :class:`repro.errors.QueueFull` (both keep their legacy
+        ``ValueError``/``RuntimeError`` bases).
         """
         V = self.graph.num_vertices
         if not 0 <= int(root) < V:
-            raise ValueError(f"root {root} out of range [0, {V})")
+            raise InvalidQuery(f"root {root} out of range [0, {V})")
         if kind == "dist":
             if target is None:
-                raise ValueError("dist queries need target=")
+                raise InvalidQuery("dist queries need target=")
             if not 0 <= int(target) < V:
-                raise ValueError(f"target {target} out of range [0, {V})")
+                raise InvalidQuery(f"target {target} out of range [0, {V})")
         elif target is not None:
-            raise ValueError(f"target= is only for dist queries, not {kind}")
+            raise InvalidQuery(
+                f"target= is only for dist queries, not {kind}")
         if self.admission.max_queue and \
                 self.pending >= self.admission.max_queue:
-            raise RuntimeError(
+            raise QueueFull(
                 f"queue full ({self.admission.max_queue}); drain with "
-                "step()/run() before submitting more")
+                "step()/run() before submitting more",
+                pending=self.pending, max_queue=self.admission.max_queue)
+        now = time.perf_counter()
         q = GraphQuery(qid=self._next_qid, kind=kind, root=int(root),
                        target=None if target is None else int(target),
                        program=program or self._program_for(kind, int(root)),
-                       submitted_s=time.perf_counter())
+                       submitted_s=now,
+                       deadline_s=None if deadline_s is None
+                       else now + float(deadline_s))
         self._next_qid += 1
         if kind == "dist" and self.table is not None:
             lo, up = self.table.bounds(q.root, q.target)
@@ -411,21 +554,63 @@ class GraphServer:
         return grp
 
     def _route(self) -> None:
-        """Drain the front queue into per-program groups (+ coalescing)."""
+        """Drain the front queue into per-program groups (+ coalescing).
+
+        Cancelled queries retire here; queries already past their
+        deadline never reach a lane — dist degrades to its landmark
+        bounds, others finalize empty (``answer_quality='none'``).
+        """
+        now = time.perf_counter()
         while self._queue:
             q = self._queue.popleft()
+            if q.status == "cancelled":
+                q.finished_s = now
+                self.done.append(q)
+                continue
+            if q.expired(now):
+                self._degrade(q, now)
+                continue
             if q.kind == "dist":
                 # exact fallback: ride a full sssp from root through the
                 # batch plane (coalescing with any in-flight sssp from the
                 # same root), then read off values[target] when it lands
                 inner = GraphQuery(qid=-q.qid - 1, kind="sssp",
                                    root=q.root, program=q.program,
-                                   submitted_s=q.submitted_s)
+                                   submitted_s=q.submitted_s,
+                                   deadline_s=q.deadline_s)
                 self._parked.append((q, inner))
                 q.status = "running"
                 self._enqueue(inner)
             else:
                 self._enqueue(q)
+
+    def _degrade(self, q: GraphQuery, now: float,
+                 inner: GraphQuery | None = None) -> None:
+        """Deadline fallback: best available answer without more compute.
+
+        ``dist`` queries fall back to their landmark (lower, upper)
+        bounds — tightened by the inner SSSP's partial distances when the
+        lane ran at all (mid-run min-reduce values are valid upper
+        bounds) — and report ``answer_quality='bounded'``.  Other kinds
+        have no cheap bound, so they finalize with ``result=None`` and
+        ``answer_quality='none'``.
+        """
+        if q.kind == "dist":
+            lo, up = (self.table.bounds(q.root, q.target)
+                      if self.table is not None else (0.0, float("inf")))
+            if inner is not None and inner.result is not None:
+                up = min(up, float(np.asarray(inner.result)[q.target]))
+            q.result = float(up)
+            # float32 table noise can push lower an ulp past upper when a
+            # landmark sits on the shortest path — report a sane interval
+            q.bounds = (min(float(lo), float(up)), float(up))
+            q.answer_quality = "bounded"
+        else:
+            q.answer_quality = "none"
+        q.served_by = "deadline"
+        q.status = "done"
+        q.finished_s = now
+        self.done.append(q)
 
     def _enqueue(self, q: GraphQuery) -> None:
         """Coalesce onto an identical in-flight query or take a lane."""
@@ -442,7 +627,11 @@ class GraphServer:
     def _resolve_parked(self, now: float) -> None:
         still: list[tuple[GraphQuery, GraphQuery]] = []
         for q, inner in self._parked:
-            if inner.done:
+            if q.status == "cancelled":
+                inner.cancel()
+                q.finished_s = now
+                self.done.append(q)
+            elif inner.done and inner.answer_quality == "exact":
                 q.result = float(inner.result[q.target])
                 q.iters = inner.iters
                 q.stats = inner.stats
@@ -450,19 +639,48 @@ class GraphServer:
                 q.served_by = "exact"
                 q.finished_s = now
                 self.done.append(q)
+            elif (q.expired(now) or inner.status == "cancelled"
+                  or inner.done):
+                # deadline hit (or the inner run was truncated by one):
+                # stop the inner sweep and serve landmark bounds instead
+                inner.cancel()
+                self._degrade(q, now, inner=inner)
             else:
                 still.append((q, inner))
         self._parked = still
 
+    def _retire(self, q: GraphQuery,
+                promoted: GraphQuery | None = None) -> None:
+        """Drop a finished/cancelled query from the in-flight table."""
+        key = (q.program, q.root)
+        if self._inflight.get(key) is q:
+            if promoted is not None:
+                self._inflight[key] = promoted
+            else:
+                del self._inflight[key]
+        if q.qid >= 0:
+            self.done.append(q)
+
     def step(self) -> bool:
-        """One serving iteration: route → admit → slice → harvest.
+        """One serving iteration: route → reap → admit → slice → harvest.
 
         Returns True while the server still holds unanswered queries.
+        The reap pass enforces deadlines and cancellation: expired lanes
+        finalize with their mid-run values (``answer_quality='partial'``)
+        and free their slots, cancelled lanes hand off to a live
+        coalesced follower or free outright, and parked dist queries past
+        deadline degrade to landmark bounds (``answer_quality='bounded'``)
+        — a deadline never hangs a slot or silently drops a query.
         """
         self._route()
         budget = self.admission.slice_supersteps
         progressed = False
         for program, grp in list(self._groups.items()):
+            now = time.perf_counter()
+            reaped = grp.reap(now)
+            for q, promoted in reaped:
+                self._retire(q, promoted)
+            progressed = progressed or bool(reaped)
             if grp.idle:
                 continue
             progressed = True
@@ -470,11 +688,7 @@ class GraphServer:
             grp.slice(budget)
             now = time.perf_counter()
             for q in grp.harvest(now):
-                key = (q.program, q.root)
-                if self._inflight.get(key) is q:
-                    del self._inflight[key]
-                if q.qid >= 0:
-                    self.done.append(q)
+                self._retire(q)
         self._resolve_parked(time.perf_counter())
         return progressed or bool(self._queue) or bool(self._parked)
 

@@ -1,0 +1,236 @@
+"""Chaos suite: every armed injection point recovers or fails typed.
+
+The fault-tolerance contract (ROADMAP robustness pillar): for each named
+injection point in :mod:`repro.core.faults`, a run under an armed fault
+either
+
+* **recovers** — bounded retries / checksum-triggered rebuild, the
+  retry/corruption counters say exactly what happened, and the answer is
+  **bit-equal** to the fault-free run; or
+* **fails typed** — a :class:`repro.errors.ReproError` subclass, never a
+  bare crash, never a hang (every test runs under a SIGALRM watchdog),
+  never a silently wrong answer.
+
+The registry itself (arm/disarm/times/after/rate determinism) is pinned
+first, since every other guarantee rides on it firing predictably.
+"""
+import signal
+
+import numpy as np
+import pytest
+
+from repro import errors
+from repro.core import dsl
+from repro.core import faults
+from repro.core import graph as G
+from repro.core.comm import CommManager
+from repro.core.scheduler import DirectionPolicy, ScheduleConfig
+from repro.core.translator import translate
+from repro.data import graphs as D
+
+pytestmark = pytest.mark.chaos
+
+TIMEOUT_S = 120
+
+
+@pytest.fixture(autouse=True)
+def _no_hang_and_clean_registry():
+    """SIGALRM watchdog (no test may hang) + pristine fault registry."""
+    faults.reset()
+
+    def _alarm(signum, frame):
+        raise AssertionError(f"chaos test hung (> {TIMEOUT_S}s)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+        faults.reset()
+
+
+@pytest.fixture(scope="module")
+def g():
+    src, dst = G.rmat_edges(800, 6400, seed=5)
+    return G.from_edge_list(src, dst, num_vertices=800)
+
+
+@pytest.fixture(scope="module")
+def container(g, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("chaos") / "c.npz")
+    D.container_from_graph(path, g, 3)
+    return path
+
+
+def _stream_bfs(path, *, retry_base_s=0.0):
+    comm = CommManager()
+    c = D.load_partition_container(path)
+    prog = translate(dsl.bfs_program(), c,
+                     ScheduleConfig(direction=DirectionPolicy(mode="push")),
+                     comm)
+    prog._retry_base_s = retry_base_s       # keep chaos tests fast
+    values, iters = prog.run(roots=0)
+    return np.asarray(values), prog.last_run_stats
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_point_rejected():
+    with pytest.raises(ValueError, match="unknown injection point"):
+        faults.arm("no.such.point")
+
+
+def test_trip_unarmed_is_identity():
+    payload = {"dst": np.arange(4, dtype=np.int32)}
+    assert faults.trip("container.read", payload) is payload
+    faults.trip("lane.superstep")            # no payload: silently nothing
+
+
+def test_times_and_after_window():
+    plan = faults.arm("lane.superstep", times=2, after=1)
+    faults.trip("lane.superstep")                       # call 1: warm-up
+    for _ in range(2):                                  # calls 2-3: fire
+        with pytest.raises(errors.InjectedFault):
+            faults.trip("lane.superstep")
+    faults.trip("lane.superstep")                       # call 4: exhausted
+    assert plan.calls == 4 and plan.fired == 2
+    assert faults.fired("lane.superstep") == 2
+
+
+def test_rate_mode_is_seed_deterministic():
+    def fire_pattern(seed):
+        faults.reset()
+        faults.arm("lane.superstep", rate=0.5, times=10 ** 9, seed=seed)
+        pat = []
+        for _ in range(32):
+            try:
+                faults.trip("lane.superstep")
+                pat.append(0)
+            except errors.InjectedFault:
+                pat.append(1)
+        return pat
+
+    assert fire_pattern(7) == fire_pattern(7)
+    assert fire_pattern(7) != fire_pattern(8)
+    assert 0 < sum(fire_pattern(7)) < 32
+
+
+def test_injected_context_disarms_on_exit():
+    with faults.injected("container.read", mode="corrupt") as plan:
+        assert faults.active() == ("container.read",)
+        faults.trip("container.read", {"dst": np.zeros(8, np.int32)})
+        assert plan.fired == 1
+    assert faults.active() == ()
+
+
+def test_corrupt_mode_flips_exactly_one_element():
+    clean = {"offsets": np.arange(5, dtype=np.int64),
+             "dst": np.arange(16, dtype=np.int32)}
+    faults.arm("container.read", mode="corrupt")
+    got = faults.trip("container.read", dict(clean))
+    assert np.array_equal(got["offsets"], clean["offsets"])
+    diff = got["dst"] != clean["dst"]
+    assert diff.sum() == 1
+    # one bit-flip, and the original payload arrays are untouched
+    assert int(np.abs(got["dst"][diff] ^ clean["dst"][diff])[0]) == 1
+
+
+def test_injected_fault_is_transient_and_typed():
+    assert issubclass(errors.InjectedFault, errors.TransientFault)
+    assert issubclass(errors.TransientFault, errors.ReproError)
+
+
+# ---------------------------------------------------------------------------
+# prefetch.device_put — transient H2D failures retry with backoff
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_transient_fault_recovers_bit_equal(container):
+    base, _ = _stream_bfs(container)
+    with faults.injected("prefetch.device_put", times=2) as plan:
+        values, stats = _stream_bfs(container)
+    assert plan.fired == 2
+    assert stats["partition_retries"] == 2
+    assert stats["partition_corruptions"] == 0
+    assert stats["terminated"] == "converged"
+    np.testing.assert_array_equal(values, base)
+
+
+def test_prefetch_persistent_fault_raises_typed(container):
+    with faults.injected("prefetch.device_put", times=10 ** 6):
+        with pytest.raises(errors.StreamRetryError) as ei:
+            _stream_bfs(container)
+    assert ei.value.attempts == 4            # 1 try + max_retries=3
+    assert ei.value.partition >= 0
+    assert isinstance(ei.value, errors.ReproError)
+
+
+# ---------------------------------------------------------------------------
+# container.read — corruption is caught by CRC, rebuilt once
+# ---------------------------------------------------------------------------
+
+
+def test_container_corruption_recovers_via_rebuild(container):
+    base, _ = _stream_bfs(container)
+    with faults.injected("container.read", mode="corrupt", times=1) as plan:
+        values, stats = _stream_bfs(container)
+    assert plan.fired == 1
+    assert stats["partition_corruptions"] == 1
+    assert stats["terminated"] == "converged"
+    np.testing.assert_array_equal(values, base)
+
+
+def test_container_persistent_corruption_raises_checksum(container):
+    with faults.injected("container.read", mode="corrupt", times=10 ** 6):
+        with pytest.raises(errors.ChecksumError) as ei:
+            _stream_bfs(container)
+    assert ei.value.partition is not None
+
+
+# ---------------------------------------------------------------------------
+# lane.superstep — a poisoned superstep fails typed, never hangs
+# ---------------------------------------------------------------------------
+
+
+def test_streamed_superstep_fault_raises_typed(container):
+    with faults.injected("lane.superstep", after=1):
+        with pytest.raises(errors.InjectedFault):
+            _stream_bfs(container)
+
+
+def test_serving_slice_fault_raises_typed(g):
+    from repro.serve.graph_serve import GraphServer
+    srv = GraphServer(g)
+    q = srv.submit("bfs", root=0)
+    with faults.injected("lane.superstep"):
+        with pytest.raises(errors.InjectedFault):
+            srv.run()
+    # the fault left the query unanswered, not wrongly answered
+    assert not q.done
+    faults.reset()
+    srv.run()
+    assert q.done and q.answer_quality == "exact"
+
+
+# ---------------------------------------------------------------------------
+# comm.collective — multi-PE exchange accounting fails typed
+# ---------------------------------------------------------------------------
+
+
+def test_collective_fault_raises_typed(g):
+    if len(__import__("jax").devices()) < 2:
+        pytest.skip("needs 2 host devices")
+    comm = CommManager()
+    prog = translate(dsl.bfs_program(), g,
+                     ScheduleConfig(pes=2, backend="sparse"), comm)
+    with faults.injected("comm.collective"):
+        with pytest.raises(errors.InjectedFault):
+            prog.run(roots=0)
+    values, _ = prog.run(roots=0)            # disarmed: runs clean
+    base, _ = translate(dsl.bfs_program(), g, ScheduleConfig()).run(roots=0)
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(base))

@@ -1,0 +1,428 @@
+"""Robustness layer: bounded runs, validated inputs, checksums, deadlines.
+
+Four contracts, one file:
+
+* **Bounded supersteps** — an adversarial non-converging program (the
+  sign-flip oscillator below never drains its frontier) terminates
+  within ``ScheduleConfig.max_supersteps`` with partial values and
+  ``run_stats['terminated'] == 'budget'`` under ``run``, ``run_batch``,
+  AND the streamed out-of-core engine; the NaN probe classifies
+  divergent float runs as ``'diverged'``.
+* **Validated inputs** — ``validate_graph`` rejects malformed CSR
+  (non-monotone offsets, out-of-range destinations, bad weights) with
+  :class:`repro.errors.GraphValidationError`, reachable from builders
+  and ``translate(validate=True)``.
+* **Checksummed containers** — v2 ``.npz`` containers carry per-
+  partition CRC32s verified on every fetch; tampered bytes raise
+  :class:`~repro.errors.ChecksumError`, v1 containers still load.
+* **Serving deadlines** — expired queries degrade (landmark bounds /
+  partial values / typed back-pressure) instead of hanging a lane.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import errors
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core.comm import CommManager
+from repro.core.preprocess import PartitionStore
+from repro.core.scheduler import AdmissionPolicy, ScheduleConfig
+from repro.core.translator import translate
+from repro.data import graphs as D
+from repro.serve.graph_serve import GraphServer
+
+
+@pytest.fixture(scope="module")
+def g():
+    src, dst = G.rmat_edges(500, 4000, seed=9)
+    return G.from_edge_list(src, dst, num_vertices=500)
+
+
+def _oscillator():
+    """Adversarial program: apply flips sign forever, frontier never
+    drains (all-active) — without a superstep budget this never stops."""
+    return dsl.VertexProgram(
+        name="oscillator",
+        gather=lambda v, w, d: v,
+        reduce="add",
+        apply=lambda old, s: -old,
+        init_value=1.0,
+        frontier="all",
+        mask_inactive=False,
+    )
+
+
+def _diverger():
+    """apply produces NaN on step one (sqrt of a negative)."""
+    return dsl.VertexProgram(
+        name="diverger",
+        gather=lambda v, w, d: v,
+        reduce="add",
+        apply=lambda old, s: jnp.sqrt(old - 2.0),
+        init_value=1.0,
+        frontier="all",
+        mask_inactive=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# bounded supersteps
+# ---------------------------------------------------------------------------
+
+
+def test_superstep_budget_resolution():
+    cfg = ScheduleConfig()
+    assert cfg.superstep_budget(None, 100) == 101          # diameter bound
+    assert cfg.superstep_budget(20, 100) == 20             # program caps
+    cfg = ScheduleConfig(max_supersteps=5)
+    assert cfg.superstep_budget(None, 100) == 5
+    assert cfg.superstep_budget(3, 100) == 3               # min of the two
+    with pytest.raises(ValueError):
+        ScheduleConfig(max_supersteps=0)
+
+
+def test_oscillator_terminates_budget_run(g):
+    prog = translate(_oscillator(), g, ScheduleConfig(max_supersteps=7))
+    values, iters = prog.run()
+    assert int(iters) == 7
+    assert prog.last_run_stats["terminated"] == "budget"
+    # partial values, not garbage: 7 sign flips of the all-ones init
+    np.testing.assert_allclose(np.asarray(values), -np.ones(g.num_vertices))
+
+
+def test_oscillator_terminates_budget_run_batch(g):
+    prog = translate(_oscillator(), g, ScheduleConfig(max_supersteps=4))
+    values, iters = prog.run_batch(np.array([0, 3]))
+    assert np.asarray(iters).tolist() == [4, 4]
+    assert prog.last_run_stats["terminated"] == ["budget", "budget"]
+    assert np.isfinite(np.asarray(values)).all()
+
+
+def test_oscillator_terminates_budget_streamed(g, tmp_path):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 3)
+    c = D.load_partition_container(path)
+    prog = translate(_oscillator(), c, ScheduleConfig(max_supersteps=6),
+                     CommManager())
+    values, iters = prog.run()
+    assert int(iters) == 6
+    assert prog.last_run_stats["terminated"] == "budget"
+    assert np.isfinite(np.asarray(values)).all()
+
+
+def test_converged_run_reports_converged(g):
+    prog = translate(dsl.bfs_program(), g, ScheduleConfig())
+    prog.run(roots=0)
+    assert prog.last_run_stats["terminated"] == "converged"
+
+
+def test_divergence_probe_classifies_nan(g):
+    prog = translate(_diverger(), g,
+                     ScheduleConfig(probe_divergence=True, max_supersteps=50))
+    values, iters = prog.run()
+    assert prog.last_run_stats["terminated"] == "diverged"
+    assert int(iters) <= 2                     # probe stops it immediately
+    assert np.isnan(np.asarray(values)).any()
+
+
+def test_probe_off_nan_runs_to_budget(g):
+    prog = translate(_diverger(), g, ScheduleConfig(max_supersteps=5))
+    _, iters = prog.run()
+    assert int(iters) == 5
+    assert prog.last_run_stats["terminated"] == "budget"
+
+
+def test_probe_does_not_flag_inf_identity(g):
+    """+inf is the min-reduce identity (unreached SSSP vertices), not
+    divergence — the probe must be NaN-only."""
+    rng = np.random.default_rng(1)
+    src, dst = G.rmat_edges(300, 1500, seed=2)
+    w = rng.uniform(0.1, 1.0, src.shape[0]).astype(np.float32)
+    wg = G.from_edge_list(src, dst, weights=w, num_vertices=300)
+    prog = translate(dsl.sssp_program(), wg,
+                     ScheduleConfig(probe_divergence=True))
+    values, _ = prog.run(roots=0)
+    assert np.isinf(np.asarray(values)).any()
+    assert prog.last_run_stats["terminated"] == "converged"
+
+
+# ---------------------------------------------------------------------------
+# validated inputs
+# ---------------------------------------------------------------------------
+
+
+def test_validate_graph_accepts_well_formed(g):
+    G.validate_graph(g)
+    G.validate_graph(g, reduce="min")
+
+
+def _graph_with(offsets=None, dst=None, weights=None, base=None):
+    gg = base
+    return G.Graph(
+        num_vertices=gg.num_vertices, num_edges=gg.num_edges,
+        edge_offsets=offsets if offsets is not None else gg.edge_offsets,
+        edges_dst=dst if dst is not None else gg.edges_dst,
+        edge_weights=weights if weights is not None else gg.edge_weights,
+        vertex_values=gg.vertex_values)
+
+
+def test_validate_graph_rejects_nonmonotone_offsets(g):
+    off = np.asarray(g.edge_offsets).copy()
+    off[3] = off[2] + 10 ** 6
+    with pytest.raises(errors.GraphValidationError, match="monotone"):
+        G.validate_graph(_graph_with(offsets=jnp.asarray(off), base=g))
+
+
+def test_validate_graph_rejects_out_of_range_dst(g):
+    dst = np.asarray(g.edges_dst).copy()
+    dst[5] = g.num_vertices + 7
+    with pytest.raises(errors.GraphValidationError, match="out of range"):
+        G.validate_graph(_graph_with(dst=jnp.asarray(dst), base=g))
+
+
+def test_validate_graph_rejects_bad_weights():
+    src = np.array([0, 1]); dst = np.array([1, 2])
+    w = np.array([1.0, -2.0], np.float32)
+    wg = G.from_edge_list(src, dst, weights=w, num_vertices=3)
+    G.validate_graph(wg)                       # negative weights are legal…
+    with pytest.raises(errors.GraphValidationError, match="negative"):
+        G.validate_graph(wg, reduce="min")     # …but not under min-reduce
+    w2 = np.array([1.0, np.nan], np.float32)
+    wg2 = G.from_edge_list(src, dst, weights=w2, num_vertices=3)
+    with pytest.raises(errors.GraphValidationError, match="finite"):
+        G.validate_graph(wg2)
+
+
+def test_from_edge_list_validate_knob():
+    with pytest.raises(errors.GraphValidationError):
+        G.from_edge_list(np.array([0, 9]), np.array([1, 1]),
+                         num_vertices=3, validate=True)
+    gg = G.from_edge_list(np.array([0, 1]), np.array([1, 2]),
+                          num_vertices=3, validate=True)
+    assert gg.num_edges == 2
+
+
+def test_translate_validate_knob(g):
+    dst = np.asarray(g.edges_dst).copy()
+    dst[0] = g.num_vertices + 1
+    bad = _graph_with(dst=jnp.asarray(dst), base=g)
+    with pytest.raises(errors.GraphValidationError):
+        translate(dsl.bfs_program(), bad, ScheduleConfig(), validate=True)
+    # the error is also a ValueError for legacy callers
+    assert issubclass(errors.GraphValidationError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# checksummed containers
+# ---------------------------------------------------------------------------
+
+
+def test_container_v2_roundtrip_and_verify(g, tmp_path):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 4)
+    c = D.load_partition_container(path)
+    assert c.version == D.CONTAINER_VERSION == 2
+    assert c.checksums is not None and len(c.checksums) == 4
+    c.verify()                                 # every partition CRC-clean
+
+
+def test_container_tamper_detected(g, tmp_path):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 3)
+    members = dict(np.load(path))
+    members["p1_dst"] = members["p1_dst"].copy()
+    members["p1_dst"][0] ^= 1                  # single bit flip
+    np.savez(path, **members)
+    c = D.load_partition_container(path)
+    c.partition_coo(0)                         # untampered partitions fine
+    with pytest.raises(errors.ChecksumError, match="partition 1"):
+        c.partition_coo(1)
+    with pytest.raises(errors.ChecksumError):
+        c.verify()
+
+
+def test_container_v1_backcompat(g, tmp_path):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 3)
+    members = dict(np.load(path))
+    del members["checksums"]
+    meta = members["meta"].copy()
+    meta[0] = 1
+    members["meta"] = meta
+    np.savez(path, **members)
+    c = D.load_partition_container(path)       # v1: loads, no verify
+    assert c.version == 1 and c.checksums is None
+    off, dst, wgt = c.partition_coo(1)
+    assert dst.size > 0
+
+
+def test_container_single_partition(g, tmp_path):
+    path = D.container_from_graph(str(tmp_path / "c.npz"), g, 1)
+    c = D.load_partition_container(path)
+    assert c.partitions == 1
+    c.verify()
+    base, _ = translate(dsl.bfs_program(), g, ScheduleConfig()).run(roots=0)
+    prog = translate(dsl.bfs_program(), c, ScheduleConfig(), CommManager())
+    values, _ = prog.run(roots=0)
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(base))
+
+
+# ---------------------------------------------------------------------------
+# partition store floor + eviction
+# ---------------------------------------------------------------------------
+
+
+def test_store_budget_below_double_buffer_floor(g):
+    cuts = G.edge_interval_cuts(np.asarray(g.out_degrees, np.int64), 4)
+    store = PartitionStore(g, cuts, max_bytes=1)   # absurdly small budget
+    for p in range(4):
+        store.push_arrays(p)
+        # the LRU never evicts below two entries — the double-buffer
+        # floor the streamed engine's overlap depends on
+        assert 1 <= len(store._cache) <= 2
+    assert store.evictions > 0
+    # and a budgeted end-to-end run still answers exactly
+    base, _ = translate(dsl.bfs_program(), g, ScheduleConfig()).run(roots=0)
+    prog = translate(dsl.bfs_program(), g,
+                     ScheduleConfig(partitions=4, partition_budget_bytes=1),
+                     CommManager())
+    values, _ = prog.run(roots=0)
+    np.testing.assert_array_equal(np.asarray(values), np.asarray(base))
+
+
+def test_store_evict_partition(g):
+    cuts = G.edge_interval_cuts(np.asarray(g.out_degrees, np.int64), 3)
+    store = PartitionStore(g, cuts)
+    store.push_arrays(1)
+    store.pull_arrays(1)
+    assert store.evict_partition(1) == 2
+    assert store.evict_partition(1) == 0       # idempotent
+    store.push_arrays(1)                       # rebuilds cleanly
+
+
+# ---------------------------------------------------------------------------
+# serving deadlines, cancellation, typed back-pressure
+# ---------------------------------------------------------------------------
+
+
+def test_queue_full_typed(g):
+    srv = GraphServer(g, admission=AdmissionPolicy(max_queue=2))
+    srv.submit("bfs", root=0)
+    srv.submit("bfs", root=1)
+    with pytest.raises(errors.QueueFull, match="queue full") as ei:
+        srv.submit("bfs", root=2)
+    assert ei.value.pending == 2 and ei.value.max_queue == 2
+    assert isinstance(ei.value, RuntimeError)  # legacy base preserved
+
+
+def test_invalid_query_typed(g):
+    srv = GraphServer(g)
+    with pytest.raises(errors.InvalidQuery, match="out of range"):
+        srv.submit("bfs", root=-1)
+    with pytest.raises(errors.InvalidQuery, match="unsupported query kind"):
+        srv.submit("wombat", root=0)
+
+
+def test_expired_dist_degrades_to_bounds():
+    rng = np.random.default_rng(4)
+    src, dst = G.rmat_edges(400, 3000, seed=4)
+    w = rng.uniform(0.1, 2.0, src.shape[0]).astype(np.float32)
+    wg = G.from_edge_list(src, dst, weights=w, num_vertices=400)
+    srv = GraphServer(wg, landmarks=3)
+    # find a pair the landmarks do NOT pin, so the exact path would run
+    pair = next(((s, t) for s in range(12) for t in range(390, 400)
+                 if not srv.table.pinned(s, t)), None)
+    if pair is None:
+        pytest.skip("landmarks pinned every probe pair")
+    q = srv.submit("dist", root=pair[0], target=pair[1], deadline_s=0.0)
+    time.sleep(0.002)
+    srv.run()
+    assert q.done and q.answer_quality == "bounded"
+    assert q.served_by == "deadline"
+    lo, up = q.bounds
+    assert lo <= up and q.result == up
+    # the bound brackets the exact answer
+    exact = srv.submit("dist", root=pair[0], target=pair[1])
+    srv.run()
+    assert lo <= exact.result <= up + 1e-5
+
+
+def test_expired_lane_yields_partial_values(g):
+    srv = GraphServer(g, admission=AdmissionPolicy(slice_supersteps=1))
+    warm = srv.submit("bfs", root=0)           # pre-warm: pay staging now
+    srv.run()
+    assert warm.done
+    q = srv.submit("bfs", root=1, deadline_s=60.0)
+    srv.step()                                 # admitted + 1 superstep
+    assert q.status == "running"
+    q.deadline_s = time.perf_counter() - 1.0   # force expiry mid-run
+    srv.run()
+    assert q.done and q.answer_quality == "partial"
+    assert q.served_by == "deadline"
+    assert isinstance(q.result, np.ndarray)    # mid-run values, harvested
+    assert q.iters is not None and q.iters >= 1
+    # the freed lane still serves later queries exactly
+    q2 = srv.submit("bfs", root=2)
+    srv.run()
+    assert q2.done and q2.answer_quality == "exact"
+    base, _ = translate(dsl.bfs_program(), g, ScheduleConfig()).run(roots=2)
+    np.testing.assert_array_equal(q2.result, np.asarray(base))
+
+
+def test_cancel_queued_and_running(g):
+    srv = GraphServer(g, admission=AdmissionPolicy(slice_supersteps=1))
+    q = srv.submit("bfs", root=0)
+    assert q.cancel() is True
+    srv.run()
+    assert q.status == "cancelled" and q.result is None
+    assert q.cancel() is False if q.done else True
+    # cancelling mid-run frees the lane without poisoning later queries
+    warm = srv.submit("bfs", root=0)
+    srv.run()
+    q2 = srv.submit("bfs", root=1)
+    srv.step()
+    if q2.status == "running":
+        q2.cancel()
+        srv.run()
+        assert q2.status == "cancelled"
+    q3 = srv.submit("bfs", root=3)
+    srv.run()
+    assert q3.done and q3.answer_quality == "exact"
+
+
+def test_cancelled_leader_promotes_follower(g):
+    srv = GraphServer(g, admission=AdmissionPolicy(slice_supersteps=1))
+    warm = srv.submit("bfs", root=0)
+    srv.run()
+    leader = srv.submit("bfs", root=1)
+    srv.step()                                 # leader takes a lane
+    follower = srv.submit("bfs", root=1)       # coalesces onto leader
+    srv.step()
+    if follower.done:                          # converged before cancel
+        pytest.skip("query finished before the cancellation window")
+    leader.cancel()
+    srv.run()
+    assert leader.status == "cancelled"
+    assert follower.done and follower.answer_quality == "exact"
+    base, _ = translate(dsl.bfs_program(), g, ScheduleConfig()).run(roots=1)
+    np.testing.assert_array_equal(follower.result, np.asarray(base))
+
+
+def test_lane_done_on_already_harvested_lane(g):
+    """A harvested (freed) lane stays 'done' and idle — re-harvesting is a
+    no-op, and lane_done never resurrects a completed query."""
+    prog = translate(dsl.bfs_program(), g, ScheduleConfig())
+    state = prog.batch_idle(2)
+    assert prog.lane_done(state).all()         # idle lanes read as done
+    state = prog.lane_admit(state, 0, 7)
+    state = prog.run_batch_slice(state, g.num_vertices + 1)
+    assert prog.lane_done(state)[0]
+    from repro.serve.graph_serve import _BatchGroup
+    grp = _BatchGroup(prog, 2)
+    grp.state = state
+    from repro.serve.graph_serve import GraphQuery
+    grp.occupants[0] = GraphQuery(qid=0, kind="bfs", root=7)
+    first = grp.harvest(now=0.0)
+    assert [q.qid for q in first] == [0]
+    assert grp.occupants[0] is None
+    assert prog.lane_done(grp.state)[0]        # state unchanged: still done
+    assert grp.harvest(now=1.0) == []          # second harvest: no-op
