@@ -52,6 +52,13 @@ def run() -> list[tuple[str, float, str]]:
                      f"{compiled.report.backend}"))
         rows.append((f"pass_report/{name}/aot_share", 0.0,
                      f"{aot_share:.2f}"))
+        # the jaxpr analyzer's share of this translate (cache-warm after
+        # the pipeline run above — the cold trace cost shows up in the
+        # per-pass program-analysis_us row instead)
+        bd = compiled.report.translate_breakdown
+        rows.append((f"pass_report/{name}/analysis_us",
+                     bd["analysis_s"] * 1e6,
+                     f"diags={len(compiled.report.diagnostics)}"))
     return rows
 
 

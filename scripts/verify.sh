@@ -7,9 +7,25 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# run the structural IR verifier between every pass pair of every
+# translation below (tests set this themselves; smokes inherit it here)
+export REPRO_VERIFY_IR=1
 
 echo "== tier-1 test suite =="
 python -m pytest -x -q
+
+echo "== lint smoke: templates clean, known-bad fixture caught =="
+# Shipped templates must lint clean (warnings allowed, no errors); the
+# deliberately broken fixture must fail with the A003 overflow finding.
+python -m repro.lint --all
+if python -m repro.lint tests/fixtures/bad_program.py \
+        >/tmp/lint_bad.out 2>&1; then
+    echo "FAIL: lint accepted the known-bad fixture"
+    cat /tmp/lint_bad.out
+    exit 1
+fi
+grep -q "A003" /tmp/lint_bad.out
+echo "lint smoke OK"
 
 if [[ "${1:-}" == "--slow" ]]; then
     echo "== slow suite =="

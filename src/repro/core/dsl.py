@@ -91,7 +91,21 @@ def reduce_identity(op: str, dtype) -> Any:
 
 @functools.lru_cache(maxsize=None)
 def bfs_program(int_max: int = 2**30) -> VertexProgram:
-    """BFS levels: msg = level[u] + 1, reduce min, apply min."""
+    """BFS levels: msg = level[u] + 1, reduce min, apply min.
+
+    ``int_max`` is the unreached sentinel.  It must leave headroom for the
+    gather's ``+ 1`` in int32: ``2**31 - 1`` would silently wrap to
+    ``-2**31`` on the first superstep and win every ``min`` thereafter, so
+    out-of-range sentinels are rejected at construction (and the analyzer
+    flags the same wrap as diagnostic ``A003`` for programs built around
+    this guard).
+    """
+    if not 0 < int_max < 2**31 - 1:
+        from ..errors import GraphValidationError
+        raise GraphValidationError(
+            f"bfs_program(int_max={int_max}): sentinel must lie in "
+            f"(0, 2**31 - 1) so the gather's '+ 1' cannot wrap int32; "
+            f"use the default 2**30")
     return VertexProgram(
         name="bfs",
         gather=lambda v, w, d: v + 1,

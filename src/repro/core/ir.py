@@ -294,14 +294,21 @@ class SuperstepIR:
 
     ``backend`` starts as ``None`` and is resolved to a concrete kernel
     flavor (``'dense_pallas'`` | ``'dense_xla'`` | ``'sparse_xla'``) by the
-    backend-selection pass.  ``notes`` accumulates analysis facts recorded
-    by passes (visible in dumps, never consumed by the emitter).
+    backend-selection pass.  ``facts`` is the program-analysis pass's
+    :class:`~repro.core.analysis.ProgramAnalysis` (``None`` until that
+    pass runs; downstream passes recompute lazily via the analysis cache
+    when driven standalone in tests).  ``notes`` accumulates free-form
+    strings recorded by passes — a **legacy channel**, deprecated in
+    favor of the typed diagnostics on ``PassContext``: notes stay for
+    dump readability and existing substring-pinned tests, but new facts
+    should be :class:`~repro.core.diagnostics.Diagnostic` entries.
     """
 
     program: VertexProgram
     ops: tuple
     backend: str | None = None
     notes: tuple = ()
+    facts: Any = None                # ProgramAnalysis | None (analysis pass)
 
     @property
     def value_dtype(self):

@@ -13,24 +13,30 @@ taxonomy hwtHls (and LLVM) use:
 
 Concrete passes (in :func:`default_pipeline` order):
 
-1. :class:`GatherClassificationPass` — the paper's module matching, by
-   abstract probing against the pre-built menu (moved out of
-   ``translator.py``);
-2. :class:`DirectionLegalityPass` — prove (or refute) that the push
+1. :class:`ProgramAnalysisPass` — run the jaxpr-based static analyzer
+   (:func:`repro.core.analysis.analyze_program`) once, attach the
+   resulting :class:`~repro.core.analysis.ProgramAnalysis` to
+   ``SuperstepIR.facts``, and emit the schedule-dependent lint
+   diagnostics; every downstream legality decision reads these facts
+   instead of re-running sampling probes;
+2. :class:`GatherClassificationPass` — the paper's module matching, now
+   decided by canonical-jaxpr signature (probe fallback for opaque
+   gathers) via the analysis facts;
+3. :class:`DirectionLegalityPass` — prove (or refute) that the push
    (scatter-over-out-edges) direction is equivalent to the canonical pull
    lowering; programs pinned to pull record why as an IR note;
-3. :class:`ReduceIdentityFoldPass` — constant-fold the reduce identity for
+4. :class:`ReduceIdentityFoldPass` — constant-fold the reduce identity for
    the program dtype;
-4. :class:`BackendSelectionPass` — consume the :mod:`~repro.core.scheduler`
+5. :class:`BackendSelectionPass` — consume the :mod:`~repro.core.scheduler`
    plan, resolve a concrete kernel flavor, and resolve or delete the
    cross-PE :class:`~repro.core.ir.ExchangeOp`;
-5. :class:`GatherReduceFusionPass` — fuse the gather+reduce pair onto the
+6. :class:`GatherReduceFusionPass` — fuse the gather+reduce pair onto the
    Pallas ELL edge-block or sparse segment-scan kernel, inserting the
    push-mode :class:`~repro.core.ir.PushScatterOp` twin when legal;
-6. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
+7. :class:`DeadFrontierEliminationPass` — mark the frontier update dead for
    ``frontier='all'`` programs so no change mask is emitted;
-7. :class:`SuperstepFusionPass` — when the apply is provably elementwise
-   (probed), fuse ``FusedGatherReduce → Apply → FrontierUpdate`` into one
+8. :class:`SuperstepFusionPass` — when the apply is provably elementwise,
+   fuse ``FusedGatherReduce → Apply → FrontierUpdate`` into one
    emitted stage (:class:`~repro.core.ir.FusedSuperstepOp`) and bind the
    pull plane's data path (block-skipping bitmap sweep vs dense sweep),
    recording why fusion or the bitmap plane was declined.
@@ -38,17 +44,31 @@ Concrete passes (in :func:`default_pipeline` order):
 Every :meth:`PassPipeline.run` records a per-pass before/after textual dump
 (the "TT"-style report) so the whole pipeline is observable end-to-end;
 ``docs/architecture.md`` reproduces one such report for ``bfs_program()``.
+Under ``verify=True`` (the ``REPRO_VERIFY_IR=1`` default in tests/CI) the
+run additionally executes the structural IR verifier
+(:func:`repro.core.analysis.verify_ir`) between every pass pair, so a
+buggy transform raises :class:`~repro.errors.IRVerificationError` at its
+own boundary instead of surfacing as wrong numerics three layers down.
+
+The four legacy sampling probes (``classify_gather``,
+``apply_preserves_identity``, ``gather_absorbs_identity``,
+``apply_is_elementwise``) live in :mod:`repro.core.analysis` now — they
+are the analyzer's fallback/cross-check tier — and stay re-exported here
+for back-compat.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Callable
 
 import jax.numpy as jnp
-import numpy as np
 
-from ..kernels.ref import GATHER_OPS, gather_msg
+from ..errors import IRVerificationError
+from .analysis import (analyze_program, apply_is_elementwise,
+                       apply_preserves_identity, classify_gather,
+                       gather_absorbs_identity, verify_ir)
+from .diagnostics import Diagnostic
 from .dsl import reduce_identity
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
                  FusedSuperstepOp, GatherOp, PushScatterOp, ReduceOp,
@@ -60,11 +80,13 @@ __all__ = [
     "apply_preserves_identity",
     "apply_is_elementwise",
     "gather_absorbs_identity",
+    "verify_ir",
     "PassContext",
     "Pass",
     "PassRecord",
     "PipelineReport",
     "PassPipeline",
+    "ProgramAnalysisPass",
     "GatherClassificationPass",
     "DirectionLegalityPass",
     "ReduceIdentityFoldPass",
@@ -81,158 +103,6 @@ COMMUTATIVE_REDUCES = ("add", "min", "max")
 
 
 # ---------------------------------------------------------------------------
-# Module matching (abstract probing instead of syntax analysis)
-# ---------------------------------------------------------------------------
-
-
-def classify_gather(gather: Callable, dtype) -> str | None:
-    """Match a gather callable against the pre-built module menu.
-
-    The paper's "eliminate complex grammatical and semantic analysis":
-    instead of parsing the user's gather, probe it on a fixed random batch
-    and compare against every menu entry (``kernels.ref.GATHER_OPS``).
-    Returns the matched module name, or ``None`` for the general path.
-    """
-    rng = np.random.default_rng(0)
-    v = jnp.asarray(rng.uniform(1, 8, (16,)), dtype)
-    w = jnp.asarray(rng.uniform(1, 8, (16,)),
-                    dtype if jnp.issubdtype(dtype, jnp.floating) else jnp.float32)
-    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
-    try:
-        got = np.asarray(gather(v, w.astype(v.dtype), d))
-    except Exception:
-        return None
-    for name in GATHER_OPS:
-        try:
-            want = np.asarray(gather_msg(name, v, w.astype(v.dtype), d))
-        except Exception:
-            continue
-        if got.shape == want.shape and np.allclose(got, want, rtol=1e-5, atol=1e-5):
-            return name
-    return None
-
-
-def apply_preserves_identity(apply: Callable, reduce: str, dtype) -> bool:
-    """Probe whether ``apply(x, identity) == x`` bit-exactly.
-
-    The same abstract-probing idiom as :func:`classify_gather`: evaluate
-    the user's apply on a fixed batch (random values plus the edge cases —
-    zero, the identity itself, extreme magnitudes) against the folded
-    reduce identity, and require *exact* equality.  When it holds, an
-    untouched vertex is a fixpoint of the superstep, so the push engine
-    may apply the reduced table everywhere and skip scattering a separate
-    touched mask — half the scatter traffic, and the compacted kernel's
-    combine stays a single segment reduce.  ``jnp.minimum``/``maximum``
-    applies (BFS/SSSP/WCC) and integer ``old + s`` all pass; overwrite- or
-    offset-style applies fail, and the fusion pass binds the
-    chunk-streamed ``'coo_chunks'`` push layout (which keeps the touched
-    mask) instead of the compacted engine.
-
-    Like all probing in this translator (the paper's "eliminate complex
-    grammatical and semantic analysis"), this is evidence, not proof: an
-    adversarial apply that misbehaves only on values outside the probe
-    batch would pass and then diverge under the compacted engine — the
-    same accepted trade-off as :func:`classify_gather`, which can likewise
-    mis-match a gather that coincides with a menu module on the batch.
-    Probes use fixed seeds, so the decision is at least deterministic.
-    """
-    ident = reduce_identity(reduce, dtype)
-    rng = np.random.default_rng(0)
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
-        info = np.finfo(np.dtype(dtype))
-        probes = np.concatenate([
-            rng.uniform(-8, 8, 13), [0.0, info.max / 2, -info.max / 2]])
-    else:
-        info = np.iinfo(np.dtype(dtype))
-        probes = np.concatenate([
-            rng.integers(-8, 8, 13), [0, info.max - 1, info.min + 1]])
-    x = jnp.asarray(probes, dtype)
-    try:
-        got = np.asarray(apply(x, jnp.full_like(x, ident)))
-    except Exception:
-        return False
-    return got.shape == x.shape and np.array_equal(got, np.asarray(x))
-
-
-def gather_absorbs_identity(gather: Callable, reduce: str, dtype) -> bool:
-    """Probe whether the reduce identity absorbs through the gather:
-    ``gather(identity, w, d) == identity`` for any weight/degree.
-
-    When it holds, the dense sweep for a *weight-dependent* gather can
-    pre-mask the vertex-value table once (inactive/PAD sources hold the
-    identity) and evaluate the gather per edge without a separate
-    frontier gather — e.g. SSSP's ``dist + w``: ``inf + w == inf``.
-    Integer identities generally fail (``INT_MAX + 1`` wraps), keeping
-    the classic masked form.  Standard abstract-probing caveats apply
-    (fixed seeds, evidence not proof — like :func:`classify_gather`).
-    """
-    ident = reduce_identity(reduce, dtype)
-    rng = np.random.default_rng(2)
-    w = jnp.asarray(rng.uniform(-8, 8, (16,)),
-                    dtype if jnp.issubdtype(jnp.dtype(dtype), jnp.floating)
-                    else jnp.float32)
-    d = jnp.asarray(rng.integers(1, 9, (16,)), jnp.int32)
-    x = jnp.full((16,), ident, dtype)
-    try:
-        got = np.asarray(gather(x, w.astype(x.dtype), d))
-    except Exception:
-        return False
-    return got.shape == (16,) and np.array_equal(
-        got, np.asarray(jnp.full((16,), ident, dtype)), equal_nan=True)
-
-
-def apply_is_elementwise(apply: Callable, dtype) -> bool:
-    """Probe whether ``apply`` is elementwise: output ``i`` depends only on
-    ``(old[i], reduced[i])``.
-
-    The legality condition for fusing the whole superstep into one stage
-    (:class:`SuperstepFusionPass`): an elementwise apply commutes with the
-    sweep's row→vertex data movement, so the reduced values can flow into
-    the apply and the change mask without a materialized full-table
-    intermediate between stages.  Probed by the translator's standard
-    abstract-probing idiom (fixed random batch, no syntax analysis):
-
-    * shape preservation — ``apply(x, r).shape == x.shape``;
-    * per-element agreement — evaluating element-by-element reproduces
-      the batch result bit-exactly;
-    * locality — perturbing one input slot changes no *other* output slot.
-
-    Every DSL template apply (``jnp.minimum``, damped sums, overwrite)
-    passes; reductions-over-the-table style applies (e.g. a normalizing
-    ``old / s.sum()``) fail and keep the unfused three-stage emission.
-    Like :func:`classify_gather` this is evidence, not proof — an apply
-    that is non-elementwise only outside the probe batch would slip
-    through; fixed seeds keep the decision deterministic.
-    """
-    rng = np.random.default_rng(1)
-    n = 8
-    if jnp.issubdtype(jnp.dtype(dtype), jnp.floating):
-        xs = rng.uniform(-8, 8, (2, n))
-    else:
-        xs = rng.integers(-8, 8, (2, n))
-    x = jnp.asarray(xs[0], dtype)
-    r = jnp.asarray(xs[1], dtype)
-    try:
-        full = np.asarray(apply(x, r))
-        if full.shape != (n,):
-            return False
-        per = np.stack([np.asarray(apply(x[i:i + 1], r[i:i + 1]))[0]
-                        for i in range(n)])
-        if not np.array_equal(full, per, equal_nan=True):
-            return False
-        for k in (0, n - 1):
-            x2 = x.at[k].add(jnp.asarray(1, dtype))
-            r2 = r.at[k].add(jnp.asarray(1, dtype))
-            out2 = np.asarray(apply(x2, r2))
-            others = np.arange(n) != k
-            if not np.array_equal(full[others], out2[others], equal_nan=True):
-                return False
-    except Exception:
-        return False
-    return True
-
-
-# ---------------------------------------------------------------------------
 # Pipeline machinery
 # ---------------------------------------------------------------------------
 
@@ -244,6 +114,11 @@ class PassContext:
     Carries the graph shape, the scheduler's resolved
     :class:`~repro.core.scheduler.SchedulePlan`, and the Pallas toggle —
     the pass pipeline itself never touches graph *data*, only metadata.
+
+    ``diagnostics`` is the one mutable slot: the typed
+    :class:`~repro.core.diagnostics.Diagnostic` accumulator passes append
+    to (the analysis pass's lint findings, the verifier's ``V*`` codes),
+    surfaced as ``TranslationReport.diagnostics``.
     """
 
     schedule: ScheduleConfig
@@ -251,6 +126,12 @@ class PassContext:
     use_pallas: bool
     num_vertices: int
     num_edges: int
+    diagnostics: list = dataclasses.field(default_factory=list,
+                                          compare=False)
+
+    def diagnose(self, diag: Diagnostic) -> None:
+        """Append one structured finding to this translation's accumulator."""
+        self.diagnostics.append(diag)
 
 
 class Pass:
@@ -309,15 +190,30 @@ class PassPipeline:
     def __init__(self, passes: list[Pass]):
         self.passes = list(passes)
 
-    def run(self, ir: SuperstepIR, ctx: PassContext,
-            dump: bool = False) -> tuple[SuperstepIR, PipelineReport]:
+    def run(self, ir: SuperstepIR, ctx: PassContext, dump: bool = False,
+            verify: bool | None = None) -> tuple[SuperstepIR, PipelineReport]:
         """Run every pass in order; returns (optimized IR, report).
 
         With ``dump=True`` each record carries the full textual IR before
         and after the pass; without it only names and changed-flags are
         recorded (cheap enough to keep on every translation).
+
+        With ``verify=True`` the structural IR verifier
+        (:func:`repro.core.analysis.verify_ir`) runs on the input IR and
+        again after *every* pass, raising
+        :class:`~repro.errors.IRVerificationError` at the first offending
+        pass boundary with the typed ``V*`` diagnostics naming each broken
+        invariant.  ``verify=None`` (the default) reads the
+        ``REPRO_VERIFY_IR`` environment variable — set to ``1`` by
+        ``tests/conftest.py`` and CI so every tier-1 translation crosses
+        the verifier, and unset in production where the ~50 µs/pass cost
+        is pure overhead on a well-formed pipeline.
         """
+        if verify is None:
+            verify = os.environ.get("REPRO_VERIFY_IR", "") == "1"
         records = []
+        if verify:
+            self._verify(ir, ctx, "before first pass")
         for p in self.passes:
             before = ir.dump() if dump else None
             t0 = time.perf_counter()
@@ -328,7 +224,22 @@ class PassPipeline:
                 before=before, after=out.dump() if dump else None,
                 time_s=dt))
             ir = out
+            if verify:
+                self._verify(ir, ctx, f"after {p.name}")
         return ir, PipelineReport(records=tuple(records))
+
+    @staticmethod
+    def _verify(ir: SuperstepIR, ctx: PassContext, stage: str) -> None:
+        """Raise :class:`IRVerificationError` if ``ir`` breaks an invariant."""
+        violations = verify_ir(ir, ctx)
+        if violations:
+            for d in violations:
+                ctx.diagnose(d)
+            codes = ", ".join(
+                f"{d.code} ({d.message})" for d in violations)
+            raise IRVerificationError(
+                f"IR verification failed {stage}: {codes}",
+                stage=stage, diagnostics=tuple(violations))
 
 
 # ---------------------------------------------------------------------------
@@ -336,23 +247,102 @@ class PassPipeline:
 # ---------------------------------------------------------------------------
 
 
+def _facts(ir: SuperstepIR):
+    """The IR's analysis facts, recomputing (cached) when a pass is driven
+    standalone in tests without :class:`ProgramAnalysisPass` first."""
+    return ir.facts if ir.facts is not None else analyze_program(ir.program)
+
+
+def _general_table_dense(ir: SuperstepIR, ctx: PassContext,
+                         module: str | None) -> bool:
+    """Unmatched gather that still runs the dense table sweep.
+
+    A weight-free gather's message depends only on its source, so the
+    dense flat sweep can precompute the one-gather-per-slot message table
+    from the *user's own callable* (``message_table(gather=None,
+    gather_fn=...)``) — no menu match needed.  Restricted to the XLA path:
+    the Pallas edge-block kernel evaluates menu modules only.
+    """
+    return (module is None and not ctx.use_pallas
+            and _facts(ir).weight_use.value is False)
+
+
+class ProgramAnalysisPass(Pass):
+    """Run the static program analyzer and attach its facts (analysis).
+
+    Calls :func:`repro.core.analysis.analyze_program` (cached per program
+    object) and stores the result on ``SuperstepIR.facts`` so every
+    downstream pass decides from the same analysis instead of re-running
+    sampling probes.  The analyzer's program-level diagnostics (overflow,
+    probe/static disagreement, absorbing init, termination evidence) and
+    the schedule-dependent lint rules (``A005`` mask/frontier mismatch,
+    ``A006`` quantized float-add exchange) land on
+    ``PassContext.diagnostics`` here.
+    """
+
+    name = "program-analysis"
+    kind = "analysis"
+
+    def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
+        """Attach :class:`~repro.core.analysis.ProgramAnalysis` to the IR."""
+        if ir.facts is not None:
+            return ir
+        facts = analyze_program(ir.program)
+        for d in facts.diagnostics:
+            ctx.diagnose(d)
+        program = ir.program
+        if program.frontier == "changed" and not program.mask_inactive:
+            ctx.diagnose(Diagnostic(
+                "A005", "warning", "FrontierUpdate",
+                "mask_inactive=False with frontier='changed': sources the "
+                "frontier calls settled keep contributing messages, so "
+                "convergence depends on those stale contributions being "
+                "harmless",
+                "set mask_inactive=True, or frontier='all' if every "
+                "vertex should stay live"))
+        # keyed on the *requested* pes, not the plan's device-clamped
+        # resolution: the rule flags the deployment intent (a quantized
+        # multi-PE exchange), which a single-device lint host would
+        # otherwise mask by clamping pes to 1
+        if program.reduce == "add" \
+                and jnp.issubdtype(ir.value_dtype, jnp.floating) \
+                and getattr(ctx.schedule, "pes", 1) > 1 \
+                and getattr(ctx.schedule, "message_dtype", None) is not None:
+            ctx.diagnose(Diagnostic(
+                "A006", "warning", "Exchange",
+                f"float 'add' reduce over a quantized "
+                f"(message_dtype={ctx.schedule.message_dtype!r}) multi-PE "
+                f"(pes={ctx.schedule.pes}) exchange: wire rounding "
+                "compounds per superstep and per PE on hub-heavy graphs",
+                "drop message_dtype (full-precision exchange) or use a "
+                "min/max reduce"))
+        summary = facts.summary()
+        rendered = " ".join(f"{k}={v!r}" for k, (v, _) in summary.items())
+        probed = [k for k, (_, prov) in summary.items() if prov != "static"]
+        tail = f" (non-static: {', '.join(probed)})" if probed else ""
+        return ir.replace(facts=facts).with_note(
+            f"analysis: {rendered}{tail}")
+
+
 class GatherClassificationPass(Pass):
     """Annotate the gather op with its matched pre-built module (analysis).
 
     Records the paper's module-matching result on
-    :attr:`~repro.core.ir.GatherOp.module`; an unmatched gather stays
-    ``None`` and later forces the general sparse path.
+    :attr:`~repro.core.ir.GatherOp.module` — decided by the analyzer's
+    canonical-jaxpr signature match (sampling-probe fallback for opaque
+    gathers); an unmatched gather stays ``None`` and later takes the
+    general sparse path (or the dense table sweep when weight-free).
     """
 
     name = "gather-classification"
     kind = "analysis"
 
     def run(self, ir: SuperstepIR, ctx: PassContext) -> SuperstepIR:
-        """Probe the gather against the menu and annotate the op."""
+        """Annotate the gather op with the analyzer's module fact."""
         gop = ir.find(GatherOp)
         if gop is None or gop.module is not None:
             return ir
-        module = classify_gather(gop.fn, ir.value_dtype)
+        module = _facts(ir).gather_module.value
         ir = ir.replace_op(gop, dataclasses.replace(gop, module=module))
         note = (f"gather matched module {module!r}" if module is not None
                 else "gather unmatched -> general sparse path")
@@ -426,12 +416,17 @@ class DirectionLegalityPass(Pass):
             # anticipate the backend-selection downgrade (unmatched gather
             # forces sparse) so the note names the real data-path reason
             dense = ctx.plan.backend == "dense" and gop.module is not None
-            if not dense:
+            kept_dense = ctx.plan.backend == "dense" \
+                and _general_table_dense(ir, ctx, gop.module)
+            if not dense and not kept_dense:
                 reasons.append(
                     f"multi-PE push (pes={pes}) needs the dense forward-ELL "
                     "engine; the sparse plan shards the pull plane instead")
-            elif not apply_preserves_identity(program.apply, rop.op,
-                                              ir.value_dtype):
+            elif kept_dense:
+                reasons.append(
+                    f"multi-PE push (pes={pes}) needs a menu-matched gather "
+                    "(the unmatched table sweep runs replicated)")
+            elif not _facts(ir).identity_fixpoint.value:
                 reasons.append(
                     f"multi-PE push (pes={pes}) needs an identity-fixpoint "
                     "apply (the touched-mask coo_chunks layout is single-PE)")
@@ -493,10 +488,18 @@ class BackendSelectionPass(Pass):
         module = gop.module if gop is not None else \
             (fused.gather.module if fused is not None else None)
         if module is None:
-            if backend != "sparse":
-                ir = ir.with_note("backend downgraded dense -> sparse "
-                                  "(unmatched gather)")
-            backend = "sparse"
+            if backend != "sparse" and _general_table_dense(ir, ctx, module):
+                # the analyzer proved the gather weight-free: the dense
+                # flat sweep precomputes its one-gather-per-slot message
+                # table from the user callable, no menu match needed
+                ir = ir.with_note(
+                    "backend kept dense (unmatched weight-free gather -> "
+                    "one-gather-per-slot table sweep)")
+            else:
+                if backend != "sparse":
+                    ir = ir.with_note("backend downgraded dense -> sparse "
+                                      "(unmatched gather)")
+                backend = "sparse"
         if backend == "dense":
             flavor = "dense_pallas" if ctx.use_pallas else "dense_xla"
         else:
@@ -567,8 +570,7 @@ class GatherReduceFusionPass(Pass):
             layout = "fwd_ell"
             if not ir.backend.startswith("dense"):
                 layout = "coo_chunks"
-            elif not apply_preserves_identity(ir.program.apply, rop.op,
-                                              ir.value_dtype):
+            elif not _facts(ir).identity_fixpoint.value:
                 layout = "coo_chunks"
                 ir = ir.with_note(
                     "push layout: coo_chunks (apply is not an identity "
@@ -648,7 +650,7 @@ class SuperstepFusionPass(Pass):
         if fused is None or aop is None or fop is None \
                 or ir.find(FusedSuperstepOp) is not None:
             return ir
-        if not apply_is_elementwise(ir.program.apply, ir.value_dtype):
+        if not _facts(ir).elementwise.value:
             return ir.with_note(
                 "superstep fusion declined (apply is not elementwise: "
                 "output slots depend on more than their own inputs)")
@@ -693,8 +695,7 @@ class SuperstepFusionPass(Pass):
         # the fused stage skip the touched-mask plane entirely: untouched
         # vertices hold the reduce identity, which the apply fixes
         touched_free = program.frontier == "changed" \
-            and apply_preserves_identity(program.apply, fused.reduce.op,
-                                         ir.value_dtype)
+            and _facts(ir).identity_fixpoint.value
         if touched_free:
             ir = ir.with_note(
                 "superstep: touched-mask elided (apply(x, identity) == x)")
@@ -716,6 +717,7 @@ class SuperstepFusionPass(Pass):
 def default_pipeline() -> PassPipeline:
     """The translator's standard pass order (see module docstring)."""
     return PassPipeline([
+        ProgramAnalysisPass(),
         GatherClassificationPass(),
         DirectionLegalityPass(),
         ReduceIdentityFoldPass(),

@@ -696,7 +696,8 @@ class PartitionedGraphProgram:
 def translate_partitioned(program: VertexProgram, source, schedule,
                           splan: SchedulePlan, comm: CommManager, *,
                           use_pallas: bool = False,
-                          dump_passes: bool = False
+                          dump_passes: bool = False,
+                          strict: bool = False
                           ) -> PartitionedGraphProgram:
     """Stage a DSL program onto the partition stream.
 
@@ -709,6 +710,8 @@ def translate_partitioned(program: VertexProgram, source, schedule,
     resident supersteps.
     """
     t0 = time.perf_counter()
+    from ..errors import DiagnosticError
+    from .diagnostics import max_severity
     from .translator import TranslationReport  # circular-at-import-time
 
     V = int(source.num_vertices)
@@ -717,6 +720,12 @@ def translate_partitioned(program: VertexProgram, source, schedule,
                       num_vertices=V, num_edges=E)
     ir, pipeline_report = default_pipeline().run(
         lower_program(program), ctx, dump=dump_passes)
+    if strict and max_severity(ctx.diagnostics) in ("warning", "error"):
+        raise DiagnosticError(
+            f"strict translation rejected {program.name!r}: " +
+            "; ".join(d.render() for d in ctx.diagnostics
+                      if d.severity != "info"),
+            diagnostics=tuple(ctx.diagnostics))
 
     fstep = ir.find(FusedSuperstepOp)
     if fstep is not None:
@@ -753,11 +762,16 @@ def translate_partitioned(program: VertexProgram, source, schedule,
         est_flops_per_superstep=2.0 * E,
         est_bytes_per_superstep=float(E * (4 + 4 + dtype.itemsize)),
         est_collective_bytes=0,
+        diagnostics=tuple(ctx.diagnostics),
         pass_report=pipeline_report.render() if dump_passes else None,
         ir_dump=ir.dump(),
         direction_policy=policy.describe(),
         directions=("pull", "push") if push_legal else ("pull",),
-        translate_breakdown={"passes_s": tt, "total_s": tt},
+        translate_breakdown={
+            "passes_s": tt, "total_s": tt,
+            "analysis_s": next(
+                (r.time_s for r in pipeline_report.records
+                 if r.name == "program-analysis"), 0.0)},
         pull_sweep="bitmap" if (fstep is not None
                                 and fstep.pull_sweep == "bitmap")
         else "dense",

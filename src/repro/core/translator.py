@@ -79,11 +79,14 @@ from ..kernels import ops as kops
 from ..kernels import pull_bitmap as pull_bitmap_kernel
 from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
+from ..errors import DiagnosticError
 from . import faults
 from . import graph as G
 from . import preprocess
 from ._jax_compat import pvary, shard_map, shard_map_unchecked
+from .analysis import analyze_program
 from .comm import CommManager
+from .diagnostics import max_severity, render_table
 from .dsl import VertexProgram
 from .ir import (ApplyOp, ExchangeOp, FrontierUpdateOp, FusedGatherReduceOp,
                  FusedSuperstepOp, PushScatterOp, SuperstepIR, lower_program)
@@ -156,6 +159,10 @@ class TranslationReport:
     est_bytes_per_superstep: float
     est_collective_bytes: int
     dsl_lines: int | None = None  # set by callers for Table V
+    # typed lint/verifier findings accumulated on PassContext during the
+    # pass pipeline (repro.core.diagnostics.Diagnostic tuple) — the
+    # structured successor to grepping SuperstepIR.notes
+    diagnostics: tuple = ()
     pass_report: str | None = None  # per-pass dump (translate(dump_passes=True))
     ir_dump: str | None = None      # final optimized IR listing
     direction_policy: str | None = None  # e.g. "auto(alpha=1, beta=4)"
@@ -778,24 +785,25 @@ class CompiledGraphProgram:
 _ROW_REDUCE = pull_bitmap_kernel._ROW_REDUCE
 
 
-def _flat_message_mode(fused: FusedGatherReduceOp, program, dtype) -> str:
+def _flat_message_mode(ir: SuperstepIR, fused: FusedGatherReduceOp,
+                       program, dtype) -> str:
     """Pick the flat sweep's per-edge message form (all bit-identical):
 
-    * ``'table'`` — weight-free gather: messages precompute into a
-      ``(V+1,)`` masked table, the sweep is ONE gather per slot;
+    * ``'table'`` — weight-free gather (the analyzer's ``weight_use``
+      fact, not a hardcoded menu-name list, so *any* user gather whose
+      jaxpr never reads the weight qualifies): messages precompute into
+      a ``(V+1,)`` masked table, the sweep is ONE gather per slot;
     * ``'masked'`` — the reduce identity absorbs through the gather
-      (probed — e.g. SSSP's ``inf + w == inf``): the *value* table is
-      pre-masked once and the gather evaluates per edge with no separate
-      frontier gather;
+      (the ``identity_absorbing`` fact — e.g. SSSP's ``inf + w == inf``):
+      the *value* table is pre-masked once and the gather evaluates per
+      edge with no separate frontier gather;
     * ``'classic'`` — everything else: per-edge value/degree/frontier
       gathers with explicit identity masking.
     """
-    from ..kernels.ref import WEIGHT_FREE_GATHERS
-    from .passes import gather_absorbs_identity
-    if fused.gather.module in WEIGHT_FREE_GATHERS:
+    facts = ir.facts if ir.facts is not None else analyze_program(program)
+    if facts.weight_use.value is False:
         return "table"
-    if program.mask_inactive and gather_absorbs_identity(
-            fused.gather.fn, fused.reduce.op, dtype):
+    if program.mask_inactive and facts.identity_absorbing.value:
         return "masked"
     return "classic"
 
@@ -837,7 +845,7 @@ def _emit_dense_pull_reduce(ir: SuperstepIR, fused: FusedGatherReduceOp,
     op = fused.reduce.op
     gather_module = fused.gather.module
     gather_fn = fused.gather.fn
-    mode = _flat_message_mode(fused, program, dtype)
+    mode = _flat_message_mode(ir, fused, program, dtype)
     rop = _ROW_REDUCE[op]
 
     def sub_sweep(values, active, dst_blk, wgt_blk):
@@ -1479,6 +1487,7 @@ def translate(
     aot_compile: bool = True,
     dump_passes: bool = False,
     validate: bool = False,
+    strict: bool = False,
 ) -> CompiledGraphProgram:
     """Stage a DSL program into a specialized executable for graph ``g``.
 
@@ -1486,6 +1495,12 @@ def translate(
     default pass pipeline, then walks the optimized IR to emit the jitted
     superstep.  ``dump_passes=True`` additionally records the per-pass
     before/after IR dumps on ``report.pass_report``.
+
+    The pipeline's structured findings (overflow risks, probe-only
+    decisions, lattice pathologies — see :mod:`repro.core.diagnostics`)
+    surface on ``report.diagnostics``; ``strict=True`` refuses to stage a
+    program carrying any warning- or error-severity finding, raising
+    :class:`~repro.errors.DiagnosticError` with the full tuple attached.
 
     Messages flow along in-edges (pull form): ``g`` holds out-edges (CSR),
     so the translator takes the transposed adjacency — and every other
@@ -1517,7 +1532,7 @@ def translate(
         from . import stream
         return stream.translate_partitioned(
             program, g, schedule, splan, comm, use_pallas=use_pallas,
-            dump_passes=dump_passes)
+            dump_passes=dump_passes, strict=strict)
 
     # ---- stages 1+2: lower to IR, run the pass pipeline -----------------
     # (always re-run: the pipeline costs ~ms and keeps reports/dumps fresh)
@@ -1527,6 +1542,16 @@ def translate(
     ir, pipeline_report = default_pipeline().run(
         lower_program(program), ctx, dump=dump_passes)
     passes_s = time.perf_counter() - t_passes0
+    # the analysis pass's share of passes_s — near-zero on a fact-cache
+    # hit (templates are memoized, so repeat translates always hit)
+    analysis_s = next((r.time_s for r in pipeline_report.records
+                       if r.name == "program-analysis"), 0.0)
+    if strict and max_severity(ctx.diagnostics) in ("warning", "error"):
+        raise DiagnosticError(
+            f"strict translation rejected {program.name!r}: " +
+            "; ".join(d.render() for d in ctx.diagnostics
+                      if d.severity != "info"),
+            diagnostics=tuple(ctx.diagnostics))
 
     fstep = ir.find(FusedSuperstepOp)
     if fstep is not None:
@@ -1604,13 +1629,17 @@ def translate(
         est_bytes_per_superstep=float(g.num_edges * (4 + 4 + dtype.itemsize)),
         est_collective_bytes=est_collective,
         est_frontier_bytes=est_frontier,
-        pass_report=pipeline_report.render() if dump_passes else None,
+        diagnostics=tuple(ctx.diagnostics),
+        pass_report=(render_table(ctx.diagnostics, title="-- diagnostics --")
+                     + "\n\n" + pipeline_report.render())
+        if dump_passes else None,
         ir_dump=ir.dump(),
         direction_policy=policy.describe(),
         directions=("pull", "push") if push_superstep is not None
         else ("pull",),
         translate_breakdown={
             "preprocess_s": preprocess_s, "passes_s": passes_s,
+            "analysis_s": analysis_s,
             "emit_s": emit_s, "aot_s": aot_s, "total_s": tt,
             "staging_cached": cached,
             "preprocess_cached": staged["preprocess_cached"] or cached},

@@ -22,6 +22,8 @@ __all__ = [
     "StreamRetryError",
     "InvalidQuery",
     "QueueFull",
+    "DiagnosticError",
+    "IRVerificationError",
 ]
 
 
@@ -87,6 +89,39 @@ class InvalidQuery(ReproError, ValueError):
     Subclasses ``ValueError`` — the pre-typed serving API raised bare
     ``ValueError`` for these, and existing handlers keep working.
     """
+
+
+class DiagnosticError(ReproError):
+    """Strict translation rejected a program over lint findings.
+
+    Raised by ``translate(..., strict=True)`` when the pass pipeline's
+    structured diagnostics contain any warning- or error-severity entry.
+    ``diagnostics`` carries the full tuple of
+    :class:`repro.core.diagnostics.Diagnostic` so callers can render or
+    filter them programmatically.
+    """
+
+    def __init__(self, message: str, *, diagnostics: tuple = ()):
+        super().__init__(message)
+        self.diagnostics = tuple(diagnostics)
+
+
+class IRVerificationError(ReproError):
+    """The IR verifier found a broken structural invariant between passes.
+
+    Raised by ``PassPipeline.run(..., verify=True)`` the moment a pass
+    produces an IR violating :func:`repro.core.analysis.verify_ir`'s
+    invariants — at the offending pass boundary, not as wrong numerics
+    three layers down.  ``stage`` names the boundary (e.g. ``"after
+    backend-selection"``); ``diagnostics`` carries the typed ``V*``
+    findings naming each violated invariant.
+    """
+
+    def __init__(self, message: str, *, stage: str = "",
+                 diagnostics: tuple = ()):
+        super().__init__(message)
+        self.stage = stage
+        self.diagnostics = tuple(diagnostics)
 
 
 class QueueFull(ReproError, RuntimeError):

@@ -16,6 +16,13 @@ REDUCE_OPS = ("add", "min", "max")
 # precompute one (V,)-table of masked messages and stream edges as a
 # single gather (see translator._emit_dense_pull_reduce) — bit-identical
 # to per-edge evaluation (same elementwise ops on the same operands).
+#
+# No production code keys on this tuple anymore: the translator's table
+# dispatch reads the analyzer's ``weight_use`` fact (jaxpr liveness of the
+# weight argument — repro.core.analysis), which covers arbitrary user
+# gathers, not just these three.  The tuple is kept as the pinned
+# regression oracle: tests assert the analyzer independently re-derives
+# exactly this weight-free set for the menu.
 WEIGHT_FREE_GATHERS = ("copy", "plus_one", "div_deg")
 
 

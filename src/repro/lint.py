@@ -1,0 +1,158 @@
+"""Lint CLI: run the static analyzer over vertex programs, no graph needed.
+
+Usage::
+
+    python -m repro.lint --all                 # lint every shipped template
+    python -m repro.lint mypkg.programs        # lint a user module (dotted)
+    python -m repro.lint path/to/programs.py   # ... or a file path
+    python -m repro.lint --all --pes 2 --message-dtype int8   # lint a
+        # sharded/quantized deployment shape (engages the A006 rule)
+
+A user module contributes programs through a module-level ``PROGRAMS``
+iterable (of :class:`~repro.core.dsl.VertexProgram` instances or zero-arg
+factories returning one); without it, every module-level ``VertexProgram``
+attribute is linted.
+
+Each program is lowered to IR and run through the full verified pass
+pipeline against a synthetic 1 000-vertex / 10 000-edge schedule — the
+analyzer needs only the program, so linting never touches graph data.
+The accumulated :class:`~repro.core.diagnostics.Diagnostic` findings
+print as one table per program; the process exits 1 if any finding
+reaches ``error`` severity (or a program fails IR verification or
+construction), 0 otherwise — warnings are reported but do not fail the
+lint, mirroring ``translate(strict=False)``.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import importlib.util
+import sys
+
+__all__ = ["lint_program", "collect_programs", "main"]
+
+# the synthetic schedule shape every lint run plans against
+_LINT_VERTICES = 1000
+_LINT_EDGES = 10_000
+
+
+def lint_program(program, *, pes: int = 1, message_dtype: str | None = None,
+                 num_vertices: int = _LINT_VERTICES,
+                 num_edges: int = _LINT_EDGES):
+    """Run the verified pass pipeline over ``program``; return diagnostics.
+
+    Returns the full ``Diagnostic`` list (analyzer facts, lint rules, and
+    — should a pass misbehave — the verifier's ``V*`` findings: an
+    :class:`~repro.errors.IRVerificationError` is caught and reported as
+    its diagnostics rather than propagated, so one broken program cannot
+    abort a multi-program lint run).
+    """
+    from .core.ir import lower_program
+    from .core.passes import PassContext, default_pipeline
+    from .core.scheduler import ScheduleConfig, plan
+    from .errors import IRVerificationError
+
+    cfg = ScheduleConfig(pes=pes, message_dtype=message_dtype)
+    splan = plan(cfg, num_vertices=num_vertices, num_edges=num_edges)
+    ctx = PassContext(schedule=cfg, plan=splan, use_pallas=False,
+                      num_vertices=num_vertices, num_edges=num_edges)
+    try:
+        default_pipeline().run(lower_program(program), ctx, verify=True)
+    except IRVerificationError:
+        pass                       # the V* findings are already on ctx
+    return list(ctx.diagnostics)
+
+
+def _load_module(spec: str):
+    """Import a lint target: dotted module name or a ``.py`` file path."""
+    if spec.endswith(".py"):
+        modspec = importlib.util.spec_from_file_location("_lint_target", spec)
+        if modspec is None or modspec.loader is None:
+            raise ImportError(f"cannot load {spec!r}")
+        mod = importlib.util.module_from_spec(modspec)
+        modspec.loader.exec_module(mod)
+        return mod
+    return importlib.import_module(spec)
+
+
+def collect_programs(module) -> list:
+    """Extract ``(name, program)`` pairs from a user module.
+
+    Honors a module-level ``PROGRAMS`` iterable first (entries may be
+    programs or zero-arg factories); otherwise scans module attributes
+    for :class:`~repro.core.dsl.VertexProgram` instances.
+    """
+    from .core.dsl import VertexProgram
+
+    entries = getattr(module, "PROGRAMS", None)
+    out = []
+    if entries is not None:
+        for entry in entries:
+            prog = entry() if callable(entry) \
+                and not isinstance(entry, VertexProgram) else entry
+            out.append((prog.name, prog))
+        return out
+    for attr in sorted(vars(module)):
+        val = getattr(module, attr)
+        if isinstance(val, VertexProgram):
+            out.append((val.name, val))
+    return out
+
+
+def main(argv=None) -> int:
+    from .core import dsl
+    from .core.diagnostics import max_severity, render_table
+    from .errors import ReproError
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Static diagnostics for graph vertex programs.")
+    target = ap.add_mutually_exclusive_group(required=True)
+    target.add_argument("--all", action="store_true",
+                        help="lint every shipped dsl.PROGRAM_TEMPLATES entry")
+    target.add_argument("module", nargs="?",
+                        help="dotted module name or .py path to lint")
+    ap.add_argument("--pes", type=int, default=1,
+                    help="lint against a sharded plan (default 1)")
+    ap.add_argument("--message-dtype", default=None,
+                    help="lint with exchange quantization (e.g. int8)")
+    args = ap.parse_args(argv)
+
+    if args.all:
+        programs = [(name, factory)
+                    for name, factory in dsl.PROGRAM_TEMPLATES.items()]
+    else:
+        try:
+            programs = collect_programs(_load_module(args.module))
+        except (ImportError, OSError) as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
+        if not programs:
+            print(f"error: no vertex programs found in {args.module!r}",
+                  file=sys.stderr)
+            return 2
+
+    failed = False
+    for name, prog in programs:
+        try:
+            if callable(prog):     # zero-arg template factory
+                prog = prog()
+            diags = lint_program(prog, pes=args.pes,
+                                 message_dtype=args.message_dtype)
+        except ReproError as e:
+            # construction-time rejection (e.g. bfs_program int_max guard)
+            print(f"{name}: REJECTED at construction: {e}\n")
+            failed = True
+            continue
+        print(render_table(diags, title=f"{name}:"))
+        worst = max_severity(diags)
+        if worst == "error":
+            failed = True
+        print(f"  -> {len(diags)} finding(s), worst severity: {worst}\n")
+
+    print("lint: FAIL" if failed else "lint: OK")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,11 @@ if "xla_force_host_platform_device_count" not in _flags:
     os.environ["XLA_FLAGS"] = \
         (_flags + " --xla_force_host_platform_device_count=8").strip()
 
+# Run the structural IR verifier between every pass pair for every
+# translation the suite performs (PassPipeline.run reads this env var) —
+# tier-1 doubles as a continuous well-formedness check on the pipeline.
+os.environ.setdefault("REPRO_VERIFY_IR", "1")
+
 
 def run_in_subprocess(code: str, *, devices: int = 8, timeout: int = 300):
     """Run a snippet under --xla_force_host_platform_device_count."""

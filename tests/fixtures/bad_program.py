@@ -1,0 +1,29 @@
+"""Known-bad vertex programs — the lint CLI's negative fixture.
+
+``scripts/verify.sh`` (and ``tests/test_analysis.py``) run
+``python -m repro.lint`` over this module and require a nonzero exit:
+the programs below each carry an error-severity diagnostic the analyzer
+must catch.  They construct :class:`repro.core.dsl.VertexProgram`
+directly, bypassing the template guards (``dsl.bfs_program`` refuses the
+wrapping sentinel at construction) — exactly how a user writing raw
+programs would hit these bugs.
+"""
+import jax.numpy as jnp
+
+from repro.core.dsl import VertexProgram
+
+# BFS with the sentinel at int32 max: the gather's ``+ 1`` silently wraps
+# to -2**31 on the first superstep and wins every ``min`` thereafter.
+# The analyzer evaluates the gather at the init value in the int domain
+# and emits A003 (error).
+wrap_bfs = VertexProgram(
+    name="wrap_bfs",
+    gather=lambda v, w, d: v + 1,
+    reduce="min",
+    apply=jnp.minimum,
+    init_value=jnp.iinfo(jnp.int32).max,
+    frontier="changed",
+    value_dtype=jnp.int32,
+)
+
+PROGRAMS = [wrap_bfs]

@@ -1,0 +1,432 @@
+"""Jaxpr program analyzer, IR verifier, structured diagnostics.
+
+Four layers of coverage for the static-analysis subsystem:
+
+1. provenance pins — every probe-decided property of every shipped
+   template is decided *statically* (jaxpr walk), with golden values, and
+   the sampling probes agree wherever both run (soundness cross-check);
+2. the ``WEIGHT_FREE_GATHERS`` tuple is re-derived independently by the
+   analyzer (the tuple is a pinned oracle, no longer a dispatch key);
+3. adversarial probe-evasion — programs built to fool the sampling
+   probes are caught statically and flagged ``A002``;
+4. the structural IR verifier: zero violations across every pass pair on
+   shipped templates, and a deliberately corrupted IR fails at the
+   offending pass boundary with a typed ``V*`` diagnostic.
+"""
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import lint
+from repro.core import dsl
+from repro.core import graph as G
+from repro.core.analysis import (analysis_cache_clear, analyze_program,
+                                 apply_is_elementwise,
+                                 apply_preserves_identity, classify_gather,
+                                 gather_absorbs_identity, verify_ir)
+from repro.core.diagnostics import (DIAGNOSTIC_CODES, Diagnostic,
+                                    max_severity, render_table)
+from repro.core.ir import GatherOp, ReduceOp, lower_program
+from repro.core.passes import (GatherClassificationPass, Pass, PassContext,
+                               PassPipeline, default_pipeline)
+from repro.core.scheduler import ScheduleConfig, plan
+from repro.core.translator import translate
+from repro.errors import (DiagnosticError, GraphValidationError,
+                          IRVerificationError)
+from repro.kernels.ref import GATHER_OPS, WEIGHT_FREE_GATHERS
+
+FIXTURES = pathlib.Path(__file__).parent / "fixtures"
+
+
+def _ctx(num_vertices=100, num_edges=1000, pes=1, message_dtype=None):
+    cfg = ScheduleConfig(pes=pes, message_dtype=message_dtype)
+    return PassContext(
+        schedule=cfg,
+        plan=plan(cfg, num_vertices=num_vertices, num_edges=num_edges),
+        use_pallas=False,
+        num_vertices=num_vertices, num_edges=num_edges)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    src, dst = G.rmat_edges(120, 900, seed=7)
+    w = np.random.default_rng(7).uniform(0.5, 2.0, len(src)).astype(np.float32)
+    return G.from_edge_list(src, dst, num_vertices=120, weights=w)
+
+
+def _template(name):
+    return dsl.PROGRAM_TEMPLATES[name]()
+
+
+# ---------------------------------------------------------------------------
+# 1. provenance + value pins for every shipped template
+# ---------------------------------------------------------------------------
+
+
+# (gather_module, weight_use, elementwise, identity_fixpoint,
+#  identity_absorbing, monotone) — golden per template
+TEMPLATE_FACTS = {
+    "bfs":      ("plus_one", False, True, True,  False, True),
+    "sssp":     ("add_w",    True,  True, True,  True,  True),
+    "pagerank": ("div_deg",  False, True, False, True,  False),
+    # ppr's apply builds a root one-hot from iota — position-dependent,
+    # so it is NOT elementwise (a retiled fused kernel would move the root)
+    "ppr":      ("div_deg",  False, False, False, True,  False),
+    "wcc":      ("copy",     False, True, True,  True,  True),
+    "spmv":     ("mul_w",    True,  True, False, True,  False),
+    "degree":   (None,       False, True, False, False, False),
+}
+
+# the four properties the pre-analyzer translator decided by sampling
+# probes — the tentpole claim is that all of them are now decided
+# statically for every shipped template
+PROBE_DECIDED = ("gather_module", "elementwise", "identity_fixpoint",
+                 "identity_absorbing")
+
+
+def test_templates_cover_golden_table():
+    assert sorted(TEMPLATE_FACTS) == sorted(dsl.PROGRAM_TEMPLATES)
+
+
+@pytest.mark.parametrize("name", sorted(TEMPLATE_FACTS))
+def test_template_facts_golden_and_all_static(name):
+    facts = analyze_program(_template(name))
+    summary = facts.summary()
+    values = tuple(v for v, _ in summary.values())
+    assert values == TEMPLATE_FACTS[name], summary
+    # every probe-decided property is now decided statically
+    for prop in PROBE_DECIDED:
+        assert summary[prop][1] == "static", (prop, summary[prop])
+    # ... and so are the two new properties
+    assert summary["weight_use"][1] == "static"
+    assert summary["monotone"][1] == "static"
+
+
+@pytest.mark.parametrize("name", sorted(TEMPLATE_FACTS))
+def test_probe_static_agreement(name):
+    """The sampling probes (kept as fallback oracles) agree with the
+    jaxpr decisions on every template — the soundness cross-check."""
+    prog = _template(name)
+    facts = analyze_program(prog)
+    dt = prog.value_dtype
+    assert classify_gather(prog.gather, dt) == facts.gather_module.value
+    assert apply_is_elementwise(prog.apply, dt) == facts.elementwise.value
+    assert apply_preserves_identity(prog.apply, prog.reduce, dt) \
+        == facts.identity_fixpoint.value
+    assert gather_absorbs_identity(prog.gather, prog.reduce, dt) \
+        == facts.identity_absorbing.value
+
+
+# ---------------------------------------------------------------------------
+# 2. WEIGHT_FREE_GATHERS is an oracle the analyzer re-derives
+# ---------------------------------------------------------------------------
+
+
+def test_analyzer_rederives_weight_free_menu():
+    """The analyzer's ``weight_use`` fact, computed from jaxpr liveness
+    alone, must partition the menu exactly as the pinned tuple does."""
+    menu = {
+        "copy": lambda v, w, d: v,
+        "plus_one": lambda v, w, d: v + 1,
+        "add_w": lambda v, w, d: v + w,
+        "mul_w": lambda v, w, d: v * w,
+        "div_deg": lambda v, w, d: v / jnp.maximum(d, 1).astype(v.dtype),
+    }
+    assert sorted(menu) == sorted(GATHER_OPS)
+    derived = []
+    for name, fn in menu.items():
+        prog = dsl.VertexProgram(
+            name=f"menu_{name}", gather=fn, reduce="min",
+            apply=jnp.minimum, init_value=100.0, frontier="changed",
+            value_dtype=jnp.float32)
+        facts = analyze_program(prog)
+        assert facts.gather_module.value == name
+        assert facts.weight_use.provenance == "static"
+        if facts.weight_use.value is False:
+            derived.append(name)
+    assert tuple(n for n in GATHER_OPS if n in derived) \
+        == WEIGHT_FREE_GATHERS
+
+
+# ---------------------------------------------------------------------------
+# 3. adversarial probe evasion
+# ---------------------------------------------------------------------------
+
+
+def test_adversarial_apply_evades_probe_static_catches():
+    """An apply that is elementwise on every probe batch but flips to a
+    cross-lane shuffle past a threshold: the probe passes, the jaxpr walk
+    sees the live ``flip`` and rules it out, A002 raises the alarm."""
+    prog = dsl.VertexProgram(
+        name="evader",
+        gather=lambda v, w, d: v + 1,
+        reduce="min",
+        apply=lambda old, s: jnp.where(jnp.sum(old) > 1e6,
+                                       jnp.flip(s), jnp.minimum(old, s)),
+        init_value=100.0, frontier="changed", value_dtype=jnp.float32)
+    facts = analyze_program(prog)
+    assert apply_is_elementwise(prog.apply, jnp.float32) is True  # fooled
+    assert facts.elementwise.value is False                       # caught
+    assert facts.elementwise.provenance == "static"
+    assert "A002" in [d.code for d in facts.diagnostics]
+
+
+def test_adversarial_gather_coincidence_rejected():
+    """A gather that equals ``plus_one`` on the probe batch by numeric
+    coincidence but is a different function: the static signature match
+    refuses the menu module (wrong numerics on real graphs otherwise)."""
+    prog = dsl.VertexProgram(
+        name="coincidence",
+        gather=lambda v, w, d: jnp.where(v < 100, v + 1, v * 2),
+        reduce="min", apply=jnp.minimum, init_value=2**20,
+        frontier="changed", value_dtype=jnp.int32)
+    facts = analyze_program(prog)
+    assert classify_gather(prog.gather, jnp.int32) == "plus_one"  # fooled
+    assert facts.gather_module.value is None                      # caught
+    assert "A002" in [d.code for d in facts.diagnostics]
+
+
+def test_untraceable_program_falls_back_to_probes():
+    """Opaque callables (host-side control flow) can't be traced: every
+    probe-backed property degrades to ``probed`` provenance with A001."""
+    def host_gather(v, w, d):
+        if bool(np.asarray(v).sum() >= 0):   # concretizes the tracer
+            return v + 1
+        return v
+    prog = dsl.VertexProgram(
+        name="opaque", gather=host_gather, reduce="min",
+        apply=jnp.minimum, init_value=2**20, frontier="changed",
+        value_dtype=jnp.int32)
+    facts = analyze_program(prog)
+    assert facts.gather_module.provenance == "probed"
+    assert "A001" in [d.code for d in facts.diagnostics]
+
+
+# ---------------------------------------------------------------------------
+# 4. overflow analysis + the bfs construction guard
+# ---------------------------------------------------------------------------
+
+
+def test_wrap_program_gets_error_diagnostic():
+    prog = dsl.VertexProgram(
+        name="wrap", gather=lambda v, w, d: v + 1, reduce="min",
+        apply=jnp.minimum, init_value=jnp.iinfo(jnp.int32).max,
+        frontier="changed", value_dtype=jnp.int32)
+    diags = analyze_program(prog).diagnostics
+    wrap = [d for d in diags if d.code == "A003"]
+    assert wrap and wrap[0].severity == "error"
+    assert "int32" in wrap[0].message
+
+
+def test_bfs_program_rejects_wrapping_sentinel():
+    for bad in (0, -1, 2**31 - 1, 2**40):
+        with pytest.raises(GraphValidationError):
+            dsl.bfs_program(int_max=bad)
+    with pytest.raises(ValueError):       # back-compat: still a ValueError
+        dsl.bfs_program(int_max=2**31 - 1)
+    assert dsl.bfs_program(int_max=2**20).init_value == 2**20
+
+
+def test_safe_int_templates_carry_no_overflow_diag():
+    for name in ("bfs", "wcc", "degree"):
+        codes = [d.code for d in analyze_program(_template(name)).diagnostics]
+        assert "A003" not in codes, name
+
+
+# ---------------------------------------------------------------------------
+# 5. diagnostics through translate(): report plumbing + strict mode
+# ---------------------------------------------------------------------------
+
+
+# golden: diagnostic codes each template's translation carries
+TEMPLATE_DIAGS = {
+    "bfs": [], "sssp": ["A004"], "pagerank": [], "ppr": [],
+    "wcc": [], "spmv": [], "degree": [],
+}
+
+
+@pytest.mark.parametrize("name", sorted(TEMPLATE_DIAGS))
+def test_translation_diagnostics_golden(name, graph):
+    c = translate(_template(name), graph)
+    assert [d.code for d in c.report.diagnostics] == TEMPLATE_DIAGS[name]
+    for d in c.report.diagnostics:
+        assert isinstance(d, Diagnostic)
+        assert d.code in DIAGNOSTIC_CODES
+
+
+def test_strict_translation_rejects_warnings(graph):
+    with pytest.raises(DiagnosticError) as ei:
+        translate(dsl.sssp_program(), graph, strict=True)
+    assert [d.code for d in ei.value.diagnostics] == ["A004"]
+    # warning-free templates stage fine under strict
+    c = translate(dsl.bfs_program(), graph, strict=True)
+    assert c.report.diagnostics == ()
+
+
+def test_quantized_float_add_exchange_flagged():
+    diags = lint.lint_program(dsl.pagerank_program(), pes=2,
+                              message_dtype="int8")
+    a006 = [d for d in diags if d.code == "A006"]
+    assert a006 and a006[0].severity == "warning"
+    # min-reduce programs are immune to the rounding compounding
+    assert not [d for d in lint.lint_program(dsl.bfs_program(), pes=2,
+                                             message_dtype="int8")
+                if d.code == "A006"]
+
+
+def test_mask_frontier_mismatch_flagged():
+    prog = dsl.VertexProgram(
+        name="leaky", gather=lambda v, w, d: v + w, reduce="min",
+        apply=jnp.minimum, init_value=jnp.inf, frontier="changed",
+        mask_inactive=False, value_dtype=jnp.float32)
+    codes = [d.code for d in lint.lint_program(prog)]
+    assert "A005" in codes
+
+
+def test_pass_report_leads_with_diagnostics(graph):
+    c = translate(dsl.sssp_program(), graph, dump_passes=True)
+    assert c.report.pass_report.startswith("-- diagnostics --")
+    assert "A004" in c.report.pass_report
+    assert "== program-analysis [analysis] (changed)" in c.report.pass_report
+
+
+def test_facts_ride_the_ir_and_legacy_notes_mirror_them(graph):
+    c = translate(dsl.bfs_program(), graph)
+    # the legacy string channel still carries the summary (deprecated,
+    # diagnostics/facts are the typed successors)
+    assert any(n.strip().startswith("; analysis: gather_module=")
+               for n in c.report.ir_dump.splitlines())
+
+
+# ---------------------------------------------------------------------------
+# 6. analysis caching + translate-time budget
+# ---------------------------------------------------------------------------
+
+
+def test_analysis_facts_are_cached_per_program():
+    p = dsl.bfs_program()
+    assert analyze_program(p) is analyze_program(p)
+    before = analyze_program(p)
+    analysis_cache_clear()
+    after = analyze_program(p)
+    assert after is not before
+    assert after.summary() == before.summary()
+
+
+def test_translate_breakdown_itemizes_analysis(graph):
+    p = dsl.bfs_program()
+    analyze_program(p)                     # warm the fact cache
+    c = translate(p, graph)
+    bd = c.report.translate_breakdown
+    assert "analysis_s" in bd
+    # facts cached → the analysis pass is a dict hit, well under the
+    # 10%-of-cold-translate acceptance budget
+    assert bd["analysis_s"] <= 0.10 * bd["total_s"]
+    c2 = translate(p, graph)               # staged repeat
+    bd2 = c2.report.translate_breakdown
+    assert bd2["staging_cached"] is True
+    assert bd2["analysis_s"] < 0.01
+
+
+# ---------------------------------------------------------------------------
+# 7. the IR verifier between every pass pair
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TEMPLATE_FACTS))
+def test_verifier_clean_on_all_templates(name):
+    """Every template crosses all pass boundaries with zero violations
+    (conftest sets REPRO_VERIFY_IR=1, but pin verify=True explicitly)."""
+    ctx = _ctx()
+    default_pipeline().run(lower_program(_template(name)), ctx, verify=True)
+    assert not [d for d in ctx.diagnostics if d.code.startswith("V")]
+
+
+def test_verify_ir_flags_corrupted_ir_directly():
+    ir = lower_program(dsl.bfs_program())
+    # reorder ops: apply before gather breaks canonical superstep order
+    bad = ir.replace(ops=tuple(reversed(ir.ops)))
+    codes = [d.code for d in verify_ir(bad)]
+    assert "V002" in codes
+    # duplicate gather plane
+    bad = ir.replace(ops=ir.ops + (ir.ops[0],))
+    codes = [d.code for d in verify_ir(bad)]
+    assert "V001" in codes
+    assert all(d.severity == "error" for d in verify_ir(bad))
+
+
+class _CorruptIdentityPass(Pass):
+    """Deliberately folds the WRONG reduce identity (the seeded bug the
+    verifier exists to catch at the pass boundary)."""
+
+    name = "corrupt-identity"
+    kind = "transform"
+
+    def run(self, ir, ctx):
+        rop = ir.find(ReduceOp)
+        return ir.replace_op(rop, ReduceOp(op=rop.op, identity=jnp.array(
+            0, dtype=ir.value_dtype)))
+
+
+def test_verifier_fails_at_offending_pass_boundary():
+    """A pipeline with a corrupting pass dies at exactly that boundary,
+    naming the stage and the violated invariant — not three passes later
+    as wrong numerics."""
+    pipeline = PassPipeline([GatherClassificationPass(),
+                             _CorruptIdentityPass()])
+    with pytest.raises(IRVerificationError) as ei:
+        pipeline.run(lower_program(dsl.bfs_program()), _ctx(), verify=True)
+    err = ei.value
+    assert err.stage == "after corrupt-identity"
+    assert [d.code for d in err.diagnostics] == ["V003"]
+    assert "reduce_identity" in err.diagnostics[0].message
+    # verify=False runs the same pipeline without the tripwire
+    ir, _ = pipeline.run(lower_program(dsl.bfs_program()), _ctx(),
+                         verify=False)
+    assert int(ir.find(ReduceOp).identity) == 0
+
+
+def test_verifier_catches_bogus_module_annotation():
+    class EvilModule(Pass):
+        name = "evil-module"
+
+        def run(self, ir, ctx):
+            gop = ir.find(GatherOp)
+            return ir.replace_op(gop, GatherOp(fn=gop.fn, module="tan_w"))
+
+    with pytest.raises(IRVerificationError) as ei:
+        PassPipeline([EvilModule()]).run(
+            lower_program(dsl.bfs_program()), _ctx(), verify=True)
+    assert ei.value.stage == "after evil-module"
+    assert [d.code for d in ei.value.diagnostics] == ["V004"]
+
+
+# ---------------------------------------------------------------------------
+# 8. the lint CLI
+# ---------------------------------------------------------------------------
+
+
+def test_lint_all_templates_exits_zero(capsys):
+    assert lint.main(["--all"]) == 0
+    out = capsys.readouterr().out
+    assert "lint: OK" in out
+    for name in dsl.PROGRAM_TEMPLATES:
+        assert f"{name}:" in out
+
+
+def test_lint_bad_fixture_exits_nonzero(capsys):
+    assert lint.main([str(FIXTURES / "bad_program.py")]) == 1
+    out = capsys.readouterr().out
+    assert "A003" in out
+    assert "lint: FAIL" in out
+
+
+def test_lint_renders_a_table():
+    d = Diagnostic("A004", "warning", "init", "msg", "fix")
+    table = render_table([d], title="t:")
+    assert table.splitlines()[0] == "t:"
+    assert "A004" in table and "[fix]" in table
+    assert max_severity([d]) == "warning"
+    assert max_severity([]) is None

@@ -183,6 +183,7 @@ def test_pipeline_dump_golden_bfs():
     # one section per pass, in order, with its taxonomy kind
     headers = [l for l in text.splitlines() if l.startswith("== ")]
     assert headers == [
+        "== program-analysis [analysis] (changed)",
         "== gather-classification [analysis] (changed)",
         "== direction-legality [analysis] (changed)",
         "== reduce-identity-fold [transform] (changed)",
@@ -192,8 +193,8 @@ def test_pipeline_dump_golden_bfs():
         "== superstep-fusion [transform] (changed)",
     ]
     # every section carries before/after IR listings
-    assert text.count("-- before --") == 7
-    assert text.count("-- after --") == 7
+    assert text.count("-- before --") == 8
+    assert text.count("-- after --") == 8
     # the facts each pass establishes are visible in the dump
     assert "module=plus_one" in text
     assert "identity=Array(2147483647, dtype=int32)" in text
@@ -202,7 +203,9 @@ def test_pipeline_dump_golden_bfs():
     assert "direction=both" in text
     assert "PushScatter(kernel=push_scatter" in text
     assert "FusedSuperstep(pull_sweep=bitmap" in text
-    # analysis notes survive into the final IR
+    # analysis notes survive into the final IR (the jaxpr analyzer's fact
+    # summary included — the legacy string channel mirrors ir.facts)
+    assert "analysis: gather_module='plus_one'" in ir.dump()
     assert "gather matched module 'plus_one'" in ir.dump()
     assert "direction: push legal" in ir.dump()
     assert "pull sweep: bitmap" in ir.dump()
@@ -213,7 +216,7 @@ def test_pipeline_without_dump_records_names_only():
     ir, report = default_pipeline().run(
         lower_program(dsl.spmv_program()), _ctx(), dump=False)
     assert [r.name for r in report.records] == [
-        "gather-classification", "direction-legality",
+        "program-analysis", "gather-classification", "direction-legality",
         "reduce-identity-fold", "backend-selection",
         "gather-reduce-fusion", "dead-frontier-elimination",
         "superstep-fusion"]
