@@ -15,9 +15,9 @@ import subprocess
 import sys
 import time
 
-# schema 4: run stats gained 'terminated' plus partition_retries /
-# partition_corruptions counters (fault-tolerant execution layer)
-BENCH_SCHEMA = 4          # bump when any BENCH_*.json payload shape changes
+# schema 5: the 5M scale point gained a 'checkpoint' block (durable-
+# checkpoint overhead ratio + saves/write seconds at the default cadence)
+BENCH_SCHEMA = 5          # bump when any BENCH_*.json payload shape changes
 HISTORY_DIR = os.path.join("reports", "graphs")
 HISTORY_PATH = os.path.join(HISTORY_DIR, "history.jsonl")
 
@@ -90,6 +90,12 @@ def append_history(entry: dict, *, stamped: dict | None = None) -> str:
     When ``stamped`` is given (a payload that went through :func:`stamp`),
     its schema/timestamp/commit are copied onto the entry — the entry and
     the payload it summarizes can't carry different stamps.
+
+    The append is crash-safe: one ``O_APPEND`` write of the whole line.
+    POSIX appends of a single ``write()`` are atomic with respect to
+    concurrent appenders, so parallel benchmark runs (or a run killed
+    mid-append) can interleave lines but never tear one — the history
+    stays line-parseable JSONL.
     """
     if stamped is not None:
         entry = {**entry,
@@ -97,8 +103,12 @@ def append_history(entry: dict, *, stamped: dict | None = None) -> str:
                  "timestamp": stamped.get("timestamp"),
                  "commit": stamped.get("commit")}
     os.makedirs(HISTORY_DIR, exist_ok=True)
-    with open(HISTORY_PATH, "a") as f:
-        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    line = (json.dumps(entry, sort_keys=True) + "\n").encode()
+    fd = os.open(HISTORY_PATH, os.O_WRONLY | os.O_APPEND | os.O_CREAT, 0o644)
+    try:
+        os.write(fd, line)
+    finally:
+        os.close(fd)
     return HISTORY_PATH
 
 

@@ -77,6 +77,43 @@ def _run_one(program, container, budget: int, root: int) -> dict:
     }
 
 
+def _checkpoint_overhead(container, budget: int, root: int,
+                         plain_wall_s: float) -> dict:
+    """Checkpointed BFS at the default cadence vs the plain run.
+
+    Runs the same streamed BFS with ``checkpoint_dir=`` (tempdir,
+    default ``DEFAULT_STREAM_SWEEPS`` cadence) and reports the measured
+    wall-clock ratio — the acceptance figure is < 10% overhead at the
+    5M-edge point.  Bit-exactness is asserted, not assumed.
+    """
+    import shutil
+    import tempfile
+    from repro.core import dsl
+    from repro.core.comm import CommManager
+    from repro.core.scheduler import ScheduleConfig
+    from repro.core.translator import translate
+    ckdir = tempfile.mkdtemp(prefix="repro-ckpt-")
+    try:
+        prog = translate(dsl.bfs_program(), container,
+                         ScheduleConfig(partition_budget_bytes=budget),
+                         CommManager(), checkpoint_dir=ckdir)
+        t0 = time.perf_counter()
+        _, iters = prog.run(roots=root)
+        wall_s = time.perf_counter() - t0
+        st = prog.last_run_stats
+        return {
+            "wall_s": wall_s,
+            "plain_wall_s": plain_wall_s,
+            "overhead_ratio": (wall_s / plain_wall_s - 1.0
+                               if plain_wall_s > 0 else 0.0),
+            "checkpoint_saves": st["checkpoint_saves"],
+            "checkpoint_write_s": st["checkpoint_write_s"],
+            "supersteps": int(iters),
+        }
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
 def collect_scale_sweep(scales=SCALES, cache_dir: str = CACHE_DIR) -> dict:
     """The ≥3-point scale payload merged under ``scale_sweep``."""
     from repro.core import dsl
@@ -105,6 +142,11 @@ def collect_scale_sweep(scales=SCALES, cache_dir: str = CACHE_DIR) -> dict:
             # acceptance scale: SSSP end-to-end as well
             entry["sssp"] = _run_one(dsl.sssp_program(), container, budget,
                                      root)
+        if e == 5_000_000:
+            # durable-checkpoint overhead at the default cadence — the
+            # robustness acceptance point (< 10% wall at 5M edges)
+            entry["checkpoint"] = _checkpoint_overhead(
+                container, budget, root, entry["bfs"]["wall_s"])
         if e == min_edges:
             # the only scale where resident + partitioned both fit:
             # pin the streamed answer bit-exact against the oracle

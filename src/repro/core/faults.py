@@ -23,6 +23,15 @@ point                     trips in
                           slice / streamed superstep executes
 ``comm.collective``       ``core/comm.py`` — when the run loop records an
                           executed cross-PE exchange
+``checkpoint.write``      ``core/checkpoint.py`` — before a snapshot's
+                          temp files are renamed into place (models a crash
+                          mid-write; the atomic rename means a half-written
+                          snapshot is never visible under its final name)
+``lane.crash``            ``core/stream.py`` / ``core/translator.py`` /
+                          ``serve/graph_serve.py`` — at superstep/partition
+                          boundaries of checkpointed runs (models a process
+                          crash; the chaos harness catches it, re-translates
+                          fresh, and resumes from the last durable snapshot)
 ========================  ====================================================
 
 Raise-mode faults raise :class:`repro.errors.InjectedFault` (a
@@ -66,6 +75,8 @@ INJECTION_POINTS = (
     "container.read",
     "lane.superstep",
     "comm.collective",
+    "checkpoint.write",
+    "lane.crash",
 )
 
 

@@ -52,7 +52,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..errors import ChecksumError, StreamRetryError, TransientFault
+from ..errors import (CheckpointCorruptError, CheckpointMismatchError,
+                      ChecksumError, StreamRetryError, TransientFault)
+from . import checkpoint as ckpt
 from . import faults
 from . import graph as G
 from . import preprocess
@@ -110,7 +112,10 @@ class PartitionedGraphProgram:
                  frontier_op, push_legal: bool, splan: SchedulePlan,
                  comm: CommManager, out_degrees: np.ndarray,
                  probe_divergence: bool = False,
-                 max_retries: int = 3, retry_base_s: float = 0.01):
+                 max_retries: int = 3, retry_base_s: float = 0.01,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int | None = None,
+                 fingerprints_fn=None):
         self.program = program
         self.store = store
         self.report = report
@@ -125,6 +130,13 @@ class PartitionedGraphProgram:
         self._max_retries = int(max_retries)
         self._retry_base_s = float(retry_base_s)
         self.last_run_stats: dict | None = None
+        # durable checkpointing (translate(checkpoint_dir=...) or per-run
+        # run(checkpoint_dir=...)): every checkpoint_every partition
+        # sweeps a snapshot of the full lane carry commits atomically
+        self._checkpoint_dir = checkpoint_dir
+        self._checkpoint_every = checkpoint_every
+        self._fingerprints_fn = fingerprints_fn
+        self._fingerprints_cache: dict | None = None
         self._splan = splan
         self._comm = comm
         self._policy = splan.direction
@@ -394,6 +406,11 @@ class PartitionedGraphProgram:
                           dev["wgt"], *acc)
             jax.block_until_ready(acc)
             compute_s += time.perf_counter() - t0
+            # partition-boundary crash point — deliberately OUTSIDE the
+            # _fetch_partition retry ladder, so an armed crash kills the
+            # whole sweep (a process death, not a transient fetch); the
+            # mid-superstep partials are lost and re-derived on resume
+            faults.trip("lane.crash", payload={"partition": p})
         values, active = self._finish(values, active, *acc,
                                       jnp.asarray(alive))
         self._comm.stats.record_partition_skip(
@@ -442,6 +459,11 @@ class PartitionedGraphProgram:
             if not alive.any():
                 break
             faults.trip("lane.superstep")
+            # superstep-boundary crash point: checkpoints commit only at
+            # boundaries, so a crash here resumes from the last durable
+            # snapshot and replays forward deterministically
+            faults.trip("lane.crash",
+                        payload={"superstep": int(state.iters[0])})
             counts, n_f, m_f = (np.asarray(a) for a in jax.device_get(
                 self._liveness(state.active)))
             direction = self._choose_direction(state, n_f, m_f, alive)
@@ -511,14 +533,35 @@ class PartitionedGraphProgram:
             parts_skipped=z.copy(),
             pull_cost=np.full(1, self._num_edges, np.int64))
 
-    def run(self, roots=None, values=None):
+    def _comm_counters(self) -> tuple:
+        """The 8 partition-plane comm counters this run's stats diff."""
+        s = self._comm.stats
+        return (s.partition_bytes_h2d, s.partitions_transferred,
+                s.partitions_skipped, s.partition_prefetch_s,
+                s.partition_compute_s, s.partition_wall_s,
+                s.partition_retries, s.partition_corruptions)
+
+    def run(self, roots=None, values=None, *, checkpoint_dir=None,
+            checkpoint_every=None, resume=False):
         """Algorithm 1 over the partition stream; resident-compatible.
 
         Returns ``(values (V,), iters)``; ``last_run_stats`` carries the
         resident keys plus the partition plane: partitions swept/skipped,
         bytes streamed, transfer/compute seconds, measured overlap
         efficiency, and the store's cache report.
+
+        With ``checkpoint_dir=`` (here or at translate time) a durable
+        snapshot of the full lane carry commits every ``checkpoint_every``
+        partition sweeps (:data:`~repro.core.checkpoint.
+        DEFAULT_STREAM_SWEEPS` by default); ``resume=True`` restores the
+        newest snapshot — fingerprint-checked — and continues bit-exactly.
+        Comm counters (bytes streamed, retries, corruptions) ride the
+        snapshot manifest, so ``run_stats`` merge exactly across crash
+        segments; the stats gain ``checkpoint_saves``/``checkpoint_loads``
+        /``checkpoint_write_s``.
         """
+        if checkpoint_dir is None:
+            checkpoint_dir = self._checkpoint_dir
         if values is not None:
             v0, a0 = self.init_state(roots=roots, values=values)
             state = self._unrooted_state()._replace(
@@ -529,13 +572,84 @@ class PartitionedGraphProgram:
                 raise ValueError("run() takes a single root; use run_batch")
         else:
             state = self._unrooted_state()
-        s = self._comm.stats
-        base = (s.partition_bytes_h2d, s.partitions_transferred,
-                s.partitions_skipped, s.partition_prefetch_s,
-                s.partition_compute_s, s.partition_wall_s,
-                s.partition_retries, s.partition_corruptions)
+        base = self._comm_counters()
+        if checkpoint_dir is not None:
+            return self._run_checkpointed(state, roots, checkpoint_dir,
+                                          checkpoint_every, resume, base)
         state = self._advance(state, None)
         stats = self._run_stats(state, lane=0, base=base)
+        self.last_run_stats = stats
+        self.report.run_stats = stats
+        return state.values[0], int(state.iters[0])
+
+    def _fingerprints(self) -> dict:
+        if self._fingerprints_cache is None:
+            if self._fingerprints_fn is None:
+                raise ValueError(
+                    "this program was constructed without fingerprint "
+                    "inputs; checkpointing needs translate()")
+            self._fingerprints_cache = self._fingerprints_fn()
+        return self._fingerprints_cache
+
+    def _run_checkpointed(self, state, roots, directory, every, resume,
+                          base):
+        """run() with durable snapshots every ``every`` partition sweeps.
+
+        The streamed loop is host-driven, so checkpoints commit at
+        superstep boundaries (the only points where the carry is whole);
+        a crash mid-sweep loses at most the current superstep's partials,
+        which deterministic re-execution re-derives — crash-anywhere
+        recovery without mid-sweep snapshots.  The comm-counter carry in
+        the manifest is ``carried + (current − base)`` at save time, so a
+        resumed run reports the exact logical totals of an uninterrupted
+        one even though the aborted segment's comm manager died with it.
+        """
+        every = int(every or self._checkpoint_every
+                    or ckpt.DEFAULT_STREAM_SWEEPS)
+        fps = self._fingerprints()
+        root_meta = (None if roots is None
+                     else int(np.atleast_1d(np.asarray(roots))[0]))
+        saves = loads = seq = 0
+        write_s = 0.0
+        carry = (0, 0, 0, 0.0, 0.0, 0.0, 0, 0)
+        if resume:
+            stem = ckpt.latest_snapshot(directory, "stream")
+            if stem is not None:
+                manifest, arrays = ckpt.read_snapshot(stem, kind="stream",
+                                                      expect=fps)
+                meta = manifest["meta"]
+                if meta.get("root") != root_meta:
+                    raise CheckpointMismatchError(
+                        f"snapshot {stem} was rooted at "
+                        f"{meta.get('root')!r}, this run requests "
+                        f"{root_meta!r}", field="root",
+                        expected=str(root_meta),
+                        got=str(meta.get("root")))
+                state = self.lane_restore(arrays)
+                seq = int(manifest["seq"]) + 1
+                saves = int(meta.get("checkpoint_saves", 0))
+                carry = tuple(meta.get("comm", carry))
+                loads = 1
+        last_swept = int(state.parts_swept[0])
+        while not bool(self.lane_done(state)[0]):
+            state = self._advance(state, 1)
+            done = bool(self.lane_done(state)[0])
+            if int(state.parts_swept[0]) - last_swept >= every or done:
+                cur = self._comm_counters()
+                merged = [c + (n - b) for c, n, b in zip(carry, cur, base)]
+                t0 = time.perf_counter()
+                saves += 1
+                ckpt.write_snapshot(directory, "stream", seq,
+                                    self.lane_snapshot(state),
+                                    {"root": root_meta, "comm": merged,
+                                     "checkpoint_saves": saves}, fps)
+                write_s += time.perf_counter() - t0
+                seq += 1
+                last_swept = int(state.parts_swept[0])
+        stats = self._run_stats(state, lane=0, base=base, carry=carry)
+        stats["checkpoint_saves"] = saves
+        stats["checkpoint_loads"] = loads
+        stats["checkpoint_write_s"] = write_s
         self.last_run_stats = stats
         self.report.run_stats = stats
         return state.values[0], int(state.iters[0])
@@ -577,14 +691,19 @@ class PartitionedGraphProgram:
         return out
 
     def _run_stats(self, state: PartitionedLaneState, lane: int,
-                   base: tuple) -> dict:
+                   base: tuple, carry: tuple | None = None) -> dict:
+        # carry: comm-counter totals restored from a checkpoint manifest —
+        # earlier crash segments' deltas, merged so a resumed run reports
+        # the same physical totals an uninterrupted one would
+        if carry is None:
+            carry = (0, 0, 0, 0.0, 0.0, 0.0, 0, 0)
         s = self._comm.stats
-        d_bytes = s.partition_bytes_h2d - base[0]
-        d_moved = s.partitions_transferred - base[1]
-        d_skip = s.partitions_skipped - base[2]
-        prefetch_s = s.partition_prefetch_s - base[3]
-        compute_s = s.partition_compute_s - base[4]
-        wall_s = s.partition_wall_s - base[5]
+        d_bytes = carry[0] + s.partition_bytes_h2d - base[0]
+        d_moved = carry[1] + s.partitions_transferred - base[1]
+        d_skip = carry[2] + s.partitions_skipped - base[2]
+        prefetch_s = carry[3] + s.partition_prefetch_s - base[3]
+        compute_s = carry[4] + s.partition_compute_s - base[4]
+        wall_s = carry[5] + s.partition_wall_s - base[5]
         shorter = min(prefetch_s, compute_s)
         overlap = 0.0 if shorter <= 0 or wall_s <= 0 else float(
             np.clip((prefetch_s + compute_s - wall_s) / shorter, 0.0, 1.0))
@@ -615,8 +734,10 @@ class PartitionedGraphProgram:
             # fault-tolerance counters for this run (deltas): transient
             # fetch retries and checksum-recovery events the stream
             # absorbed while still producing a bit-exact answer
-            "partition_retries": int(s.partition_retries - base[6]),
-            "partition_corruptions": int(s.partition_corruptions - base[7]),
+            "partition_retries": int(
+                carry[6] + s.partition_retries - base[6]),
+            "partition_corruptions": int(
+                carry[7] + s.partition_corruptions - base[7]),
             "terminated": self._terminated(state)[lane],
             "partition_store": self.store.stats(),
         }
@@ -692,12 +813,55 @@ class PartitionedGraphProgram:
         """Per-lane stats lists (harvested by the serving plane)."""
         return self._batch_stats(state)
 
+    def lane_snapshot(self, state: PartitionedLaneState) -> dict:
+        """The full 10-field streamed carry as host numpy arrays.
+
+        Keys are exactly :attr:`PartitionedLaneState._fields`; the device
+        half comes down in one ``device_get``, the host counters are
+        copied (old states stay valid snapshots).  Round-trips through
+        :meth:`lane_restore` bit-exactly, direction and pull-cost
+        registers included, so a restored lane replays the identical
+        superstep/plane sequence.
+        """
+        values, active = jax.device_get((state.values, state.active))
+        out = {"values": np.asarray(values), "active": np.asarray(active)}
+        for name in PartitionedLaneState._fields[2:]:
+            out[name] = np.array(getattr(state, name), copy=True)
+        return out
+
+    def lane_restore(self, arrays: dict) -> PartitionedLaneState:
+        """Rebuild a :class:`PartitionedLaneState` from
+        :meth:`lane_snapshot`.  Dtypes are re-imposed from this program's
+        expectations, not trusted from the snapshot; missing carry fields
+        raise :class:`CheckpointCorruptError`.
+        """
+        missing = [f for f in PartitionedLaneState._fields
+                   if f not in arrays]
+        if missing:
+            raise CheckpointCorruptError(
+                f"stream snapshot is missing carry fields: "
+                f"{', '.join(missing)}", member=missing[0])
+        return PartitionedLaneState(
+            values=jnp.asarray(np.asarray(arrays["values"]),
+                               dtype=self._dtype),
+            active=jnp.asarray(np.asarray(arrays["active"]), bool),
+            iters=np.asarray(arrays["iters"], np.int64),
+            direction=np.asarray(arrays["direction"], np.int32),
+            pushes=np.asarray(arrays["pushes"], np.int64),
+            switches=np.asarray(arrays["switches"], np.int64),
+            edges=np.asarray(arrays["edges"], np.int64),
+            parts_swept=np.asarray(arrays["parts_swept"], np.int64),
+            parts_skipped=np.asarray(arrays["parts_skipped"], np.int64),
+            pull_cost=np.asarray(arrays["pull_cost"], np.int64))
+
 
 def translate_partitioned(program: VertexProgram, source, schedule,
                           splan: SchedulePlan, comm: CommManager, *,
                           use_pallas: bool = False,
                           dump_passes: bool = False,
-                          strict: bool = False
+                          strict: bool = False,
+                          checkpoint_dir: str | None = None,
+                          checkpoint_every: int | None = None
                           ) -> PartitionedGraphProgram:
     """Stage a DSL program onto the partition stream.
 
@@ -783,4 +947,7 @@ def translate_partitioned(program: VertexProgram, source, schedule,
         program, store, report, max_iters, ir=ir, fstep=fstep, fused=fused,
         apply_op=apply_op, frontier_op=frontier_op, push_legal=push_legal,
         splan=splan, comm=comm, out_degrees=out_deg,
-        probe_divergence=schedule.probe_divergence)
+        probe_divergence=schedule.probe_divergence,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        fingerprints_fn=lambda: ckpt.run_fingerprints(program, source,
+                                                      schedule))

@@ -79,7 +79,9 @@ from ..kernels import ops as kops
 from ..kernels import pull_bitmap as pull_bitmap_kernel
 from ..kernels import push_ell as push_ell_kernel
 from ..kernels import push_scatter as push_kernel
-from ..errors import DiagnosticError
+from ..errors import (CheckpointCorruptError, CheckpointMismatchError,
+                      DiagnosticError)
+from . import checkpoint as ckpt
 from . import faults
 from . import graph as G
 from . import preprocess
@@ -214,7 +216,10 @@ class CompiledGraphProgram:
                  push_stat_pes: int = 1, comm: CommManager | None = None,
                  exchange_plane: str | None = None,
                  collective_bytes_per_superstep: int = 0,
-                 probe_divergence: bool = False):
+                 probe_divergence: bool = False,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_every: int | None = None,
+                 fingerprints_fn=None):
         self._superstep = superstep
         self._push_superstep = push_superstep
         self._init_state = init_state
@@ -249,7 +254,23 @@ class CompiledGraphProgram:
         # reports terminated='diverged'.  NaN only — +inf is a legitimate
         # min-reduce identity (SSSP's unreached vertices), not divergence.
         self._probe = bool(probe_divergence)
+        # durable checkpointing (core/checkpoint.py): translate-time
+        # defaults for run(checkpoint_dir=...); the fingerprint closure is
+        # lazy so un-checkpointed runs never pay the graph-bytes CRC
+        self._checkpoint_dir = checkpoint_dir
+        self._checkpoint_every = checkpoint_every
+        self._fingerprints_fn = fingerprints_fn
+        self._fingerprints_cache: dict | None = None
         self.last_run_stats: dict | None = None
+
+    def _fingerprints(self) -> dict:
+        if self._fingerprints_cache is None:
+            if self._fingerprints_fn is None:
+                raise ValueError(
+                    "this program was constructed without fingerprint "
+                    "inputs; checkpointing needs translate()")
+            self._fingerprints_cache = self._fingerprints_fn()
+        return self._fingerprints_cache
 
     def init_state(self, roots=None, values=None):
         return self._init_state(roots=roots, values=values)
@@ -455,7 +476,55 @@ class CompiledGraphProgram:
 
         return cond, body
 
-    def run(self, roots=None, values=None):
+    def _scalar_stats(self, iters, pushes, compact, switches, pe_hi, pe_lo,
+                      pe_rows, pl_hi, pl_lo, bl_swept, bl_skip, pull_cost,
+                      live, nanfree) -> dict:
+        """run()'s stats dict from host-side scalar counters.
+
+        Shared by :meth:`run` (counters off the staged loop's exit) and
+        the checkpointed slice driver (counters off the final
+        :class:`BatchLaneState` — the slice carry holds the identical
+        fields), so both paths report bit-identically.
+        """
+        if not bool(nanfree):
+            terminated = "diverged"
+        elif bool(live) and int(iters) >= self.max_iters:
+            terminated = "budget"
+        else:
+            terminated = "converged"
+        pull_steps = int(iters) - int(pushes)
+        exchanges = {"pull": pull_steps, "push": int(compact)}.get(
+            self._exchange_plane, 0)
+        return {
+            "push_supersteps": int(pushes),
+            "push_compacted_supersteps": int(compact),
+            "push_fallback_supersteps": int(pushes) - int(compact),
+            "pull_supersteps": pull_steps,
+            "direction_switches": int(switches),
+            # exact: hi/lo-recombined pull part (swept edges — the real
+            # pull cost model, ≤ pull_supersteps·E) + push part (m_f)
+            "edges_traversed": (int(pl_hi) << 16) + int(pl_lo)
+            + (int(pe_hi) << 16) + int(pe_lo),
+            "pes": self.report.pes,
+            "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
+            # block-skip split of the bitmap pull plane (zeros on the
+            # dense plane, which has no block accounting) — the pull-side
+            # analogue of the push compacted/fallback tier split
+            "pull_blocks_swept": int(bl_swept),
+            "pull_blocks_skipped": int(bl_skip),
+            # the measured-pull-cost register's final value (E until a
+            # pull superstep runs) — what the m_f-aware alpha compared
+            "pull_cost_model": int(pull_cost),
+            "exchange_supersteps": exchanges,
+            "exchange_bytes": exchanges * self._collective_bytes,
+            # how the run ended: 'converged' (frontier drained),
+            # 'budget' (superstep budget hit with a live frontier —
+            # values are partial), or 'diverged' (NaN probe fired)
+            "terminated": terminated,
+        }
+
+    def run(self, roots=None, values=None, *, checkpoint_dir=None,
+            checkpoint_every=None, resume=False):
         """Paper Algorithm 1's while-loop, as a device-side while_loop.
 
         With both directions emitted and an ``'auto'`` policy, every
@@ -483,7 +552,22 @@ class CompiledGraphProgram:
         ``push_live_rows_per_pe`` sums each PE's live forward-ELL rows
         over the run's push supersteps (the per-PE load-balance view of
         the frontier; a single entry when the push engine is un-sharded).
+
+        With ``checkpoint_dir=`` (here or at translate time) the run is
+        driven through the budgeted slice loop instead, committing a
+        durable snapshot every ``checkpoint_every`` supersteps
+        (:data:`~repro.core.checkpoint.DEFAULT_LANE_SUPERSTEPS` by
+        default); ``resume=True`` restores the newest snapshot —
+        fingerprint-checked against this program/graph/schedule — and
+        continues bit-exactly (one shared loop body means slices replay
+        the identical superstep sequence).  ``run_stats`` gains
+        ``checkpoint_saves``/``checkpoint_loads``/``checkpoint_write_s``.
         """
+        if checkpoint_dir is None:
+            checkpoint_dir = self._checkpoint_dir
+        if checkpoint_dir is not None:
+            return self._run_checkpointed(roots, values, checkpoint_dir,
+                                          checkpoint_every, resume)
         values, active = self.init_state(roots=roots, values=values)
         values, iters, stats_dev = self._run_loop(values, active)
         # one host transfer for the whole counter tuple (a per-scalar
@@ -492,48 +576,98 @@ class CompiledGraphProgram:
                 pl_hi, pl_lo, bl_swept, bl_skip, pull_cost, live,
                 nanfree) = \
             jax.device_get((iters, stats_dev))
-        if not bool(nanfree):
-            terminated = "diverged"
-        elif bool(live) and int(iters) >= self.max_iters:
-            terminated = "budget"
-        else:
-            terminated = "converged"
-        pull_steps = int(iters) - int(pushes)
-        exchanges = {"pull": pull_steps, "push": int(compact)}.get(
-            self._exchange_plane, 0)
-        stats = {
-            "push_supersteps": int(pushes),
-            "push_compacted_supersteps": int(compact),
-            "push_fallback_supersteps": int(pushes) - int(compact),
-            "pull_supersteps": pull_steps,
-            "direction_switches": int(switches),
-            # exact: hi/lo-recombined pull part (swept edges — the real
-            # pull cost model, ≤ pull_supersteps·E) + push part (m_f)
-            "edges_traversed": (int(pl_hi) << 16) + int(pl_lo)
-            + (int(pe_hi) << 16) + int(pe_lo),
-            "pes": self.report.pes,
-            "push_live_rows_per_pe": np.asarray(pe_rows).tolist(),
-            # block-skip split of the bitmap pull plane (zeros on the
-            # dense plane, which has no block accounting) — the pull-side
-            # analogue of the push compacted/fallback tier split
-            "pull_blocks_swept": int(bl_swept),
-            "pull_blocks_skipped": int(bl_skip),
-            # the measured-pull-cost register's final value (E until a
-            # pull superstep runs) — what the m_f-aware alpha compared
-            "pull_cost_model": int(pull_cost),
-            "exchange_supersteps": exchanges,
-            "exchange_bytes": exchanges * self._collective_bytes,
-            # how the run ended: 'converged' (frontier drained),
-            # 'budget' (superstep budget hit with a live frontier —
-            # values are partial), or 'diverged' (NaN probe fired)
-            "terminated": terminated,
-        }
+        stats = self._scalar_stats(iters, pushes, compact, switches, pe_hi,
+                                   pe_lo, pe_rows, pl_hi, pl_lo, bl_swept,
+                                   bl_skip, pull_cost, live, nanfree)
         if self._comm is not None and self._exchange_plane is not None:
-            self._comm.stats.record_collective(self._collective_bytes,
-                                               exchanges)
+            self._comm.stats.record_collective(
+                self._collective_bytes, stats["exchange_supersteps"])
         self.last_run_stats = stats
         self.report.run_stats = stats
         return values, iters
+
+    def _initial_lane_state(self, roots, values) -> BatchLaneState:
+        """A 1-lane :class:`BatchLaneState` for run()'s request shapes."""
+        if values is None and roots is not None:
+            return self.batch_init(jnp.asarray([int(np.asarray(roots))]))
+        v0, a0 = self.init_state(roots=roots, values=values)
+        base = self.batch_idle(1)
+        return base._replace(values=v0[None, :], active=a0[None, :])
+
+    def _run_checkpointed(self, roots, values, directory, every, resume):
+        """run() driven through budgeted slices with durable snapshots.
+
+        Bit-exactness is by construction: the slice loop shares
+        :meth:`_loop_fns`'s cond/body with the monolithic loop, and the
+        snapshot carries the complete 15-field carry, so crash → restore
+        → finish walks the identical superstep sequence.  Counters ride
+        the carry, so the final ``run_stats`` merge across segments for
+        free.  The ``lane.crash`` fault point trips at every slice
+        boundary for the chaos harness.
+        """
+        every = int(every or self._checkpoint_every
+                    or ckpt.DEFAULT_LANE_SUPERSTEPS)
+        fps = self._fingerprints()
+        root_meta = None if roots is None else int(np.asarray(roots))
+        saves = loads = seq = 0
+        write_s = 0.0
+        state = None
+        if resume:
+            stem = ckpt.latest_snapshot(directory, "lane")
+            if stem is not None:
+                manifest, arrays = ckpt.read_snapshot(stem, kind="lane",
+                                                      expect=fps)
+                meta = manifest["meta"]
+                if meta.get("root") != root_meta:
+                    raise CheckpointMismatchError(
+                        f"snapshot {stem} was rooted at "
+                        f"{meta.get('root')!r}, this run requests "
+                        f"{root_meta!r}", field="root",
+                        expected=str(root_meta), got=str(meta.get("root")))
+                state = self.lane_restore(arrays)
+                seq = int(manifest["seq"]) + 1
+                saves = int(meta.get("checkpoint_saves", 0))
+                loads = 1
+        if state is None:
+            state = self._initial_lane_state(roots, values)
+        while not bool(self.lane_done(state)[0]):
+            faults.trip("lane.crash",
+                        payload={"iters": int(np.asarray(state.iters)[0])})
+            state = self.run_batch_slice(state, every)
+            t0 = time.perf_counter()
+            saves += 1
+            ckpt.write_snapshot(directory, "lane", seq,
+                                self.lane_snapshot(state),
+                                {"root": root_meta,
+                                 "checkpoint_saves": saves}, fps)
+            write_s += time.perf_counter() - t0
+            seq += 1
+        host = jax.device_get(
+            (state.iters, state.pushes, state.compact, state.switches,
+             state.pe_hi, state.pe_lo, state.pe_rows, state.pl_hi,
+             state.pl_lo, state.bl_swept, state.bl_skip, state.pull_cost,
+             jnp.any(state.active, axis=1)))
+        (iters, pushes, compact, switches, pe_hi, pe_lo, pe_rows, pl_hi,
+         pl_lo, bl_swept, bl_skip, pull_cost, live) = \
+            (np.asarray(a)[0] for a in host)
+        if self._probe and jnp.issubdtype(state.values.dtype, jnp.floating):
+            nanfree = not bool(jax.device_get(
+                jnp.any(jnp.isnan(state.values[0]))))
+        else:
+            nanfree = True
+        stats = self._scalar_stats(iters, pushes, compact, switches, pe_hi,
+                                   pe_lo, pe_rows, pl_hi, pl_lo,
+                                   bl_swept, bl_skip, pull_cost, live,
+                                   nanfree)
+        stats["checkpoint_saves"] = saves
+        stats["checkpoint_loads"] = loads
+        stats["checkpoint_write_s"] = write_s
+        if self._comm is not None and self._exchange_plane is not None:
+            self._comm.stats.record_collective(
+                self._collective_bytes, stats["exchange_supersteps"])
+        self.last_run_stats = stats
+        self.report.run_stats = stats
+        return state.values[0], int(iters)
 
     def run_batch(self, roots):
         """Batched Algorithm 1: vmap the while-loop over k root vertices.
@@ -775,6 +909,40 @@ class CompiledGraphProgram:
             state.pe_hi, state.pe_lo, state.pe_rows, state.pl_hi,
             state.pl_lo, state.bl_swept, state.bl_skip,
             live=live, nanfree=nanfree)
+
+    def lane_snapshot(self, state: BatchLaneState) -> dict:
+        """The full 15-field slice carry as host numpy arrays.
+
+        One ``device_get`` for the whole carry; the returned dict keys
+        are exactly :attr:`BatchLaneState._fields`, suitable for
+        :func:`repro.core.checkpoint.write_snapshot` and guaranteed to
+        round-trip through :meth:`lane_restore` bit-exactly — the carry
+        *is* the loop state, so a restored lane continues the identical
+        superstep sequence (direction and pull-cost registers included).
+        """
+        host = jax.device_get(tuple(state))
+        return {name: np.asarray(arr)
+                for name, arr in zip(BatchLaneState._fields, host)}
+
+    def lane_restore(self, arrays: dict) -> BatchLaneState:
+        """Rebuild a :class:`BatchLaneState` from :meth:`lane_snapshot`.
+
+        Dtypes are re-derived from a reference idle state (not trusted
+        from the snapshot), so a carry serialized on one platform
+        restores with the dtypes this program's compiled loop expects.
+        Missing fields raise :class:`CheckpointCorruptError`.
+        """
+        missing = [f for f in BatchLaneState._fields if f not in arrays]
+        if missing:
+            raise CheckpointCorruptError(
+                f"lane snapshot is missing carry fields: "
+                f"{', '.join(missing)}", member=missing[0])
+        k = int(np.asarray(arrays["iters"]).shape[0])
+        ref = self.batch_idle(k)
+        return BatchLaneState(*(
+            jnp.asarray(np.asarray(arrays[f]),
+                        dtype=getattr(ref, f).dtype)
+            for f in BatchLaneState._fields))
 
 
 # ---------------------------------------------------------------------------
@@ -1488,6 +1656,8 @@ def translate(
     dump_passes: bool = False,
     validate: bool = False,
     strict: bool = False,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int | None = None,
 ) -> CompiledGraphProgram:
     """Stage a DSL program into a specialized executable for graph ``g``.
 
@@ -1514,10 +1684,14 @@ def translate(
     t0 = time.perf_counter()
     schedule = schedule or ScheduleConfig()
     comm = comm or CommManager()
-    if validate and isinstance(g, G.Graph):
-        # opt-in structural validation (containers verify integrity via
-        # their per-partition checksums on every streamed fetch instead)
-        G.validate_graph(g, reduce=program.reduce)
+    if validate:
+        # opt-in structural validation — resident graphs check the CSR
+        # invariants directly; partition containers replay the same checks
+        # per partition on top of their always-on streamed-fetch checksums
+        if isinstance(g, G.Graph):
+            G.validate_graph(g, reduce=program.reduce)
+        elif hasattr(g, "validate_partitions"):
+            g.validate_partitions(reduce=program.reduce)
     splan: SchedulePlan = plan(schedule, num_vertices=g.num_vertices,
                                num_edges=g.num_edges,
                                fixed_partitions=getattr(g, "partitions", None))
@@ -1532,7 +1706,9 @@ def translate(
         from . import stream
         return stream.translate_partitioned(
             program, g, schedule, splan, comm, use_pallas=use_pallas,
-            dump_passes=dump_passes, strict=strict)
+            dump_passes=dump_passes, strict=strict,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every)
 
     # ---- stages 1+2: lower to IR, run the pass pipeline -----------------
     # (always re-run: the pipeline costs ~ms and keeps reports/dumps fresh)
@@ -1664,7 +1840,9 @@ def translate(
         push_stat_pes=staged["push_stat_pes"], comm=comm,
         exchange_plane=exchange_plane,
         collective_bytes_per_superstep=est_collective + est_frontier,
-        probe_divergence=schedule.probe_divergence)
+        probe_divergence=schedule.probe_divergence,
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        fingerprints_fn=lambda: ckpt.run_fingerprints(program, g, schedule))
 
 
 def _stage(program, ir, g, lay, schedule, splan, use_pallas, fstep, fused,

@@ -315,6 +315,45 @@ class PartitionContainer:
         for p in range(self.partitions):
             self.partition_coo(p)
 
+    def validate_partitions(self, *, reduce: str | None = None) -> None:
+        """The resident :func:`~repro.core.graph.validate_graph` checks,
+        replayed per partition — ``translate(..., validate=True)``'s
+        streamed-source path.
+
+        Each partition's rebased CSR is lifted to a full-V offsets table
+        (zeros before its interval, its edge total after) and validated
+        as a synthetic :class:`~repro.core.graph.Graph`: monotone
+        offsets, in-range destinations, finite weights, and the
+        ``reduce``-specific weight-domain check.  Tampered offsets or
+        destination ids raise :class:`~repro.errors.GraphValidationError`
+        naming the partition, before any superstep runs on the damage.
+        """
+        V = self.num_vertices
+        for p in range(self.partitions):
+            lo, hi = int(self.cuts[p]), int(self.cuts[p + 1])
+            off = np.asarray(self._z[f"p{p}_offsets"], np.int64)
+            dst = np.asarray(self._z[f"p{p}_dst"])
+            wgt = np.asarray(self._z[f"p{p}_wgt"]) if self.weighted \
+                else np.ones(len(dst), np.float32)
+            if off.shape != (hi - lo + 1,):
+                raise GraphValidationError(
+                    f"partition {p} offsets shape {off.shape} != "
+                    f"({hi - lo + 1},) for interval [{lo}, {hi}) "
+                    f"({self.path})")
+            full_off = np.zeros(V + 1, np.int64)
+            full_off[lo:hi + 1] = off
+            full_off[hi + 1:] = off[-1]
+            try:
+                G.validate_graph(
+                    G.Graph(vertex_values=np.zeros(V, np.float32),
+                            edge_offsets=full_off, edges_dst=dst,
+                            edge_weights=wgt, num_vertices=V,
+                            num_edges=int(len(dst))),
+                    reduce=reduce)
+            except GraphValidationError as e:
+                raise GraphValidationError(
+                    f"partition {p} of {self.path}: {e}") from e
+
     def to_graph(self) -> G.Graph:
         """Materialize the whole container as a resident graph.
 

@@ -24,6 +24,9 @@ __all__ = [
     "QueueFull",
     "DiagnosticError",
     "IRVerificationError",
+    "CheckpointError",
+    "CheckpointCorruptError",
+    "CheckpointMismatchError",
 ]
 
 
@@ -122,6 +125,48 @@ class IRVerificationError(ReproError):
         super().__init__(message)
         self.stage = stage
         self.diagnostics = tuple(diagnostics)
+
+
+class CheckpointError(ReproError):
+    """Base class for checkpoint/restore failures.
+
+    A checkpoint problem is never silently absorbed: a snapshot that can't
+    be trusted (corrupt, truncated, or taken against different inputs)
+    must surface as a typed error rather than resume into wrong numerics.
+    """
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A snapshot file is unreadable, truncated, or fails its CRC32s.
+
+    ``path`` names the offending file; ``member`` the manifest entry or
+    array whose integrity check failed (empty when the container itself
+    is unreadable).
+    """
+
+    def __init__(self, message: str, *, path: str = "", member: str = ""):
+        super().__init__(message)
+        self.path = path
+        self.member = member
+
+
+class CheckpointMismatchError(CheckpointError):
+    """A snapshot was taken against a different graph/program/schedule.
+
+    Restoring lane state onto mismatched inputs would produce silently
+    wrong answers, so every restore re-derives the fingerprints and
+    compares them to the manifest.  ``field`` names the first mismatching
+    fingerprint (``"graph"``, ``"program"``, ``"schedule"``, or a format
+    field like ``"version"``/``"kind"``); ``expected``/``got`` carry the
+    two fingerprint strings.
+    """
+
+    def __init__(self, message: str, *, field: str = "",
+                 expected: str = "", got: str = ""):
+        super().__init__(message)
+        self.field = field
+        self.expected = expected
+        self.got = got
 
 
 class QueueFull(ReproError, RuntimeError):

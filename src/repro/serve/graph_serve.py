@@ -48,12 +48,15 @@ from typing import Any
 
 import numpy as np
 
+from ..core import checkpoint as ckpt
 from ..core import dsl
+from ..core import faults
 from ..core import graph as G
 from ..core.comm import CommManager
 from ..core.scheduler import AdmissionPolicy, ScheduleConfig
 from ..core.translator import CompiledGraphProgram, translate
-from ..errors import InvalidQuery, QueueFull
+from ..errors import (CheckpointError, CheckpointMismatchError, InvalidQuery,
+                      QueueFull)
 
 __all__ = ["GraphQuery", "GraphServer", "LandmarkTable",
            "build_landmark_table"]
@@ -453,6 +456,7 @@ class GraphServer:
         self._parked: list[tuple[GraphQuery, GraphQuery]] = []
         self.done: list[GraphQuery] = []
         self._next_qid = 0
+        self._snap_seq = 0
         self.table: LandmarkTable | None = (
             build_landmark_table(g, landmarks, schedule=self.schedule,
                                  use_pallas=use_pallas)
@@ -661,6 +665,187 @@ class GraphServer:
         if q.qid >= 0:
             self.done.append(q)
 
+    # -- durable snapshot / rolling restart --------------------------------
+
+    def _wal_record(self, q: GraphQuery, loc: str, now: float,
+                    **extra) -> dict:
+        """One request-WAL entry: everything needed to re-create ``q``.
+
+        Programs are *not* serialized — the record carries (kind, root)
+        and restore re-derives the memoized template, which is why a
+        query carrying a custom ``program=`` override refuses to
+        snapshot (there is no durable identity to rebuild it from).
+        """
+        if q.program is not self._program_for(q.kind, q.root):
+            raise CheckpointError(
+                f"query {q.qid} ({q.kind!r}) carries a custom program "
+                "override; snapshot() can only re-derive template "
+                "programs from (kind, root)")
+        rec = {"qid": q.qid, "kind": q.kind, "root": q.root,
+               "target": q.target, "loc": loc, "status": q.status,
+               "deadline_remaining_s":
+               None if q.deadline_s is None else q.deadline_s - now,
+               "inflight":
+               self._inflight.get((q.program, q.root)) is q}
+        rec.update(extra)
+        return rec
+
+    def snapshot(self, directory: str) -> str:
+        """Commit the serving plane's full pending state durably.
+
+        Two halves, one atomic snapshot (kind ``'serve'``):
+
+        * a **request WAL** — one record per unanswered query (queued,
+          waiting, running in a lane, coalesced follower, parked dist),
+          with its queue/lane position, coalescing links (follower →
+          leader qid; parked outer ↔ inner by the ``-qid-1`` rule) and
+          remaining deadline budget;
+        * the **harvested lane states** — each non-idle group's full
+          :class:`BatchLaneState` via ``lane_snapshot``, keyed
+          ``g{gid}__{field}``, so restored lanes resume mid-run rather
+          than recompute from their roots.
+
+        Fingerprinted against the graph and schedule; answered queries
+        (``done``) are the caller's to keep — a snapshot only covers
+        work still owed.  Returns the snapshot stem.
+        """
+        now = time.perf_counter()
+        records: list[dict] = []
+        groups: list[dict] = []
+
+        def emit(q, loc, **extra):
+            records.append(self._wal_record(q, loc, now, **extra))
+            for f in q.followers:
+                records.append(
+                    self._wal_record(f, "follower", now, leader=q.qid))
+
+        for q in self._queue:
+            emit(q, "queue")
+        arrays: dict[str, np.ndarray] = {}
+        for gid, grp in enumerate(self._groups.values()):
+            if grp.idle:
+                continue
+            rep = next(q for q in list(grp.occupants) + list(grp.waiting)
+                       if q is not None)
+            groups.append({
+                "gid": gid, "kind": rep.kind, "root": rep.root,
+                "slots": grp.slots, "supersteps": grp.supersteps,
+                "occupants": [None if q is None else q.qid
+                              for q in grp.occupants]})
+            for lane, q in enumerate(grp.occupants):
+                if q is not None:
+                    emit(q, "lane", gid=gid, lane=lane)
+            for pos, q in enumerate(grp.waiting):
+                emit(q, "waiting", gid=gid, pos=pos)
+            for name, arr in grp.compiled.lane_snapshot(grp.state).items():
+                arrays[f"g{gid}__{name}"] = arr
+        for q, _inner in self._parked:
+            emit(q, "parked")
+        meta = {"records": records, "groups": groups,
+                "next_qid": self._next_qid,
+                "ppr_damping": self._ppr_damping,
+                "ppr_iters": self._ppr_iters,
+                "slots": self.admission.slots,
+                "coalesce": bool(self.admission.coalesce)}
+        fps = {"graph": ckpt.fingerprint_graph(self.graph),
+               "schedule": ckpt.fingerprint_schedule(self.schedule)}
+        stem = ckpt.write_snapshot(directory, "serve", self._snap_seq,
+                                   arrays, meta, fps)
+        self._snap_seq += 1
+        return stem
+
+    def restore(self, directory: str) -> int:
+        """Rolling restart: load the newest ``'serve'`` snapshot.
+
+        Call on a *freshly constructed* server with the same graph,
+        schedule, and admission config (mismatches raise
+        :class:`~repro.errors.CheckpointMismatchError`; a non-empty
+        server raises :class:`~repro.errors.CheckpointError`).  Every
+        pending query is re-created under its original qid with its
+        coalescing links and remaining deadline budget, and every lane
+        resumes from its harvested mid-run state — so a drain after
+        restore serves each query bit-equal to the uninterrupted server.
+        Returns the number of queries restored.
+        """
+        if (self._queue or self._groups or self._parked or self.done
+                or self._inflight or self._next_qid):
+            raise CheckpointError(
+                "restore() needs a freshly constructed server (this one "
+                "already holds queries or served answers)")
+        stem = ckpt.require_snapshot(directory, "serve")
+        expect = {"graph": ckpt.fingerprint_graph(self.graph),
+                  "schedule": ckpt.fingerprint_schedule(self.schedule)}
+        manifest, arrays = ckpt.read_snapshot(stem, kind="serve",
+                                              expect=expect)
+        meta = manifest["meta"]
+        if (meta["ppr_damping"] != self._ppr_damping
+                or meta["ppr_iters"] != self._ppr_iters):
+            raise CheckpointMismatchError(
+                "snapshot served ppr with damping="
+                f"{meta['ppr_damping']}/iters={meta['ppr_iters']}, this "
+                f"server uses {self._ppr_damping}/{self._ppr_iters}",
+                field="program",
+                expected=f"{self._ppr_damping}/{self._ppr_iters}",
+                got=f"{meta['ppr_damping']}/{meta['ppr_iters']}")
+        if meta["slots"] != self.admission.slots:
+            raise CheckpointMismatchError(
+                f"snapshot lane pools have {meta['slots']} slots, this "
+                f"server admits {self.admission.slots}",
+                field="admission", expected=str(self.admission.slots),
+                got=str(meta["slots"]))
+        now = time.perf_counter()
+        qs: dict[int, GraphQuery] = {}
+        for rec in meta["records"]:
+            rem = rec["deadline_remaining_s"]
+            q = GraphQuery(
+                qid=int(rec["qid"]), kind=rec["kind"],
+                root=int(rec["root"]),
+                target=None if rec["target"] is None else int(rec["target"]),
+                program=self._program_for(rec["kind"], int(rec["root"])),
+                status=rec["status"], submitted_s=now,
+                deadline_s=None if rem is None else now + float(rem))
+            qs[q.qid] = q
+        # placement pass: links first (followers/inflight), then queues,
+        # lanes, and waiting lists in their recorded order
+        for rec in meta["records"]:
+            q = qs[rec["qid"]]
+            if rec["loc"] == "follower":
+                qs[rec["leader"]].followers.append(q)
+            if rec["inflight"]:
+                self._inflight[(q.program, q.root)] = q
+        for rec in meta["records"]:
+            if rec["loc"] == "queue":
+                self._queue.append(qs[rec["qid"]])
+        for grec in meta["groups"]:
+            program = self._program_for(grec["kind"], int(grec["root"]))
+            grp = self._group_for(program)
+            if grp.slots != grec["slots"]:
+                raise CheckpointMismatchError(
+                    f"group for {grec['kind']!r} has {grp.slots} lanes, "
+                    f"snapshot recorded {grec['slots']}",
+                    field="admission", expected=str(grp.slots),
+                    got=str(grec["slots"]))
+            prefix = f"g{grec['gid']}__"
+            grp.state = grp.compiled.lane_restore(
+                {k[len(prefix):]: v for k, v in arrays.items()
+                 if k.startswith(prefix)})
+            grp.supersteps = int(grec["supersteps"])
+            for lane, qid in enumerate(grec["occupants"]):
+                if qid is not None:
+                    grp.occupants[lane] = qs[qid]
+            waiting = sorted(
+                (rec for rec in meta["records"]
+                 if rec["loc"] == "waiting" and rec["gid"] == grec["gid"]),
+                key=lambda rec: rec["pos"])
+            for rec in waiting:
+                grp.waiting.append(qs[rec["qid"]])
+        for rec in meta["records"]:
+            if rec["loc"] == "parked":
+                q = qs[rec["qid"]]
+                self._parked.append((q, qs[-q.qid - 1]))
+        self._next_qid = int(meta["next_qid"])
+        return len(qs)
+
     def step(self) -> bool:
         """One serving iteration: route → reap → admit → slice → harvest.
 
@@ -673,6 +858,9 @@ class GraphServer:
         — a deadline never hangs a slot or silently drops a query.
         """
         self._route()
+        # crash point between routing and slicing: a killed server is
+        # restartable from snapshot() with no query half-sliced
+        faults.trip("lane.crash", payload={"pending": self.pending})
         budget = self.admission.slice_supersteps
         progressed = False
         for program, grp in list(self._groups.items()):

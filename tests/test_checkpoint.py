@@ -1,0 +1,333 @@
+"""Checkpoint format, fingerprints, and mismatch surfaces.
+
+The durability contract: a snapshot that cannot be trusted — corrupt,
+truncated, or taken against different inputs — must raise a typed
+:class:`repro.errors.CheckpointError` subclass, never resume into a
+silently wrong answer.  These tests pin the snapshot format (atomic
+write-then-rename, manifest-as-commit-record, per-array CRC32), the
+fingerprint functions' stability and sensitivity, and the lane-state
+byte round-trip on both engines.  The crash-anywhere recovery property
+lives in ``tests/test_crash_recovery.py``.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as ckpt
+from repro.core import dsl
+from repro.core import faults
+from repro.core import graph as G
+from repro.core.comm import CommManager
+from repro.core.scheduler import DirectionPolicy, ScheduleConfig
+from repro.core.translator import translate
+from repro.data import graphs as D
+from repro.errors import (CheckpointCorruptError, CheckpointError,
+                          CheckpointMismatchError, InjectedFault)
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    faults.reset()
+    yield
+    faults.reset()
+
+
+@pytest.fixture(scope="module")
+def g():
+    src, dst = G.rmat_edges(400, 3200, seed=11)
+    return G.from_edge_list(src, dst, num_vertices=400)
+
+
+@pytest.fixture(scope="module")
+def g2():
+    src, dst = G.rmat_edges(400, 3200, seed=12)
+    return G.from_edge_list(src, dst, num_vertices=400)
+
+
+# ---------------------------------------------------------------------------
+# snapshot format
+# ---------------------------------------------------------------------------
+
+
+def test_write_read_round_trip(tmp_path):
+    arrays = {"a": np.arange(12, dtype=np.int64).reshape(3, 4),
+              "b": np.linspace(0, 1, 5, dtype=np.float32)}
+    meta = {"root": 3, "note": "x"}
+    fps = {"graph": "graph:x", "program": "program:y"}
+    stem = ckpt.write_snapshot(str(tmp_path), "lane", 0, arrays, meta, fps)
+    manifest, back = ckpt.read_snapshot(stem, kind="lane", expect=fps)
+    assert manifest["meta"]["root"] == 3
+    assert manifest["seq"] == 0
+    for k, v in arrays.items():
+        assert np.array_equal(back[k], v)
+        assert back[k].dtype == v.dtype
+
+
+def test_latest_snapshot_orders_by_seq(tmp_path):
+    for seq in (0, 1, 2):
+        ckpt.write_snapshot(str(tmp_path), "lane", seq,
+                            {"x": np.asarray([seq])}, {}, {})
+    stem = ckpt.latest_snapshot(str(tmp_path), "lane")
+    manifest, arrays = ckpt.read_snapshot(stem)
+    assert manifest["seq"] == 2 and int(arrays["x"][0]) == 2
+
+
+def test_prune_keeps_newest(tmp_path):
+    for seq in range(5):
+        ckpt.write_snapshot(str(tmp_path), "lane", seq,
+                            {"x": np.asarray([seq])}, {}, {}, keep=2)
+    seqs = [s for s, _ in ckpt.list_snapshots(str(tmp_path), "lane")]
+    assert seqs == [3, 4]
+
+
+def test_kinds_are_independent(tmp_path):
+    ckpt.write_snapshot(str(tmp_path), "lane", 7, {"x": np.zeros(1)}, {}, {})
+    assert ckpt.latest_snapshot(str(tmp_path), "stream") is None
+    with pytest.raises(CheckpointError):
+        ckpt.require_snapshot(str(tmp_path), "stream")
+
+
+def test_crashed_write_commits_nothing(tmp_path):
+    """An injected crash before the renames leaves no visible snapshot."""
+    ckpt.write_snapshot(str(tmp_path), "lane", 0, {"x": np.asarray([1])},
+                        {"gen": 0}, {})
+    with faults.injected("checkpoint.write", times=1):
+        with pytest.raises(InjectedFault):
+            ckpt.write_snapshot(str(tmp_path), "lane", 1,
+                                {"x": np.asarray([2])}, {"gen": 1}, {})
+    # the previous snapshot is still the newest committed one, and the
+    # aborted write left no temp litter behind
+    manifest, arrays = ckpt.read_snapshot(
+        ckpt.latest_snapshot(str(tmp_path), "lane"))
+    assert manifest["meta"]["gen"] == 0 and int(arrays["x"][0]) == 1
+    assert not [f for f in os.listdir(tmp_path) if ".tmp." in f]
+
+
+# ---------------------------------------------------------------------------
+# corruption surfaces: every damaged snapshot fails typed
+# ---------------------------------------------------------------------------
+
+
+def _one_snapshot(tmp_path):
+    return ckpt.write_snapshot(
+        str(tmp_path), "lane", 0,
+        {"x": np.arange(64, dtype=np.int64)}, {"root": 0}, {})
+
+
+def test_bitflipped_npz_fails_crc(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    data = bytearray(open(stem + ".npz", "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(stem + ".npz", "wb").write(bytes(data))
+    with pytest.raises(CheckpointCorruptError):
+        ckpt.read_snapshot(stem)
+
+
+def test_truncated_npz_fails(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    data = open(stem + ".npz", "rb").read()
+    open(stem + ".npz", "wb").write(data[:len(data) // 3])
+    with pytest.raises(CheckpointCorruptError):
+        ckpt.read_snapshot(stem)
+
+
+def test_missing_npz_fails(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    os.unlink(stem + ".npz")
+    with pytest.raises(CheckpointCorruptError):
+        ckpt.read_snapshot(stem)
+
+
+def test_garbage_manifest_fails(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    open(stem + ".json", "w").write("{not json")
+    with pytest.raises(CheckpointCorruptError):
+        ckpt.read_snapshot(stem)
+
+
+def test_wrong_version_fails_typed(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    manifest = json.load(open(stem + ".json"))
+    manifest["version"] = ckpt.SNAPSHOT_VERSION + 1
+    json.dump(manifest, open(stem + ".json", "w"))
+    with pytest.raises(CheckpointMismatchError) as ei:
+        ckpt.read_snapshot(stem)
+    assert ei.value.field == "version"
+
+
+def test_wrong_kind_fails_typed(tmp_path):
+    stem = _one_snapshot(tmp_path)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        ckpt.read_snapshot(stem, kind="stream")
+    assert ei.value.field == "kind"
+
+
+# ---------------------------------------------------------------------------
+# fingerprints: stable across calls, sensitive to every input
+# ---------------------------------------------------------------------------
+
+
+def test_fingerprints_stable(g):
+    fa = ckpt.run_fingerprints(dsl.bfs_program(), g, ScheduleConfig())
+    fb = ckpt.run_fingerprints(dsl.bfs_program(), g, ScheduleConfig())
+    assert fa == fb
+
+
+def test_graph_fingerprint_sensitive(g, g2):
+    assert ckpt.fingerprint_graph(g) != ckpt.fingerprint_graph(g2)
+
+
+def test_container_fingerprint_distinct_by_partitioning(g, tmp_path):
+    p3 = D.load_partition_container(
+        D.container_from_graph(str(tmp_path / "c3.npz"), g, 3))
+    p2 = D.load_partition_container(
+        D.container_from_graph(str(tmp_path / "c2.npz"), g, 2))
+    assert ckpt.fingerprint_graph(p3) != ckpt.fingerprint_graph(p2)
+    # and stable when re-opened
+    again = D.load_partition_container(str(tmp_path / "c3.npz"))
+    assert ckpt.fingerprint_graph(p3) == ckpt.fingerprint_graph(again)
+
+
+def test_program_fingerprint_sensitive():
+    fps = {ckpt.fingerprint_program(p) for p in (
+        dsl.bfs_program(), dsl.sssp_program(), dsl.wcc_program())}
+    assert len(fps) == 3
+
+
+def test_program_fingerprint_sees_closure_params():
+    """ppr(root=1) and ppr(root=2) differ only in captured constants."""
+    a = ckpt.fingerprint_program(dsl.ppr_program(1))
+    b = ckpt.fingerprint_program(dsl.ppr_program(2))
+    assert a != b
+    assert a == ckpt.fingerprint_program(dsl.ppr_program(1))
+
+
+def test_schedule_fingerprint_sensitive():
+    a = ckpt.fingerprint_schedule(ScheduleConfig())
+    b = ckpt.fingerprint_schedule(
+        ScheduleConfig(direction=DirectionPolicy(mode="push")))
+    c = ckpt.fingerprint_schedule(ScheduleConfig(partitions=3))
+    assert len({a, b, c}) == 3
+
+
+# ---------------------------------------------------------------------------
+# lane round-trip through bytes (both engines)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("partitions", [1, 3])
+def test_lane_snapshot_roundtrip_continues_bitexact(g, tmp_path, partitions):
+    if partitions > 1:
+        source = D.load_partition_container(D.container_from_graph(
+            str(tmp_path / "c.npz"), g, partitions))
+    else:
+        source = g
+    prog = translate(dsl.sssp_program(), source, ScheduleConfig(),
+                     CommManager())
+    ref, it_ref = translate(dsl.sssp_program(), g, ScheduleConfig()).run(
+        roots=0)
+    state = prog.batch_init([0])
+    state = prog.run_batch_slice(state, 2)
+    snap = prog.lane_snapshot(state)
+    # ... through actual bytes: write, read back, restore
+    stem = ckpt.write_snapshot(str(tmp_path / "ck"), "lane", 0, snap, {}, {})
+    _, arrays = ckpt.read_snapshot(stem)
+    restored = prog.lane_restore(arrays)
+    while not bool(prog.lane_done(restored)[0]):
+        restored = prog.run_batch_slice(restored, 2)
+    assert np.array_equal(np.asarray(restored.values[0]), np.asarray(ref))
+    assert int(np.asarray(restored.iters)[0]) == int(it_ref)
+
+
+def test_lane_restore_missing_field_typed(g):
+    prog = translate(dsl.bfs_program(), g)
+    snap = prog.lane_snapshot(prog.batch_init([0]))
+    snap.pop("pull_cost")
+    with pytest.raises(CheckpointCorruptError) as ei:
+        prog.lane_restore(snap)
+    assert ei.value.member == "pull_cost"
+
+
+# ---------------------------------------------------------------------------
+# mismatch surfaces on resume: wrong inputs never resume silently
+# ---------------------------------------------------------------------------
+
+
+def _checkpointed_run(source, tmp_path, **kw):
+    prog = translate(dsl.bfs_program(), source, ScheduleConfig(),
+                     CommManager(), **kw)
+    prog.run(roots=0, checkpoint_dir=str(tmp_path / "ck"),
+             checkpoint_every=1)
+    return prog
+
+
+@pytest.mark.parametrize("partitions", [1, 3])
+def test_resume_against_wrong_graph(g, g2, tmp_path, partitions):
+    if partitions > 1:
+        src_a = D.load_partition_container(D.container_from_graph(
+            str(tmp_path / "a.npz"), g, partitions))
+        src_b = D.load_partition_container(D.container_from_graph(
+            str(tmp_path / "b.npz"), g2, partitions))
+    else:
+        src_a, src_b = g, g2
+    _checkpointed_run(src_a, tmp_path)
+    other = translate(dsl.bfs_program(), src_b, ScheduleConfig(),
+                      CommManager())
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.run(roots=0, checkpoint_dir=str(tmp_path / "ck"),
+                  checkpoint_every=1, resume=True)
+    assert ei.value.field == "graph"
+
+
+def test_resume_against_wrong_program(g, tmp_path):
+    _checkpointed_run(g, tmp_path)
+    other = translate(dsl.sssp_program(), g, ScheduleConfig(),
+                      CommManager())
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.run(roots=0, checkpoint_dir=str(tmp_path / "ck"),
+                  checkpoint_every=1, resume=True)
+    assert ei.value.field == "program"
+
+
+def test_resume_against_wrong_schedule(g, tmp_path):
+    _checkpointed_run(g, tmp_path)
+    other = translate(dsl.bfs_program(), g,
+                      ScheduleConfig(direction=DirectionPolicy(mode="push")),
+                      CommManager())
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.run(roots=0, checkpoint_dir=str(tmp_path / "ck"),
+                  checkpoint_every=1, resume=True)
+    assert ei.value.field == "schedule"
+
+
+def test_resume_against_wrong_root(g, tmp_path):
+    prog = _checkpointed_run(g, tmp_path)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        prog.run(roots=5, checkpoint_dir=str(tmp_path / "ck"),
+                 checkpoint_every=1, resume=True)
+    assert ei.value.field == "root"
+
+
+def test_resume_from_bitflipped_snapshot(g, tmp_path):
+    _checkpointed_run(g, tmp_path)
+    stem = ckpt.latest_snapshot(str(tmp_path / "ck"), "lane")
+    data = bytearray(open(stem + ".npz", "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(stem + ".npz", "wb").write(bytes(data))
+    prog = translate(dsl.bfs_program(), g, ScheduleConfig(), CommManager())
+    with pytest.raises(CheckpointCorruptError):
+        prog.run(roots=0, checkpoint_dir=str(tmp_path / "ck"),
+                 checkpoint_every=1, resume=True)
+
+
+def test_checkpointing_requires_translate_fingerprints(g):
+    from repro.core.translator import CompiledGraphProgram
+    prog = translate(dsl.bfs_program(), g)
+    assert prog._fingerprints()            # translate() wires them
+    bare = CompiledGraphProgram.__new__(CompiledGraphProgram)
+    bare._fingerprints_cache = None
+    bare._fingerprints_fn = None
+    with pytest.raises(ValueError):
+        bare._fingerprints()

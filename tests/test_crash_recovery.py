@@ -1,0 +1,364 @@
+"""Crash-anywhere recovery: kill a checkpointed run, resume bit-exact.
+
+The tentpole property of the durability layer: for every template
+(bfs / sssp / wcc) × direction (pull / push / auto) × data plane
+(resident / 3-partition streamed), a run killed at an armed
+``lane.crash`` point and resumed from its last durable snapshot — in a
+*fresh* process stand-in (new translate, new comm manager) — produces
+values, iteration counts, and run counters bit-equal to an
+uninterrupted oracle.  The streamed sweep additionally kills one run at
+*every* crash boundary it has (superstep and partition), and the
+serving plane replays a mid-serve kill through snapshot()/restore().
+"""
+import dataclasses
+import signal
+
+import numpy as np
+import pytest
+
+from repro.core import checkpoint as ckpt
+from repro.core import dsl
+from repro.core import faults
+from repro.core import graph as G
+from repro.core.comm import CommManager
+from repro.core.scheduler import AdmissionPolicy, DirectionPolicy, \
+    ScheduleConfig
+from repro.core.translator import translate
+from repro.data import graphs as D
+from repro.errors import CheckpointError, CheckpointMismatchError, \
+    InjectedFault
+from repro.serve.graph_serve import GraphServer
+
+pytestmark = pytest.mark.chaos
+
+TIMEOUT_S = 300
+
+
+@pytest.fixture(autouse=True)
+def _no_hang_and_clean_registry():
+    faults.reset()
+
+    def _alarm(signum, frame):
+        raise AssertionError(f"crash-recovery test hung (> {TIMEOUT_S}s)")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+        faults.reset()
+
+
+@pytest.fixture(scope="module")
+def g():
+    src, dst = G.rmat_edges(500, 4000, seed=5)
+    return G.from_edge_list(src, dst, num_vertices=500)
+
+
+@pytest.fixture(scope="module")
+def container_path(g, tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("crash") / "c.npz")
+    D.container_from_graph(path, g, 3)
+    return path
+
+
+PROGRAMS = {"bfs": dsl.bfs_program, "sssp": dsl.sssp_program,
+            "wcc": dsl.wcc_program}
+ROOTS = {"bfs": 0, "sssp": 0, "wcc": None}
+
+
+def _translate(template, source, mode):
+    prog = translate(PROGRAMS[template](), source,
+                     ScheduleConfig(direction=DirectionPolicy(mode=mode)),
+                     CommManager())
+    prog._retry_base_s = 0.0
+    return prog
+
+
+def _source(kind, g, container_path):
+    return g if kind == "resident" else \
+        D.load_partition_container(container_path)
+
+
+# ---------------------------------------------------------------------------
+# the crash-anywhere matrix
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("plane", ["resident", "streamed"])
+@pytest.mark.parametrize("mode", ["pull", "push", "auto"])
+@pytest.mark.parametrize("template", ["bfs", "sssp", "wcc"])
+def test_crash_resume_bitexact(g, container_path, tmp_path, template, mode,
+                               plane):
+    root = ROOTS[template]
+    oracle = _translate(template, _source(plane, g, container_path), mode)
+    v_ref, it_ref = oracle.run(roots=root)
+    ref = np.asarray(v_ref)
+    oref = oracle.last_run_stats
+
+    ck = str(tmp_path / "ck")
+    crashed = _translate(template, _source(plane, g, container_path), mode)
+    with faults.injected("lane.crash", times=1, after=2) as plan:
+        with pytest.raises(InjectedFault):
+            crashed.run(roots=root, checkpoint_dir=ck, checkpoint_every=1)
+    assert plan.fired == 1
+
+    # "process restart": fresh translate, fresh comm manager.  If the
+    # crash hit before the first checkpoint committed (wcc activates
+    # every partition in superstep 1), resume is correctly a cold start.
+    kind = "stream" if plane == "streamed" else "lane"
+    has_snap = ckpt.latest_snapshot(ck, kind) is not None
+    resumed = _translate(template, _source(plane, g, container_path), mode)
+    v, it = resumed.run(roots=root, checkpoint_dir=ck, checkpoint_every=1,
+                        resume=True)
+    assert np.array_equal(np.asarray(v), ref)
+    assert int(it) == int(it_ref)
+    st = resumed.last_run_stats
+    assert st["checkpoint_loads"] == (1 if has_snap else 0)
+    for key in ("push_supersteps", "pull_supersteps", "direction_switches",
+                "edges_traversed", "pull_cost_model", "terminated"):
+        assert st[key] == oref[key], key
+    if plane == "streamed":
+        for key in ("partitions_swept", "partitions_skipped",
+                    "partition_retries", "partition_corruptions"):
+            assert st[key] == oref[key], key
+
+
+def test_streamed_crash_at_every_boundary(g, container_path, tmp_path):
+    """Kill one bfs stream at each of its crash points, resume each time.
+
+    ``lane.crash`` trips at every superstep boundary *and* after every
+    streamed partition's partial, so sweeping ``after`` over the whole
+    trip count exercises crashes mid-sweep (partials lost, re-derived on
+    resume) as well as between checkpoints.
+    """
+    oracle = _translate("bfs", _source("streamed", g, container_path),
+                        "auto")
+    v_ref, it_ref = oracle.run(roots=0)
+    ref = np.asarray(v_ref)
+
+    # count the trip points of an uninterrupted checkpointed run
+    probe = _translate("bfs", _source("streamed", g, container_path),
+                       "auto")
+    plan = faults.arm("lane.crash", times=0)
+    probe.run(roots=0, checkpoint_dir=str(tmp_path / "probe"),
+              checkpoint_every=1)
+    trips = plan.calls
+    faults.reset()
+    assert trips > 4, "sweep needs a few boundaries to be meaningful"
+
+    for after in range(trips):
+        ck = str(tmp_path / f"ck{after}")
+        crashed = _translate("bfs",
+                             _source("streamed", g, container_path), "auto")
+        with faults.injected("lane.crash", times=1, after=after):
+            with pytest.raises(InjectedFault):
+                crashed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1)
+        resumed = _translate("bfs",
+                             _source("streamed", g, container_path), "auto")
+        v, it = resumed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1,
+                            resume=True)
+        assert np.array_equal(np.asarray(v), ref), f"crash at trip {after}"
+        assert int(it) == int(it_ref)
+
+
+def test_recovery_counters_survive_crash(g, container_path, tmp_path):
+    """A corruption absorbed before the crash stays counted after resume.
+
+    The comm-counter carry rides the snapshot manifest, so the resumed
+    run's merged stats report the checksum-recovery event the crashed
+    segment absorbed — exactly what an uninterrupted faulted run reports.
+    """
+    with faults.injected("container.read", mode="corrupt", times=1):
+        oracle = _translate("bfs", _source("streamed", g, container_path),
+                            "pull")
+        v_ref, _ = oracle.run(roots=0)
+    assert oracle.last_run_stats["partition_corruptions"] == 1
+
+    ck = str(tmp_path / "ck")
+    faults.arm("container.read", mode="corrupt", times=1)
+    faults.arm("lane.crash", times=1, after=4)
+    crashed = _translate("bfs", _source("streamed", g, container_path),
+                         "pull")
+    with pytest.raises(InjectedFault):
+        crashed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1)
+    faults.reset()
+
+    resumed = _translate("bfs", _source("streamed", g, container_path),
+                         "pull")
+    v, _ = resumed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1,
+                       resume=True)
+    assert np.array_equal(np.asarray(v), np.asarray(v_ref))
+    st = resumed.last_run_stats
+    assert st["partition_corruptions"] == 1
+    assert st["checkpoint_loads"] == 1
+
+
+def test_crash_during_checkpoint_write(g, tmp_path):
+    """A crash mid-write never poisons recovery: the previous snapshot
+    (or a fresh start) still resumes to the exact answer."""
+    ref, it_ref = translate(dsl.bfs_program(), g).run(roots=0)
+    ck = str(tmp_path / "ck")
+    prog = translate(dsl.bfs_program(), g, ScheduleConfig(), CommManager())
+    with faults.injected("checkpoint.write", times=1, after=1):
+        with pytest.raises(InjectedFault):
+            prog.run(roots=0, checkpoint_dir=ck, checkpoint_every=1)
+    resumed = translate(dsl.bfs_program(), g, ScheduleConfig(),
+                        CommManager())
+    v, it = resumed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1,
+                        resume=True)
+    assert np.array_equal(np.asarray(v), np.asarray(ref))
+    assert int(it) == int(it_ref)
+
+
+def test_resume_without_snapshot_runs_fresh(g, tmp_path):
+    """resume=True with an empty directory is a cold start, not an error."""
+    ref, it_ref = translate(dsl.bfs_program(), g).run(roots=0)
+    prog = translate(dsl.bfs_program(), g, ScheduleConfig(), CommManager())
+    v, it = prog.run(roots=0, checkpoint_dir=str(tmp_path / "empty"),
+                     checkpoint_every=2, resume=True)
+    assert np.array_equal(np.asarray(v), np.asarray(ref))
+    assert int(it) == int(it_ref)
+    assert prog.last_run_stats["checkpoint_loads"] == 0
+
+
+# ---------------------------------------------------------------------------
+# serving plane: rolling restart
+# ---------------------------------------------------------------------------
+
+
+def _server(g, **kw):
+    return GraphServer(g, schedule=ScheduleConfig(),
+                       admission=AdmissionPolicy(slots=4,
+                                                 slice_supersteps=2),
+                       landmarks=3, **kw)
+
+
+SPECS = [("bfs", 0, None), ("sssp", 5, None), ("bfs", 11, None),
+         ("dist", 3, 17), ("ppr", 2, None), ("bfs", 0, None),
+         ("sssp", 40, None), ("dist", 8, 499), ("bfs", 77, None)]
+
+
+def _oracle_answers(g):
+    srv = _server(g)
+    qs = [srv.submit(k, r, target=t) for k, r, t in SPECS]
+    srv.run()
+    return qs
+
+
+@pytest.mark.parametrize("steps_before_kill", [0, 1, 3])
+def test_server_rolling_restart_bitexact(g, tmp_path, steps_before_kill):
+    oracle = _oracle_answers(g)
+    srv = _server(g)
+    qs = [srv.submit(k, r, target=t) for k, r, t in SPECS]
+    for _ in range(steps_before_kill):
+        srv.step()
+    stem = srv.snapshot(str(tmp_path))
+    assert stem
+
+    fresh = _server(g)
+    fresh.restore(str(tmp_path))
+    fresh.run()
+
+    by_qid = {q.qid: q for q in srv.done if q.done}
+    for q in fresh.done:
+        by_qid[q.qid] = q
+    for o, s in zip(oracle, qs):
+        got = by_qid.get(s.qid)
+        assert got is not None and got.done, f"qid {s.qid} never served"
+        if isinstance(o.result, np.ndarray):
+            assert np.array_equal(np.asarray(got.result),
+                                  np.asarray(o.result)), (s.qid, o.kind)
+        else:
+            assert got.result == o.result, (s.qid, o.kind)
+        assert got.iters == o.iters
+
+
+def test_server_killed_mid_serve_restarts(g, tmp_path):
+    """An armed lane.crash kills step(); snapshot + restore re-serves
+    every pending query bit-equal to the uninterrupted oracle."""
+    oracle = _oracle_answers(g)
+    srv = _server(g)
+    qs = [srv.submit(k, r, target=t) for k, r, t in SPECS]
+    with faults.injected("lane.crash", times=1, after=1):
+        with pytest.raises(InjectedFault):
+            while srv.step():
+                pass
+    srv.snapshot(str(tmp_path))
+    fresh = _server(g)
+    fresh.restore(str(tmp_path))
+    fresh.run()
+    by_qid = {q.qid: q for q in srv.done if q.done}
+    for q in fresh.done:
+        by_qid[q.qid] = q
+    for o, s in zip(oracle, qs):
+        got = by_qid.get(s.qid)
+        assert got is not None and got.done
+        if isinstance(o.result, np.ndarray):
+            assert np.array_equal(np.asarray(got.result),
+                                  np.asarray(o.result))
+        else:
+            assert got.result == o.result
+
+
+def test_server_restore_rejects_wrong_config(g, tmp_path):
+    srv = _server(g)
+    srv.submit("bfs", 0)
+    srv.step()
+    srv.snapshot(str(tmp_path))
+    # wrong schedule
+    other = GraphServer(
+        g, schedule=ScheduleConfig(direction=DirectionPolicy(mode="push")),
+        admission=AdmissionPolicy(slots=4, slice_supersteps=2), landmarks=3)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.restore(str(tmp_path))
+    assert ei.value.field == "schedule"
+    # wrong admission slots
+    other = _server(g)
+    other.admission = AdmissionPolicy(slots=2, slice_supersteps=2)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.restore(str(tmp_path))
+    assert ei.value.field == "admission"
+    # wrong graph
+    src, dst = G.rmat_edges(500, 4000, seed=99)
+    gg = G.from_edge_list(src, dst, num_vertices=500)
+    other = _server(gg)
+    with pytest.raises(CheckpointMismatchError) as ei:
+        other.restore(str(tmp_path))
+    assert ei.value.field == "graph"
+    # non-empty server
+    busy = _server(g)
+    busy.submit("bfs", 1)
+    with pytest.raises(CheckpointError):
+        busy.restore(str(tmp_path))
+
+
+def test_server_snapshot_rejects_custom_program(g, tmp_path):
+    srv = _server(g)
+    custom = dataclasses.replace(dsl.sssp_program(), name="custom-sssp")
+    srv.submit("sssp", 0, program=custom)
+    with pytest.raises(CheckpointError):
+        srv.snapshot(str(tmp_path))
+
+
+def test_verify_smoke_equivalent(g, container_path, tmp_path):
+    """The scripts/verify.sh crash-recovery smoke, as a pinned test:
+    3-partition streamed BFS killed at a seeded superstep, resumed,
+    bit-equal with exactly one checkpoint load."""
+    oracle = _translate("bfs", _source("streamed", g, container_path),
+                        "auto")
+    ref, _ = oracle.run(roots=0)
+    ck = str(tmp_path / "ck")
+    crashed = _translate("bfs", _source("streamed", g, container_path),
+                         "auto")
+    with faults.injected("lane.crash", times=1, after=3):
+        with pytest.raises(InjectedFault):
+            crashed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1)
+    resumed = _translate("bfs", _source("streamed", g, container_path),
+                         "auto")
+    v, _ = resumed.run(roots=0, checkpoint_dir=ck, checkpoint_every=1,
+                       resume=True)
+    assert np.array_equal(np.asarray(v), np.asarray(ref))
+    assert resumed.last_run_stats["checkpoint_loads"] == 1
